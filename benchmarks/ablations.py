@@ -1,0 +1,66 @@
+"""Paper Table 4 — ablation studies (WikiText-103 stand-in on the byte
+corpus). Same grid as the paper:
+
+  learnability:  full | fixed sigma,omega,T | omega=0 | fixed T
+  node count:    S=4 | S=8 | S=16 | adaptive S_max=16 | no mask reg
+
+Reports final validation CE per variant; the expected orderings (paper §4.4)
+are checked by benchmarks.run and recorded in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import bench_cfg, emit, train_eval
+from repro.data import ByteCorpus
+from repro.models import layers as L
+from repro.models import transformer as T
+
+
+def _val_ce(cfg, corpus):
+    def ev(params):
+        ces = []
+        for s in range(3):
+            b = corpus.batch(2000 + s, 8, 128, split="val")
+            logits, _ = T.apply_lm(params, cfg, jnp.asarray(b["inputs"]))
+            ces.append(float(L.cross_entropy(logits, jnp.asarray(b["labels"]))))
+        return float(np.mean(ces))
+    return ev
+
+
+VARIANTS = {
+    "full_adaptive_S16": dict(stlt_nodes=16, stlt_adaptive=True),
+    "fixed_sigma_omega_T": dict(stlt_learnable_sigma=False,
+                                stlt_learnable_omega=False,
+                                stlt_learnable_T=False),
+    "omega_zero": dict(stlt_zero_omega=True),
+    "fixed_T": dict(stlt_learnable_T=False),
+    "S4": dict(stlt_nodes=4),
+    "S8": dict(stlt_nodes=8),
+    "S16": dict(stlt_nodes=16),
+    "no_mask_reg": dict(stlt_nodes=16, stlt_adaptive=True, stlt_mask_reg=0.0),
+}
+
+
+def main(steps: int = 250, fast: bool = False):
+    if fast:
+        steps = min(steps, 120)
+    corpus = ByteCorpus()
+    batch_fn = lambda s: corpus.batch(s, 8, 128)
+    results = {}
+    for name, kw in VARIANTS.items():
+        cfg = bench_cfg("stlt", **kw)
+        t0 = time.time()
+        _, ce, _ = train_eval(cfg, batch_fn, steps, eval_fn=_val_ce(cfg, corpus))
+        us = (time.time() - t0) / steps * 1e6
+        emit(f"ablation/{name}", us, f"val_ce={ce:.4f}")
+        results[name] = ce
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Shared benchmark helpers: timing, CSV emission, tiny-train loops."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.launch.train import make_step
+from repro.models import transformer as T
+
+ROWS: list[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    row = f"{name},{us_per_call:.1f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def time_fn(fn, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall time per call in microseconds (post-jit)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def bench_cfg(mixer="stlt", vocab=256, **kw) -> ModelConfig:
+    base = dict(
+        name=f"bench-{mixer}", family="lm", vocab=vocab, num_layers=2,
+        d_model=64, num_heads=4, num_kv_heads=4, d_ff=128, mixer=mixer,
+        stlt_nodes=16, stlt_chunk=32, act="gelu", norm="layernorm",
+        dtype="float32", scan_layers=False, remat=False,
+        blockwise_threshold=100_000,
+    )
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def train_eval(cfg: ModelConfig, batch_fn, steps: int, *, lr=3e-3, seed=0,
+               eval_fn=None, log=False):
+    """Train `steps`, return (final train CE EWMA, eval metric)."""
+    tcfg = TrainConfig(total_steps=steps, warmup_steps=max(5, steps // 10),
+                       learning_rate=lr, seed=seed)
+    opt, step_fn = make_step(cfg, tcfg)
+    params = T.init_lm(jax.random.key(seed), cfg)
+    st = opt.init(params)
+    ewma = None
+    for s in range(steps):
+        b = {k: jnp.asarray(v) for k, v in batch_fn(s).items()
+             if k in ("inputs", "labels", "mask")}
+        params, st, m = step_fn(params, st, b, s)
+        ce = float(m["ce"])
+        ewma = ce if ewma is None else 0.9 * ewma + 0.1 * ce
+        if log and s % 25 == 0:
+            print(f"    step {s}: ce={ce:.3f}")
+    ev = eval_fn(params) if eval_fn else None
+    return ewma, ev, params

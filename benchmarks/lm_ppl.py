@@ -1,0 +1,63 @@
+"""Paper Table 1 proxy — language-modeling perplexity.
+
+Byte-level LM on this repo's corpus (no external datasets in the container),
+same backbone for every variant, matching the table's comparisons:
+
+  attention          (the Transformer row)
+  stlt-fixed         (Laplace-STLT, fixed S)
+  stlt-adaptive      (Laplace-STLT, adaptive S_max, the paper's best)
+  stlt-relevance     (the figure's softmax(R)V readout)
+  stlt-frozen        (ablation anchor: non-learnable sigma/omega/T)
+
+Reports validation PPL per variant (CSV: name, us_per_step, val_ppl).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import bench_cfg, emit, train_eval
+from repro.data import ByteCorpus
+from repro.models import layers as L
+from repro.models import transformer as T
+
+
+def _val_ppl(cfg, corpus):
+    def ev(params):
+        ces = []
+        for s in range(4):
+            b = corpus.batch(1000 + s, 8, 128, split="val")
+            logits, _ = T.apply_lm(params, cfg, jnp.asarray(b["inputs"]))
+            ces.append(float(L.cross_entropy(logits, jnp.asarray(b["labels"]))))
+        return float(np.exp(np.mean(ces)))
+    return ev
+
+
+def main(steps: int = 300, fast: bool = False):
+    if fast:
+        steps = min(steps, 150)
+    corpus = ByteCorpus()
+    batch_fn = lambda s: corpus.batch(s, 8, 128)
+    variants = {
+        "lm_ppl/attention": bench_cfg("attention"),
+        "lm_ppl/stlt_fixed_S16": bench_cfg("stlt"),
+        "lm_ppl/stlt_adaptive_S32": bench_cfg("stlt", stlt_nodes=32, stlt_adaptive=True),
+        "lm_ppl/stlt_relevance": bench_cfg("stlt_relevance"),
+        "lm_ppl/stlt_frozen_params": bench_cfg(
+            "stlt", stlt_learnable_sigma=False, stlt_learnable_omega=False,
+            stlt_learnable_T=False),
+    }
+    results = {}
+    for name, cfg in variants.items():
+        import time
+        t0 = time.time()
+        _, ppl, _ = train_eval(cfg, batch_fn, steps, eval_fn=_val_ppl(cfg, corpus))
+        us = (time.time() - t0) / steps * 1e6
+        emit(name, us, f"val_ppl={ppl:.2f}")
+        results[name] = ppl
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,174 @@
+"""Roofline analysis (deliverable g): per (arch x shape) on the single-pod
+mesh, derive the three roofline terms from the dry-run's compiled artifacts:
+
+  compute   = HLO_FLOPs / (chips * peak_FLOPs)      [s]
+  memory    = HLO_bytes / (chips * HBM_bw)          [s]
+  collective= coll_bytes / (chips * link_bw)        [s]
+
+Sources: cost_corrected (scan-trip-count-corrected cost_analysis; see
+launch/dryrun.py) for flops/bytes; the partitioned-HLO collective parse for
+collective bytes. NB: corrected metrics from the SPMD module are per-device,
+so the per-chip division is already done — the chips factor cancels.
+
+Also reports MODEL_FLOPS = 6*N_active*tokens (2*N_active for inference) and
+the usefulness ratio MODEL_FLOPS / HLO_FLOPs, plus the dominant term and a
+bottleneck note per cell.
+
+Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import numpy as np
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+RESULTS = "results/dryrun"
+
+
+def active_params(cfg) -> float:
+    """Non-embedding, routing-active parameter count (for 6ND)."""
+    from repro.launch import steps as steps_lib
+    from repro.utils import tree_flatten_with_paths
+
+    shapes = steps_lib.abstract_params(cfg)
+    total = 0.0
+    for path, leaf in tree_flatten_with_paths(shapes):
+        n = float(np.prod(leaf.shape))
+        if path.endswith("embed/embed"):
+            continue  # lookup, not matmul
+        if "/moe/" in path and path.endswith(("/w1", "/w2", "/w3")):
+            n *= cfg.top_k / cfg.num_experts  # only routed experts compute
+        total += n
+    return total
+
+
+def model_flops(cfg, shape, kind: str) -> float:
+    n_active = active_params(cfg)
+    tokens = shape.global_batch * (shape.seq_len if kind in ("train", "prefill") else 1)
+    per_tok = 6.0 if kind == "train" else 2.0
+    if cfg.family == "encdec" and kind == "train":
+        tokens *= 2  # encoder + decoder streams
+    return per_tok * n_active * tokens
+
+
+def load_cells(mesh: str = "single"):
+    base = os.path.join(RESULTS, mesh)
+    cells = []
+    if not os.path.isdir(base):
+        return cells
+    for fn in sorted(os.listdir(base)):
+        with open(os.path.join(base, fn)) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def analyze_cell(rec: dict) -> dict | None:
+    if rec.get("skipped"):
+        return {"key": f"{rec['arch']}/{rec['shape']}", "skipped": rec["skipped"]}
+    if not rec.get("ok"):
+        return {"key": f"{rec['arch']}/{rec['shape']}", "error": rec.get("error")}
+    from repro import configs as configs_lib
+
+    cfg = configs_lib.get_config(rec["arch"], rec["variant"])
+    shape = configs_lib.SHAPES[rec["shape"]]
+    cost = rec.get("cost_corrected") or rec["cost_raw"]
+    flops = cost.get("flops", 0.0)              # per device
+    hbm_bytes = cost.get("bytes accessed", 0.0)  # per device
+    coll_bytes = cost.get("collective_bytes", 0.0)
+    devices = rec.get("devices", 256)
+    t_compute = flops / PEAK_FLOPS
+    t_memory = hbm_bytes / HBM_BW
+    t_coll = coll_bytes / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape, rec["kind"])
+    mf_per_dev = mf / devices
+    ratio = mf_per_dev / flops if flops else 0.0
+    bound = max(terms.values())
+    frac_of_roofline = (mf_per_dev / PEAK_FLOPS) / bound if bound > 0 else 0.0
+    return {
+        "key": f"{rec['arch']}/{rec['shape']}/{rec['variant']}",
+        "kind": rec["kind"],
+        "devices": devices,
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops_global": mf,
+        "hlo_flops_per_dev": flops,
+        "useful_ratio": ratio,
+        "roofline_fraction": frac_of_roofline,
+        "collectives": rec["cost_raw"].get("_collectives", {}),
+    }
+
+
+def bottleneck_note(row: dict) -> str:
+    d = row["dominant"]
+    if d == "compute":
+        if row["useful_ratio"] < 0.3:
+            return ("compute-bound but low useful ratio: remat/recompute and "
+                    "non-model flops dominate — reduce remat scope or fuse")
+        return "compute-bound: healthy; push batch or quantize to gain"
+    if d == "memory":
+        return ("HBM-bound: raise arithmetic intensity (larger per-chip tile, "
+                "fuse elementwise chains, bf16/8-bit weights for decode)")
+    return ("collective-bound: reshard to cut all-gathers (see sharding "
+            "rules), overlap collectives with compute, or compress")
+
+
+def main(fast: bool = False, mesh: str = "single", write_md: bool = True):
+    from benchmarks.common import emit
+
+    rows = []
+    for rec in load_cells(mesh):
+        row = analyze_cell(rec)
+        if row is None:
+            continue
+        rows.append(row)
+        if "skipped" in row or "error" in row:
+            emit(f"roofline/{row['key']}", 0, row.get("skipped") or row.get("error", ""))
+            continue
+        emit(
+            f"roofline/{row['key']}", row[f"t_{row['dominant']}_s"] * 1e6,
+            f"dom={row['dominant']};comp={row['t_compute_s']:.2e}s;"
+            f"mem={row['t_memory_s']:.2e}s;coll={row['t_collective_s']:.2e}s;"
+            f"useful={row['useful_ratio']:.2f};roofline_frac={row['roofline_fraction']:.2f}",
+        )
+    if write_md:
+        write_markdown(rows, mesh)
+    return rows
+
+
+def write_markdown(rows, mesh, path=None):
+    path = path or f"results/roofline_{mesh}.md"
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        f.write(f"# Roofline — {mesh}-pod mesh (v5e: 197 TF/s, 819 GB/s HBM, 50 GB/s link)\n\n")
+        f.write("| cell | kind | compute (s) | memory (s) | collective (s) | dominant "
+                "| MODEL_FLOPS | useful ratio | roofline frac | note |\n")
+        f.write("|---|---|---|---|---|---|---|---|---|---|\n")
+        for r in rows:
+            if "skipped" in r:
+                f.write(f"| {r['key']} | — | — | — | — | — | — | — | — | SKIP: {r['skipped'][:60]} |\n")
+                continue
+            if "error" in r:
+                f.write(f"| {r['key']} | — | — | — | — | — | — | — | — | ERROR |\n")
+                continue
+            f.write(
+                f"| {r['key']} | {r['kind']} | {r['t_compute_s']:.2e} | "
+                f"{r['t_memory_s']:.2e} | {r['t_collective_s']:.2e} | "
+                f"**{r['dominant']}** | {r['model_flops_global']:.2e} | "
+                f"{r['useful_ratio']:.2f} | {r['roofline_fraction']:.2f} | "
+                f"{bottleneck_note(r)} |\n"
+            )
+    print(f"[roofline] wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

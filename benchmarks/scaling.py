@@ -1,0 +1,80 @@
+"""Paper §4.6 — computational efficiency and scalability.
+
+1. Forward wall-time vs sequence length: STLT is O(N) (log-log slope ~1),
+   attention is O(N^2) (slope -> 2 at large N).
+2. Decode-state memory vs context: STLT state is O(S*d), constant in N;
+   the attention KV cache grows linearly.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import bench_cfg, emit, time_fn
+from repro.core import stlt as stlt_lib
+from repro.models import attention as A
+from repro.models import transformer as T
+from repro.utils import tree_bytes
+
+D_MODEL, HEADS = 128, 4
+
+
+def _stlt_forward(N):
+    cfg = stlt_lib.STLTConfig(d_model=D_MODEL, num_heads=HEADS, num_nodes=16,
+                              chunk=128)
+    params = stlt_lib.init_stlt(jax.random.key(0), cfg)
+    x = jax.random.normal(jax.random.key(1), (1, N, D_MODEL))
+    fn = jax.jit(lambda xx: stlt_lib.apply_stlt(params, cfg, xx)[0])
+    return time_fn(fn, x)
+
+
+def _attn_forward(N):
+    cfg = A.AttentionConfig(d_model=D_MODEL, num_heads=HEADS, num_kv_heads=HEADS,
+                            blockwise_threshold=1 << 62)
+    params = A.init_attention(jax.random.key(0), cfg)
+    x = jax.random.normal(jax.random.key(1), (1, N, D_MODEL))
+    fn = jax.jit(lambda xx: A.apply_attention(params, cfg, xx))
+    return time_fn(fn, x)
+
+
+def _slope(ns, ts):
+    ln, lt = np.log(ns), np.log(ts)
+    return float(np.polyfit(ln, lt, 1)[0])
+
+
+def main(fast: bool = False):
+    ns_stlt = [512, 1024, 2048, 4096] + ([] if fast else [8192, 16384])
+    ns_attn = [512, 1024, 2048] + ([] if fast else [4096])
+    t_stlt = []
+    for n in ns_stlt:
+        t = _stlt_forward(n)
+        t_stlt.append(t)
+        emit(f"scaling/stlt_fwd_N{n}", t, f"us_per_token={t/n:.2f}")
+    t_attn = []
+    for n in ns_attn:
+        t = _attn_forward(n)
+        t_attn.append(t)
+        emit(f"scaling/attn_fwd_N{n}", t, f"us_per_token={t/n:.2f}")
+    s_stlt = _slope(ns_stlt, t_stlt)
+    s_attn = _slope(ns_attn, t_attn)
+    emit("scaling/loglog_slope_stlt", 0, f"slope={s_stlt:.2f} (linear ~1)")
+    emit("scaling/loglog_slope_attn", 0, f"slope={s_attn:.2f} (quadratic -> 2)")
+
+    # decode-state memory vs context
+    for mixer in ("stlt", "attention"):
+        cfg = bench_cfg(mixer, d_model=D_MODEL, num_heads=HEADS, num_kv_heads=HEADS)
+        sizes = {}
+        for ctx in (2048, 65536, 524288):
+            st = jax.eval_shape(lambda: T.init_decode_state(cfg, 1, ctx))
+            sizes[ctx] = tree_bytes(st)
+        growth = sizes[524288] / sizes[2048]
+        emit(f"scaling/state_bytes_{mixer}", 0,
+             f"ctx2k={sizes[2048]};ctx512k={sizes[524288]};growth={growth:.1f}x")
+    return {"slope_stlt": s_stlt, "slope_attn": s_attn}
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+"""Serving example (deliverable b): batched requests through the continuous-
+batching engine with an STLT model (O(S*d) state per sequence).
+
+  PYTHONPATH=src python examples/serve_lm.py
+"""
+from repro.launch import serve as serve_lib
+
+if __name__ == "__main__":
+    serve_lib.main(["--requests", "8", "--slots", "4", "--max-new", "12"])

@@ -1,0 +1,9 @@
+"""repro: the STLT (Adaptive Two-Sided Laplace Transform) framework.
+
+Public API surface:
+  repro.core        — the paper's STLT (layers, scans, adaptive allocation)
+  repro.configs     — assigned architectures, shapes, variants
+  repro.models      — model zoo
+  repro.launch      — mesh / dryrun / train / serve entry points
+"""
+__version__ = "1.0.0"

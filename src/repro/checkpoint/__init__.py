@@ -1,0 +1,4 @@
+from repro.checkpoint.checkpointer import load_checkpoint, save_checkpoint
+from repro.checkpoint.manager import CheckpointManager
+
+__all__ = ["CheckpointManager", "load_checkpoint", "save_checkpoint"]

@@ -1,0 +1,95 @@
+"""Checkpoint manager: rotation, async (background-thread) saves, and
+fault-tolerant resume — the training loop's crash-recovery contract.
+
+* ``save(step, tree)`` — enqueue an async save (host-blocking copy happens on
+  the caller thread via device_get inside save_checkpoint, then the file I/O
+  runs in the worker; ``wait()`` drains the queue).
+* keeps the newest ``max_to_keep`` checkpoints (+ every ``keep_period``-th).
+* ``restore_or_init(init_fn)`` — the resume path: load latest if present,
+  else initialize fresh. A crashed/preempted run re-enters exactly here.
+"""
+from __future__ import annotations
+
+import os
+import queue
+import shutil
+import threading
+from typing import Any, Callable, Optional
+
+from repro.checkpoint.checkpointer import latest_step, load_checkpoint, save_checkpoint
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, max_to_keep: int = 3, keep_period: int = 0,
+                 async_saves: bool = True):
+        self.directory = directory
+        self.max_to_keep = max_to_keep
+        self.keep_period = keep_period
+        self.async_saves = async_saves
+        self._q: "queue.Queue" = queue.Queue()
+        self._worker: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # -- save ---------------------------------------------------------------
+    def save(self, step: int, tree: Any):
+        if self._error:
+            raise RuntimeError("previous async save failed") from self._error
+        if not self.async_saves:
+            save_checkpoint(self.directory, step, tree)
+            self._gc()
+            return
+        if self._worker is None or not self._worker.is_alive():
+            self._worker = threading.Thread(target=self._drain, daemon=True)
+            self._worker.start()
+        # device_get on caller thread keeps jax out of the worker
+        import jax
+        host_tree = jax.tree_util.tree_map(lambda x: jax.device_get(x), tree)
+        self._q.put((step, host_tree))
+
+    def _drain(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            step, tree = item
+            try:
+                save_checkpoint(self.directory, step, tree)
+                self._gc()
+            except BaseException as e:  # surfaced on next save()/wait()
+                self._error = e
+            finally:
+                self._q.task_done()
+
+    def wait(self):
+        if self._worker is not None and self._worker.is_alive():
+            self._q.join()
+        if self._error:
+            raise RuntimeError("async save failed") from self._error
+
+    # -- restore -------------------------------------------------------------
+    def restore_or_init(self, init_fn: Callable[[], Any]):
+        """Returns (tree, step). step = -1 for a fresh start."""
+        tree = init_fn()
+        step = latest_step(self.directory)
+        if step is None:
+            return tree, -1
+        restored, step = load_checkpoint(self.directory, tree, step)
+        return restored, step
+
+    def latest_step(self) -> Optional[int]:
+        return latest_step(self.directory)
+
+    # -- rotation -------------------------------------------------------------
+    def _gc(self):
+        steps = sorted(
+            int(d[len("step_"):])
+            for d in os.listdir(self.directory)
+            if d.startswith("step_") and not d.endswith(".tmp")
+        )
+        keep = set(steps[-self.max_to_keep:]) if self.max_to_keep > 0 else set(steps)
+        if self.keep_period:
+            keep |= {s for s in steps if s % self.keep_period == 0}
+        for s in steps:
+            if s not in keep:
+                shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"), ignore_errors=True)

@@ -1,0 +1,19 @@
+"""SmolLM-360M [hf:HuggingFaceTB/SmolLM family]. 32L d=960 15H (GQA kv=5)
+d_ff=2560 vocab=49152; llama-arch small."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="smollm-360m",
+    family="lm",
+    vocab=49152,
+    num_layers=32,
+    d_model=960,
+    num_heads=15,
+    num_kv_heads=5,
+    d_ff=2560,
+    act="swiglu",
+    norm="rmsnorm",
+    tie_embeddings=True,
+    dp_only=True,
+    dtype="bfloat16",
+)

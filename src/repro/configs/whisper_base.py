@@ -1,0 +1,27 @@
+"""Whisper-base [arXiv:2212.04356]. 6L enc + 6L dec, d=512 8H d_ff=2048
+vocab=51865; enc-dec with conv frontend STUB (input_specs feeds precomputed
+frame embeddings). Decode shapes decode *text* tokens with up to 32k of
+decoder KV against a fixed 1500-frame encoder context; long_500k is skipped
+(bounded audio context + full-attention enc-dec) — see DESIGN.md."""
+from repro.configs.base import ModelConfig
+
+ENCODER_FRAMES = 1500  # 30 s of audio at 50 Hz after the conv stub
+
+CONFIG = ModelConfig(
+    name="whisper-base",
+    family="encdec",
+    vocab=51865,
+    num_layers=6,
+    num_decoder_layers=6,
+    d_model=512,
+    num_heads=8,
+    num_kv_heads=8,
+    d_ff=2048,
+    act="gelu",
+    norm="layernorm",
+    rope_fraction=0.0,
+    input_mode="embeddings",   # conv frontend stub: frames arrive embedded
+    tie_embeddings=False,
+    dp_only=True,
+    dtype="bfloat16",
+)

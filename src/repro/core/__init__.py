@@ -1,0 +1,43 @@
+"""The paper's primary contribution: the learnable two-sided short-time
+Laplace transform (STLT) — nodes, scan engines, adaptive node allocation,
+readouts, streaming decode, and cross-STLT."""
+from repro.core.adaptive import AdaptiveConfig, anneal_tau, node_masks, regularization
+from repro.core.nodes import half_lives, init_nodes, node_poles
+from repro.core.scan import (
+    scan_associative,
+    scan_sequential,
+    stlt_chunked,
+    stlt_decode_step,
+    stlt_transform,
+)
+from repro.core.stlt import (
+    STLTConfig,
+    apply_cross_stlt,
+    apply_stlt,
+    apply_stlt_step,
+    init_cross_stlt,
+    init_stlt,
+    init_stlt_state,
+)
+
+__all__ = [
+    "AdaptiveConfig",
+    "STLTConfig",
+    "anneal_tau",
+    "apply_cross_stlt",
+    "apply_stlt",
+    "apply_stlt_step",
+    "half_lives",
+    "init_cross_stlt",
+    "init_nodes",
+    "init_stlt",
+    "init_stlt_state",
+    "node_masks",
+    "node_poles",
+    "regularization",
+    "scan_associative",
+    "scan_sequential",
+    "stlt_chunked",
+    "stlt_decode_step",
+    "stlt_transform",
+]

@@ -1,0 +1,124 @@
+"""Adaptive Laplace-node allocation (paper §3.6).
+
+Importance scores from a pooled summary of the layer input,
+
+    alpha = sigmoid(W_alpha pool(X) + b_alpha)          in [0,1]^{S_max}
+
+relaxed to continuous masks with the Concrete / Gumbel-sigmoid trick,
+
+    m_k = sigmoid((log alpha_k - log(1-alpha_k) + g_k) / tau),  g_k ~ Gumbel-diff
+
+(the difference of two Gumbels is Logistic, which is the standard binary-
+Concrete sampler).  ``S_eff = sum_k m_k`` is the expected active node count.
+At eval the noise is dropped (g = 0) and masks may be hard-thresholded.
+
+The (Reg) loss combines omega-sparsity, sigma-smoothness (adjacent sorted
+nodes), and the mask penalty driving unused nodes to zero.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import trunc_normal
+
+
+class AdaptiveConfig(NamedTuple):
+    enabled: bool = False
+    tau: float = 1.0            # Gumbel-sigmoid temperature (annealed by trainer)
+    lambda_omega: float = 1e-4  # |omega| sparsity weight
+    lambda_sigma: float = 1e-4  # sigma smoothness weight
+    lambda_mask: float = 1e-3   # node-count penalty
+    hard_eval: bool = False     # hard-threshold masks at inference
+    threshold: float = 0.5
+
+
+def init_adaptive(key: jax.Array, d_model: int, num_heads: int, num_nodes: int, dtype=jnp.float32):
+    """W_alpha: pooled features -> per-(head, node) logits."""
+    k_w, _ = jax.random.split(key)
+    return {
+        "w_alpha": trunc_normal(k_w, (d_model, num_heads, num_nodes), stddev=0.02, dtype=dtype),
+        "b_alpha": 2.0 * jnp.ones((num_heads, num_nodes), dtype),  # start ~all-on
+    }
+
+
+def node_masks(
+    params: dict,
+    x: jax.Array,
+    cfg: AdaptiveConfig,
+    *,
+    rng: Optional[jax.Array] = None,
+    deterministic: bool = True,
+    pad_mask: Optional[jax.Array] = None,
+):
+    """Compute masks m [B, H, S] and S_eff [B].
+
+    Args:
+      x: layer input [B, N, d].
+      pad_mask: optional [B, N] 1/0 validity for mean-pooling.
+    """
+    if pad_mask is not None:
+        denom = jnp.maximum(pad_mask.sum(-1, keepdims=True), 1.0)
+        pooled = (x * pad_mask[..., None]).sum(-2) / denom
+    else:
+        pooled = x.mean(axis=-2)  # [B, d]
+    logits = jnp.einsum("bd,dhk->bhk", pooled, params["w_alpha"]) + params["b_alpha"]
+    alpha = jax.nn.sigmoid(logits)
+    log_ratio = logits  # log(alpha) - log(1-alpha) == logits (sigmoid inverse)
+    if deterministic or rng is None:
+        noise = 0.0
+    else:
+        # Logistic noise == difference of two Gumbel(0,1)s.
+        u = jax.random.uniform(rng, logits.shape, minval=1e-6, maxval=1.0 - 1e-6)
+        noise = jnp.log(u) - jnp.log1p(-u)
+    m = jax.nn.sigmoid((log_ratio + noise) / cfg.tau)
+    if deterministic and cfg.hard_eval:
+        m = (alpha > cfg.threshold).astype(x.dtype)
+    s_eff = m.sum(axis=(-1, -2)) / m.shape[-2]  # per-batch mean over heads
+    return m, s_eff
+
+
+def regularization(
+    sigma: jax.Array,      # [H, S] positive decay rates
+    omega: jax.Array,      # [H, S]
+    masks: Optional[jax.Array],  # [B, H, S] or None (non-adaptive: all-ones)
+    cfg: AdaptiveConfig,
+) -> jax.Array:
+    """The paper's (Reg) loss.  Returns a scalar.
+
+    R = lambda_omega * sum |omega_k| m_k
+      + lambda_sigma * sum (sigma_k - sigma_{k-1})^2 m_k m_{k-1}   (sorted sigma)
+      + lambda_mask  * sum m_k
+    """
+    if masks is None:
+        m = jnp.ones_like(sigma)[None]  # [1, H, S]
+    else:
+        m = masks
+    m_mean = m.mean(axis=0)  # [H, S] expected mask per node
+    r_omega = cfg.lambda_omega * jnp.sum(jnp.abs(omega) * m_mean)
+    # Keep sigma sorted per head for the smoothness term (paper assumes sorted
+    # nodes for interpretability). S <= 64, so ranks come from O(S^2) pairwise
+    # comparisons and the permutation is a one-hot matmul: gradients flow
+    # through the *values*, and no sort/gather primitive is traced (their
+    # JVP rules are broken in this jaxlib build).
+    sg = jax.lax.stop_gradient(sigma)
+    lt = (sg[..., None, :] < sg[..., :, None]).astype(jnp.int32)       # sigma_j < sigma_i
+    tie = (sg[..., None, :] == sg[..., :, None]) & (
+        jnp.arange(sg.shape[-1])[None, :] < jnp.arange(sg.shape[-1])[:, None]
+    )
+    rank = (lt + tie.astype(jnp.int32)).sum(-1)                        # [H, S]
+    perm = jax.nn.one_hot(rank, sigma.shape[-1], dtype=sigma.dtype)    # P[h, i, r]
+    sig_sorted = jnp.einsum("hir,hi->hr", perm, sigma)
+    m_sorted = jnp.einsum("hir,hi->hr", perm, m_mean)
+    dsig = jnp.diff(sig_sorted, axis=-1)
+    r_sigma = cfg.lambda_sigma * jnp.sum(dsig**2 * m_sorted[..., 1:] * m_sorted[..., :-1])
+    r_mask = cfg.lambda_mask * jnp.sum(m_mean)
+    return r_omega + r_sigma + r_mask
+
+
+def anneal_tau(step: int | jax.Array, total_steps: int, tau_start: float = 1.0, tau_end: float = 0.1, frac: float = 0.4):
+    """Paper §4: anneal temperature from 1.0 to 0.1 over the first 40% of training."""
+    t = jnp.clip(step / jnp.maximum(1, int(total_steps * frac)), 0.0, 1.0)
+    return tau_start + (tau_end - tau_start) * t

@@ -1,0 +1,120 @@
+"""Learnable Laplace nodes s_k = sigma_k + j*omega_k and window bandwidth T.
+
+Parameterization (paper §3.7 stability considerations):
+
+* ``sigma_k = eps_sigma + softplus(sigma_hat_k)`` — strictly positive decay,
+  half-life ``t_1/2 = ln2 / sigma_k``.
+* ``omega_k`` — unconstrained frequency (the (Reg) loss keeps it sparse).
+* ``T = T_min + softplus(T_hat)`` — window bandwidth. For the exponential
+  window ``w(t;T) = e^{-|t|/T}`` this folds into the pole:
+  ``sigma_eff = sigma_k + 1/T``.
+
+Initialization follows the paper: ``sigma_k`` log-spaced over
+``[sigma_min, sigma_max]``, ``omega_k`` uniform over ``[0, omega_max]``, ``T``
+a fraction of the typical sequence length (default ``32 * Delta``).
+
+The pole handed to the scan engines is
+``lambda_k = exp(-(sigma_eff_k) * Delta - i * omega_k * Delta)``, carried as
+``(log_mag, theta) = (-sigma_eff * Delta, -omega * Delta)`` so magnitudes are
+exactly ``exp(log_mag) <= 1`` (no overflow for any parameter value).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.utils import inv_softplus
+
+EPS_SIGMA = 1e-4
+T_MIN = 1.0
+
+
+def init_nodes(
+    key: jax.Array,
+    num_heads: int,
+    num_nodes: int,
+    *,
+    sigma_min: float = 1e-3,
+    sigma_max: float = 1.0,
+    omega_max: float = math.pi / 4,
+    init_T: float = 32.0,
+    dtype=jnp.float32,
+) -> dict:
+    """Per-(head, node) Laplace parameters + per-head window bandwidth.
+
+    Learnability switches (for the paper's Table-4 ablations) live in the
+    layer *config*, not the param pytree — frozen parameters are routed
+    through ``jax.lax.stop_gradient`` in :func:`node_poles`.
+    """
+    k_sig, k_om, k_u = jax.random.split(key, 3)
+    H, S = num_heads, num_nodes
+    # sigma log-spaced in [sigma_min, sigma_max], identical across heads at
+    # init (heads decorrelate through training).
+    sig = np.geomspace(sigma_min, sigma_max, S)
+    sigma_hat = np.array([inv_softplus(max(s - EPS_SIGMA, 1e-6)) for s in sig])
+    sigma_hat = jnp.broadcast_to(jnp.asarray(sigma_hat, dtype), (H, S))
+    # Small per-head jitter so heads are not exactly degenerate.
+    sigma_hat = sigma_hat + 0.01 * jax.random.normal(k_sig, (H, S), dtype)
+    omega = jax.random.uniform(k_om, (H, S), dtype, 0.0, omega_max)
+    T_hat = jnp.full((H,), inv_softplus(max(init_T - T_MIN, 1e-6)), dtype)
+    # Complex node mixers u_k (paper's transformed values V'_k), unit-ish init
+    # scaled by 1/S so the node sum starts O(1).
+    u = jax.random.normal(k_u, (2, H, S), dtype) / S
+    return {
+        "sigma_hat": sigma_hat,
+        "omega": omega,
+        "T_hat": T_hat,
+        "u_re": u[0],
+        "u_im": u[1],
+    }
+
+
+def node_poles(
+    params: dict,
+    delta: float = 1.0,
+    fold_window: bool = True,
+    *,
+    learnable_sigma: bool = True,
+    learnable_omega: bool = True,
+    learnable_T: bool = True,
+):
+    """(log_mag, theta, sigma, T): the stable pole parameterization.
+
+    Returns per-head arrays: log_mag/theta [H, S], sigma [H, S], T [H].
+    """
+    sigma_hat = params["sigma_hat"]
+    omega = params["omega"]
+    T_hat = params["T_hat"]
+    if not learnable_sigma:
+        sigma_hat = jax.lax.stop_gradient(sigma_hat)
+    if not learnable_omega:
+        omega = jax.lax.stop_gradient(omega)
+    if not learnable_T:
+        T_hat = jax.lax.stop_gradient(T_hat)
+    sigma = EPS_SIGMA + jax.nn.softplus(sigma_hat)  # [H, S]
+    T = T_MIN + jax.nn.softplus(T_hat)  # [H]
+    sigma_eff = sigma + (1.0 / T)[:, None] if fold_window else sigma
+    log_mag = -sigma_eff * delta
+    theta = -omega * delta
+    return log_mag, theta, sigma, T
+
+
+def half_lives(params: dict) -> jax.Array:
+    """Interpretability: learned token-relevance half-lives ln2/sigma_k."""
+    _, _, sigma, _ = node_poles(params, fold_window=False)
+    return math.log(2.0) / sigma
+
+
+def hann_window(t: jax.Array, T: jax.Array) -> jax.Array:
+    """Symmetric Hann taper w(t;T) = 0.5*(1+cos(pi t / T)) for |t| <= T."""
+    inside = (jnp.abs(t) <= T).astype(t.dtype)
+    return 0.5 * (1.0 + jnp.cos(jnp.pi * t / jnp.maximum(T, 1e-6))) * inside
+
+
+def exponential_window(t: jax.Array, T: jax.Array) -> jax.Array:
+    """w(t;T) = exp(-|t|/T) — the streaming-exact window."""
+    return jnp.exp(-jnp.abs(t) / jnp.maximum(T, 1e-6))

@@ -1,0 +1,362 @@
+"""Linear-recurrence engines for the STLT (and its relatives).
+
+Everything in this framework that looks like
+
+    h_n = a_n * h_{n-1} + b_n          (complex or real, diagonal)
+
+flows through this module: the paper's streaming STLT recurrence (static
+complex ``a_n = lambda_k = exp(-(sigma_k + 1/T) - i*omega_k)``), the RG-LRU of
+recurrentgemma (input-dependent real ``a_n``), and the chunked formulation
+used by the Pallas TPU kernel.
+
+Three interchangeable engines:
+
+* ``scan_sequential`` — ``lax.scan`` oracle. O(N) depth; used for tests and
+  decode steps.
+* ``scan_associative`` — ``lax.associative_scan`` over the monoid
+  ``(a, b) o (a', b') = (a*a', a'*b + b')``. O(log N) depth; the portable
+  training path for input-dependent recurrences.
+* ``stlt_chunked`` — the TPU-native algorithm (mirrored by
+  ``repro.kernels.stlt_scan``): split time into chunks of C, compute the
+  in-chunk transform as a lower-triangular Toeplitz matmul
+  ``Tri_k @ X_chunk`` (MXU-friendly) and propagate an O(S*d) carry with
+  ``lambda^C``.  The node readout ``Z = Re(sum_k u_k * L_k)`` is fused so the
+  O(N*S*d) tensor ``L`` is never materialized.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# When True, chunk-loops unroll so XLA cost_analysis counts every iteration
+# (a lax.scan body is otherwise counted ONCE — see launch/dryrun.py). Set by
+# the dry-run's depth probes; never in production paths.
+MEASURE_UNROLL = False
+
+
+def _scan_unroll(length: int):
+    return length if MEASURE_UNROLL else 1
+
+
+# ---------------------------------------------------------------------------
+# Generic first-order linear recurrences
+# ---------------------------------------------------------------------------
+
+
+def scan_sequential(a, b, h0=None, axis: int = -2, reverse: bool = False):
+    """h_n = a_n * h_{n-1} + b_n via lax.scan. ``a`` broadcasts against ``b``.
+
+    Args:
+      a: decay, shape broadcastable to b along all axes (time axis included
+        or size-1 for a static decay).
+      b: inputs, time on ``axis``.
+      h0: initial state (defaults to zeros like one time-slice of b).
+      reverse: scan anti-causally (for the bilateral/backward pass).
+    Returns:
+      h with the same shape as b.
+    """
+    axis = axis % b.ndim
+    b_t = jnp.moveaxis(b, axis, 0)
+    a_full = jnp.broadcast_to(a, b.shape) if a.ndim < b.ndim or a.shape != b.shape else a
+    a_t = jnp.moveaxis(a_full, axis, 0)
+    if reverse:
+        b_t, a_t = b_t[::-1], a_t[::-1]
+    if h0 is None:
+        h0 = jnp.zeros(b_t.shape[1:], b_t.dtype)
+
+    def step(h, ab):
+        a_n, b_n = ab
+        h = a_n * h + b_n
+        return h, h
+
+    _, hs = jax.lax.scan(step, h0, (a_t, b_t))
+    if reverse:
+        hs = hs[::-1]
+    return jnp.moveaxis(hs, 0, axis)
+
+
+def scan_associative(a, b, axis: int = -2, reverse: bool = False):
+    """Same recurrence via ``lax.associative_scan`` (O(log N) depth)."""
+    axis = axis % b.ndim
+    a_full = jnp.broadcast_to(a, b.shape)
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    a_out, b_out = jax.lax.associative_scan(
+        combine, (a_full, b), axis=axis, reverse=reverse
+    )
+    del a_out
+    return b_out
+
+
+# ---------------------------------------------------------------------------
+# STLT-specific fused chunked scan (the TPU algorithm, XLA edition)
+# ---------------------------------------------------------------------------
+
+
+def _chunk_powers(log_mag: jax.Array, theta: jax.Array, length: int):
+    """lambda^p for p in [0, length], as (real, imag) of shape [length+1, S].
+
+    ``lambda_k = exp(log_mag_k + i*theta_k)`` with ``log_mag_k = -sigma_eff_k``
+    (always <= 0 after the stability transform, so powers never overflow).
+    """
+    p = jnp.arange(length + 1, dtype=log_mag.dtype)[:, None]
+    mag = jnp.exp(p * log_mag[None, :])
+    ang = p * theta[None, :]
+    return mag * jnp.cos(ang), mag * jnp.sin(ang)
+
+
+def stlt_chunked(
+    x: jax.Array,
+    log_mag: jax.Array,
+    theta: jax.Array,
+    u_re: jax.Array,
+    u_im: jax.Array,
+    chunk: int = 128,
+    reverse: bool = False,
+    return_state: bool = False,
+    h0_re: Optional[jax.Array] = None,
+    h0_im: Optional[jax.Array] = None,
+):
+    """Fused factorized STLT: ``Z = Re(sum_k u_k * scan(lambda_k, x))``.
+
+    Args:
+      x: real inputs [..., N, d].
+      log_mag: [S] log-magnitudes of the poles (<= 0).
+      theta: [S] pole angles (-omega_k * Delta).
+      u_re/u_im: [S] complex node mixers (the paper's V'_k), adaptive node
+        masks already folded in.
+      chunk: in-chunk Toeplitz size C (128 = MXU tile).
+      reverse: anti-causal direction (bilateral backward pass).
+      return_state: additionally return the final carry h_N of shape
+        [..., S, d] (real, imag) — used by the serving cache.
+      h0_re/h0_im: optional initial carry [..., S, d].
+
+    Returns:
+      z real [..., N, d]  (and optionally (h_re, h_im)).
+    """
+    orig_shape = x.shape
+    in_dtype = x.dtype
+    N, d = orig_shape[-2], orig_shape[-1]
+    S = log_mag.shape[0]
+    batch = 1
+    for s in orig_shape[:-2]:
+        batch *= s
+    # Scan internals in float32 for stability (bf16 inputs are upcast here and
+    # the output is cast back).
+    x = x.reshape(batch, N, d).astype(jnp.float32)
+    # Node mixers may be per-call-shared [S] or trailing-batch [..., S]
+    # (e.g. per-head mixers with heads as the innermost batch dim).
+    def _expand_u(u):
+        u = u.astype(jnp.float32).reshape(-1, S)
+        reps = batch // u.shape[0]
+        return jnp.tile(u, (reps, 1)) if reps > 1 else u
+
+    u_re = _expand_u(u_re)
+    u_im = _expand_u(u_im)
+    log_mag = log_mag.astype(jnp.float32)
+    theta = theta.astype(jnp.float32)
+    if reverse:
+        x = x[:, ::-1, :]
+
+    pad = (-N) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    n_chunks = x.shape[1] // chunk
+    xc = x.reshape(batch, n_chunks, chunk, d)
+
+    # Powers lambda^p, p in [0, C]; all precomputed once (tiny: [C+1, S]).
+    pw_re, pw_im = _chunk_powers(log_mag, theta, chunk)  # [C+1, S]
+    # In-chunk lower-triangular Toeplitz operators Tri_k[i, j] = lambda_k^(i-j).
+    idx = jnp.arange(chunk)
+    diff = idx[:, None] - idx[None, :]  # [C, C]
+    tri_mask = (diff >= 0).astype(x.dtype)
+    diffc = jnp.clip(diff, 0, chunk)
+    tri_re = pw_re[diffc] * tri_mask[..., None]  # [C, C, S]
+    tri_im = pw_im[diffc] * tri_mask[..., None]
+    # Carry injection: lambda^(i+1) for i in [0, C).
+    inj_re, inj_im = pw_re[1:], pw_im[1:]  # [C, S]
+    # Chunk-to-chunk decay: lambda^C.
+    dec_re, dec_im = pw_re[chunk], pw_im[chunk]  # [S]
+
+    if h0_re is None:
+        h0_re = jnp.zeros((batch, S, d), x.dtype)
+        h0_im = jnp.zeros((batch, S, d), x.dtype)
+    else:
+        h0_re = h0_re.reshape(batch, S, d).astype(x.dtype)
+        h0_im = h0_im.reshape(batch, S, d).astype(x.dtype)
+
+    # Index of the last *valid* (unpadded) position within its chunk — the
+    # true final state must be snapshotted there, not after the zero padding
+    # (the carry keeps decaying through padded steps).
+    last_valid = (N - 1) % chunk
+
+    def step(carry, x_chunk):
+        h_re, h_im = carry  # [B, S, d]
+        # L[i,k,:] = sum_{j<=i} lambda^(i-j) x[j,:]  (+ carry injection)
+        l_re = jnp.einsum("ijk,bjd->bikd", tri_re, x_chunk)
+        l_im = jnp.einsum("ijk,bjd->bikd", tri_im, x_chunk)
+        l_re = l_re + inj_re[None, :, :, None] * h_re[:, None] - inj_im[None, :, :, None] * h_im[:, None]
+        l_im = l_im + inj_re[None, :, :, None] * h_im[:, None] + inj_im[None, :, :, None] * h_re[:, None]
+        # Fused node readout: z = Re(sum_k u_k L_k) = sum_k (u_re Lre - u_im Lim)
+        z = jnp.einsum("bikd,bk->bid", l_re, u_re) - jnp.einsum("bikd,bk->bid", l_im, u_im)
+        # Carry update: h' = lambda^C h + L[last] ... but L[last] already holds
+        # the carry contribution, so h' = L[C-1].
+        h_re_new = l_re[:, -1]
+        h_im_new = l_im[:, -1]
+        snap = (l_re[:, last_valid], l_im[:, last_valid]) if return_state else None
+        return (h_re_new, h_im_new), (z, snap)
+
+    (_, _), (zs, snaps) = jax.lax.scan(
+        step, (h0_re, h0_im), jnp.moveaxis(xc, 1, 0), unroll=_scan_unroll(n_chunks)
+    )
+    if return_state:
+        # position N-1 lives in the final chunk (pad < chunk)
+        hN_re, hN_im = snaps[0][-1], snaps[1][-1]
+    z = jnp.moveaxis(zs, 0, 1).reshape(batch, n_chunks * chunk, d)
+    if pad:
+        z = z[:, :N]
+    if reverse:
+        z = z[:, ::-1, :]
+    z = z.reshape(orig_shape).astype(in_dtype)
+    if return_state:
+        state_shape = orig_shape[:-2] + (S, d)
+        return z, (hN_re.reshape(state_shape), hN_im.reshape(state_shape))
+    return z
+
+
+def stlt_chunked_fused(
+    x: jax.Array,
+    log_mag: jax.Array,
+    theta: jax.Array,
+    u_re: jax.Array,
+    u_im: jax.Array,
+    chunk: int = 128,
+    reverse: bool = False,
+):
+    """Fused-operator chunked STLT (§Perf): the node sum is folded into the
+    in-chunk operator BEFORE the matmul, so the per-chunk work is
+
+        z = M @ X + A @ h_re + B @ h_im        M [C, C] REAL Toeplitz
+        h' = (Pre + i*Pim) @ X + dec * h       carries [S, d]
+
+    — O(C*d + S*d) per token instead of the per-node engine's O(C*S*d)
+    (S-fold fewer FLOPs; this is the same algebra the Pallas kernel uses).
+    ``u`` must be per-call ([S]); adaptive masks fold into u upstream.
+    Training-forward path; use ``stlt_chunked`` when the streaming state is
+    needed (prefill).
+    """
+    orig_shape = x.shape
+    in_dtype = x.dtype
+    N, d = orig_shape[-2], orig_shape[-1]
+    S = log_mag.shape[0]
+    C = chunk
+    batch = 1
+    for s in orig_shape[:-2]:
+        batch *= s
+    x = x.reshape(batch, N, d).astype(jnp.float32)
+    if reverse:
+        x = x[:, ::-1, :]
+    pad = (-N) % C
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    nc = x.shape[1] // C
+    xc = x.reshape(batch, nc, C, d)
+
+    lm = log_mag.astype(jnp.float32)
+    th = theta.astype(jnp.float32)
+    ur = u_re.astype(jnp.float32).reshape(S)
+    ui = u_im.astype(jnp.float32).reshape(S)
+    p = jnp.arange(C + 1, dtype=jnp.float32)
+    mag = jnp.exp(p[:, None] * lm[None, :])          # [C+1, S]
+    ang = p[:, None] * th[None, :]
+    pw_re, pw_im = mag * jnp.cos(ang), mag * jnp.sin(ang)
+    # combined causal filter g[t] = Re(sum_k u_k lambda^t)
+    g = pw_re[:C] @ ur - pw_im[:C] @ ui              # [C]
+    idx = jnp.arange(C)
+    diff = idx[:, None] - idx[None, :]
+    M = jnp.where(diff >= 0, g[jnp.clip(diff, 0, C - 1)], 0.0)   # [C, C]
+    a_re, a_im = pw_re[1:], pw_im[1:]                # lambda^(i+1)
+    A = ur[None, :] * a_re - ui[None, :] * a_im      # [C, S]
+    Bc = -(ur[None, :] * a_im + ui[None, :] * a_re)
+    rev = C - 1 - idx
+    Pre, Pim = pw_re[rev].T, pw_im[rev].T            # [S, C]
+    dec_re, dec_im = pw_re[C], pw_im[C]              # [S]
+
+    def step(carry, x_chunk):
+        h_re, h_im = carry                            # [B, S, d]
+        z = jnp.einsum("ij,bjd->bid", M, x_chunk)
+        z += jnp.einsum("is,bsd->bid", A, h_re)
+        z += jnp.einsum("is,bsd->bid", Bc, h_im)
+        px = jnp.einsum("sj,bjd->bsd", Pre, x_chunk)
+        qx = jnp.einsum("sj,bjd->bsd", Pim, x_chunk)
+        h_re_new = px + dec_re[None, :, None] * h_re - dec_im[None, :, None] * h_im
+        h_im_new = qx + dec_re[None, :, None] * h_im + dec_im[None, :, None] * h_re
+        return (h_re_new, h_im_new), z
+
+    h0 = jnp.zeros((batch, S, d), jnp.float32)
+    _, zs = jax.lax.scan(step, (h0, h0), jnp.moveaxis(xc, 1, 0),
+                         unroll=_scan_unroll(nc))
+    z = jnp.moveaxis(zs, 0, 1).reshape(batch, nc * C, d)
+    if pad:
+        z = z[:, :N]
+    if reverse:
+        z = z[:, ::-1, :]
+    return z.reshape(orig_shape).astype(in_dtype)
+
+
+def stlt_transform(
+    x: jax.Array,
+    log_mag: jax.Array,
+    theta: jax.Array,
+    reverse: bool = False,
+    engine: str = "associative",
+):
+    """Materialized STLT coefficients L[..., N, S, d] (complex as re/im pair).
+
+    Used by the relevance (softmax) readout, cross-STLT, and interpretability
+    dumps. O(N*S*d) memory — the factorized path never calls this.
+    """
+    S = log_mag.shape[0]
+    lam = jnp.exp(log_mag + 1j * theta).astype(jnp.complex64)  # [S]
+    xb = x[..., None, :].astype(jnp.complex64)  # [..., N, 1, d]
+    xb = jnp.broadcast_to(xb, x.shape[:-1] + (S, x.shape[-1]))
+    a = lam[:, None]  # [S, 1] broadcast over d, time broadcast handled below
+    a_full = jnp.broadcast_to(a, xb.shape[-2:])
+    if engine == "sequential":
+        L = scan_sequential(a_full, xb, axis=-3, reverse=reverse)
+    else:
+        L = scan_associative(a_full, xb, axis=-3, reverse=reverse)
+    return L  # complex64 [..., N, S, d]
+
+
+def stlt_decode_step(
+    x_t: jax.Array,
+    h_re: jax.Array,
+    h_im: jax.Array,
+    log_mag: jax.Array,
+    theta: jax.Array,
+    u_re: jax.Array,
+    u_im: jax.Array,
+):
+    """Single-token streaming update (serving): O(S*d) state, O(S*d) work.
+
+    Args:
+      x_t: [..., d] new token features.
+      h_re/h_im: [..., S, d] carried state.
+    Returns:
+      (z_t [..., d], h_re', h_im')
+    """
+    a_re = jnp.exp(log_mag) * jnp.cos(theta)  # [..., S]
+    a_im = jnp.exp(log_mag) * jnp.sin(theta)
+    h_re_new = a_re[..., :, None] * h_re - a_im[..., :, None] * h_im + x_t[..., None, :]
+    h_im_new = a_re[..., :, None] * h_im + a_im[..., :, None] * h_re
+    # u broadcasts as [..., S] against h [..., S, d].
+    z = (h_re_new * u_re[..., :, None] - h_im_new * u_im[..., :, None]).sum(axis=-2)
+    return z, h_re_new, h_im_new

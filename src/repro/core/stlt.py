@@ -1,0 +1,532 @@
+"""The learnable two-sided short-time Laplace transform (STLT) layer.
+
+This is the paper's contribution, packaged as a drop-in replacement for a
+self-attention block:
+
+    y, aux = apply_stlt(params, cfg, x)          # x: [B, N, d_model]
+
+Readouts (DESIGN.md §2):
+
+* ``mode="factorized"``  (production, O(N*S*d)):
+      v   = x W_v                                  (per head)
+      L_k = windowed Laplace scan of v at node k   (streaming recurrence)
+      z   = Re(sum_k m_k u_k L_k) W_o
+* ``mode="relevance"``   (paper figure, O(N^2 S)):
+      R[n,m] = Re(sum_k m_k L[n,k] . conj(L[m,k]))
+      z      = softmax(R / sqrt(S) + causal_mask) (x W_v) W_o
+
+Directions: ``bidirectional=False`` is the unilateral/causal transform
+(decoder); ``True`` is the bilateral transform (encoder) computed as a
+forward plus a backward scan minus the double-counted center.
+
+Windows: ``exponential`` (exact one-state recurrence; learnable T folds into
+the pole) or ``hann`` (finite support; computed as an FFT convolution whose
+combined filter is real after the node sum — see DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import adaptive as adaptive_lib
+from repro.core import scan as scan_lib
+from repro.core import nodes as nodes_lib
+from repro.utils import lecun_normal
+
+
+@dataclasses.dataclass(frozen=True)
+class STLTConfig:
+    d_model: int
+    num_heads: int = 8
+    num_nodes: int = 32           # S (S_max when adaptive)
+    mode: str = "factorized"      # factorized | relevance
+    bidirectional: bool = False   # bilateral (encoder) vs unilateral (decoder)
+    window: str = "exponential"   # exponential | hann
+    hann_support: int = 128       # max finite-window length W for window="hann"
+    chunk: int = 128              # chunked-scan block (MXU tile)
+    engine: str = "chunked"       # chunked | associative | sequential | pallas
+    gate: bool = False            # beyond-paper: SiLU input gating on the readout
+    delta: float = 1.0
+    init_T: float = 32.0
+    sigma_min: float = 1e-3
+    sigma_max: float = 1.0
+    omega_max: float = math.pi / 4
+    learnable_sigma: bool = True
+    learnable_omega: bool = True
+    learnable_T: bool = True
+    zero_omega: bool = False      # ablation: no oscillation
+    adaptive: adaptive_lib.AdaptiveConfig = adaptive_lib.AdaptiveConfig()
+    param_dtype: Any = jnp.float32
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.num_heads == 0
+        return self.d_model // self.num_heads
+
+
+def init_stlt(key: jax.Array, cfg: STLTConfig) -> dict:
+    ks = jax.random.split(key, 5)
+    d, dtype = cfg.d_model, cfg.param_dtype
+    params = {
+        "nodes": nodes_lib.init_nodes(
+            ks[0], cfg.num_heads, cfg.num_nodes,
+            sigma_min=cfg.sigma_min, sigma_max=cfg.sigma_max,
+            omega_max=0.0 if cfg.zero_omega else cfg.omega_max,
+            init_T=cfg.init_T, dtype=dtype,
+        ),
+        "w_v": lecun_normal(ks[1], (d, d), dtype=dtype),
+        "w_o": lecun_normal(ks[2], (d, d), dtype=dtype),
+    }
+    if cfg.zero_omega:
+        params["nodes"]["omega"] = jnp.zeros_like(params["nodes"]["omega"])
+    if cfg.gate:
+        params["w_g"] = lecun_normal(ks[3], (d, d), dtype=dtype)
+    if cfg.adaptive.enabled:
+        params["adaptive"] = adaptive_lib.init_adaptive(
+            ks[4], d, cfg.num_heads, cfg.num_nodes, dtype=dtype
+        )
+    return params
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+
+def _poles(params: dict, cfg: STLTConfig):
+    return nodes_lib.node_poles(
+        params["nodes"], delta=cfg.delta,
+        fold_window=(cfg.window == "exponential"),
+        learnable_sigma=cfg.learnable_sigma,
+        learnable_omega=cfg.learnable_omega and not cfg.zero_omega,
+        learnable_T=cfg.learnable_T,
+    )
+
+
+def _split_heads(x: jax.Array, H: int) -> jax.Array:
+    B, N, d = x.shape
+    return x.reshape(B, N, H, d // H).transpose(0, 2, 1, 3)  # [B, H, N, dh]
+
+
+def _merge_heads(x: jax.Array) -> jax.Array:
+    B, H, N, dh = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(B, N, H * dh)
+
+
+def _masked_u(params: dict, masks: Optional[jax.Array]):
+    """Fold adaptive masks into the complex node mixers.
+
+    Returns u_re/u_im with shape [H, S] (no masks) or [B, H, S].
+    """
+    u_re, u_im = params["nodes"]["u_re"], params["nodes"]["u_im"]
+    if masks is not None:
+        u_re = u_re[None] * masks
+        u_im = u_im[None] * masks
+    return u_re, u_im
+
+
+def _run_scan(v, log_mag, theta, u_re, u_im, cfg: STLTConfig, reverse: bool):
+    """Fused factorized transform on [B, H, N, dh] -> [B, H, N, dh].
+
+    log_mag/theta: [H, S]; u_re/u_im: [H, S] (static) or [B, H, S] (adaptive).
+    """
+    B, H, N, dh = v.shape
+    S = log_mag.shape[-1]
+    if cfg.engine == "pallas":
+        from repro.kernels import ops as kernel_ops
+
+        vb = v.reshape(B * H, N, dh)
+        lm = jnp.tile(log_mag, (B, 1))  # [B*H, S], H fastest
+        th = jnp.tile(theta, (B, 1))
+        if u_re.ndim == 2:
+            ur, ui = jnp.tile(u_re, (B, 1)), jnp.tile(u_im, (B, 1))
+        else:
+            ur, ui = u_re.reshape(B * H, S), u_im.reshape(B * H, S)
+        z = kernel_ops.stlt_scan(vb, lm, th, ur, ui, chunk=cfg.chunk, reverse=reverse)
+        return z.reshape(B, H, N, dh)
+    if cfg.engine == "chunked_fused" and u_re.ndim == 2:
+        # §Perf engine: node sum folded into one real Toeplitz operator —
+        # O(C*d + S*d)/token vs the per-node engine's O(C*S*d)/token.
+        # (Adaptive masks make the operator batch-dependent -> fall through.)
+        vh = v.transpose(1, 0, 2, 3)  # [H, B, N, dh]
+
+        def per_head_fused(vh_, lm_, th_, ur_, ui_):
+            return scan_lib.stlt_chunked_fused(
+                vh_, lm_, th_, ur_, ui_, chunk=cfg.chunk, reverse=reverse
+            )
+
+        z = jax.vmap(per_head_fused)(vh, log_mag, theta, u_re, u_im)
+        return z.transpose(1, 0, 2, 3)
+    if cfg.engine in ("chunked", "chunked_fused"):
+        vh = v.transpose(1, 0, 2, 3)  # [H, B, N, dh]
+        if u_re.ndim == 2:  # [H, S]
+            ur, ui = u_re[:, None, :], u_im[:, None, :]
+        else:  # [B, H, S]
+            ur, ui = u_re.transpose(1, 0, 2), u_im.transpose(1, 0, 2)
+
+        def per_head(vh_, lm_, th_, ur_, ui_):
+            return scan_lib.stlt_chunked(
+                vh_, lm_, th_, ur_, ui_, chunk=cfg.chunk, reverse=reverse
+            )
+
+        z = jax.vmap(per_head)(vh, log_mag, theta, ur, ui)  # [H, B, N, dh]
+        return z.transpose(1, 0, 2, 3)
+    return _run_scan_generic(v, log_mag, theta, u_re, u_im, cfg, reverse)
+
+
+def _run_scan_generic(v, log_mag, theta, u_re, u_im, cfg, reverse):
+    """associative/sequential engines via materialized complex scan (oracle)."""
+    B, H, N, dh = v.shape
+    S = log_mag.shape[-1]
+    lam = jnp.exp(log_mag + 1j * theta).astype(jnp.complex64)  # [H, S]
+    vb = v.reshape(B * H, N, dh)
+    lam_b = jnp.tile(lam, (B, 1))  # [B*H, S]
+    xb = jnp.broadcast_to(vb[:, :, None, :].astype(jnp.complex64), (B * H, N, S, dh))
+    a_full = jnp.broadcast_to(lam_b[:, None, :, None], xb.shape)
+    if cfg.engine == "sequential":
+        L = scan_lib.scan_sequential(a_full, xb, axis=-3, reverse=reverse)
+    else:
+        L = scan_lib.scan_associative(a_full, xb, axis=-3, reverse=reverse)
+    if u_re.ndim == 2:
+        u = jnp.tile(u_re + 1j * u_im, (B, 1))  # [B*H, S]
+    else:
+        u = (u_re + 1j * u_im).reshape(B * H, S)
+    z = jnp.einsum("bnkd,bk->bnd", L, u).real
+    return z.astype(v.dtype).reshape(B, H, N, dh)
+
+
+# ---------------------------------------------------------------------------
+# Hann-window path (finite support; FFT convolution)
+# ---------------------------------------------------------------------------
+
+
+def _hann_filters(params, cfg: STLTConfig, masks=None):
+    """Combined real causal filter per head: g[h, t] = Re(sum_k u_hk lam_hk^t) * w(t;T_h)."""
+    log_mag, theta, _, T = _poles(params, cfg)  # log_mag [H,S] (window NOT folded)
+    W = cfg.hann_support
+    t = jnp.arange(W, dtype=jnp.float32)  # [W]
+    mag = jnp.exp(t[:, None, None] * log_mag[None])        # [W, H, S]
+    ang = t[:, None, None] * theta[None]
+    u_re, u_im = _masked_u(params, masks)
+    if u_re.ndim == 2:  # [H, S]
+        g = (u_re[None] * mag * jnp.cos(ang) - u_im[None] * mag * jnp.sin(ang)).sum(-1)  # [W,H]
+        g = g * nodes_lib.hann_window(t[:, None], T[None, :])
+        return g.transpose(1, 0)  # [H, W]
+    # adaptive masks: [B, H, S]
+    g = (
+        u_re[:, None] * mag[None] * jnp.cos(ang)[None]
+        - u_im[:, None] * mag[None] * jnp.sin(ang)[None]
+    ).sum(-1)  # [B, W, H]
+    g = g * nodes_lib.hann_window(t[None, :, None], T[None, None, :])
+    return g.transpose(0, 2, 1)  # [B, H, W]
+
+
+def _hann_conv(v: jax.Array, g: jax.Array, reverse: bool) -> jax.Array:
+    """Causal (or anti-causal) depthwise FFT convolution.
+
+    v: [B, H, N, dh]; g: [H, W] or [B, H, W].
+    """
+    B, H, N, dh = v.shape
+    W = g.shape[-1]
+    L = N + W
+    vf = jnp.fft.rfft(v, n=L, axis=2)  # [B, H, Lf, dh]
+    gf = jnp.fft.rfft(g, n=L, axis=-1)  # [H, Lf] or [B, H, Lf]
+    if g.ndim == 2:
+        gf = gf[None]
+    if reverse:
+        gf = jnp.conj(gf)  # time-reversal of a real filter
+    z = jnp.fft.irfft(vf * gf[..., None], n=L, axis=2)[:, :, :N]
+    if reverse:
+        # anti-causal conv: z[n] = sum_{t>=0} g[t] v[n+t]; conj in freq gives
+        # correlation, whose first N samples align after no shift.
+        pass
+    return z.astype(v.dtype)
+
+
+# ---------------------------------------------------------------------------
+# main entry points
+# ---------------------------------------------------------------------------
+
+
+def apply_stlt(
+    params: dict,
+    cfg: STLTConfig,
+    x: jax.Array,
+    *,
+    rng: Optional[jax.Array] = None,
+    deterministic: bool = True,
+    tau: Optional[float] = None,
+    pad_mask: Optional[jax.Array] = None,
+):
+    """Full-sequence STLT block. x: [B, N, d_model] -> (y, aux dict).
+
+    aux: {"reg": scalar (Reg) loss, "s_eff": [B], "masks": [B,H,S] | None}
+    """
+    B, N, d = x.shape
+    H, S = cfg.num_heads, cfg.num_nodes
+    acfg = cfg.adaptive if tau is None else cfg.adaptive._replace(tau=tau)
+
+    masks = None
+    s_eff = jnp.full((B,), float(S))
+    if acfg.enabled:
+        masks, s_eff = adaptive_lib.node_masks(
+            params["adaptive"], x, acfg, rng=rng,
+            deterministic=deterministic, pad_mask=pad_mask,
+        )
+
+    log_mag, theta, sigma, T = _poles(params, cfg)
+    v = _split_heads(x @ params["w_v"], H)  # [B, H, N, dh]
+    u_re, u_im = _masked_u(params, masks)
+
+    if cfg.mode == "relevance":
+        z = _relevance_readout(params, cfg, x, v, log_mag, theta, masks)
+    elif cfg.window == "hann":
+        g = _hann_filters(params, cfg, masks)
+        z = _hann_conv(v, g, reverse=False)
+        if cfg.bidirectional:
+            z = z + _hann_conv(v, g, reverse=True)
+            g0 = g[..., 0]  # center tap counted twice
+            z = z - g0[..., None, None] * v
+    else:
+        z = _run_scan(v, log_mag, theta, u_re, u_im, cfg, reverse=False)
+        if cfg.bidirectional:
+            z = z + _run_scan(v, log_mag, theta, u_re, u_im, cfg, reverse=True)
+            # subtract the double-counted center: Re(sum_k u_k) * v
+            u0 = u_re.sum(-1)  # [H] or [B, H]
+            u0 = u0[None, :, None, None] if u0.ndim == 1 else u0[:, :, None, None]
+            z = z - u0 * v
+
+    z = _merge_heads(z)
+    if cfg.gate:
+        z = z * jax.nn.silu(x @ params["w_g"])
+    y = z @ params["w_o"]
+
+    reg = adaptive_lib.regularization(sigma, params["nodes"]["omega"], masks, acfg)
+    return y, {"reg": reg, "s_eff": s_eff, "masks": masks, "T": T, "sigma": sigma}
+
+
+def _relevance_readout(params, cfg, x, v, log_mag, theta, masks):
+    """Paper-figure readout: Z = softmax(R / sqrt(S) + mask) V.
+
+    R[n,m] = Re(sum_k m_k L[n,k] conj(L[m,k])), L from the (possibly
+    bidirectional) transform of per-head inputs. O(N^2) — faithful mode for
+    moderate N; the flash-tiled Pallas variant covers larger N on TPU.
+    """
+    B, H, N, dh = v.shape
+    S = cfg.num_nodes
+    xh = _split_heads(x, H)  # transform the (normed) inputs, mix values v
+    lam = jnp.exp(log_mag + 1j * theta).astype(jnp.complex64)  # [H, S]
+    xb = xh.reshape(B * H, N, dh)
+    lam_b = jnp.tile(lam, (B, 1))
+    xc = jnp.broadcast_to(xb[:, :, None, :].astype(jnp.complex64), (B * H, N, S, dh))
+    a_full = jnp.broadcast_to(lam_b[:, None, :, None], xc.shape)
+    L = scan_lib.scan_associative(a_full, xc, axis=-3, reverse=False)
+    if cfg.bidirectional:
+        L_rev = scan_lib.scan_associative(a_full, xc, axis=-3, reverse=True)
+        L = L + L_rev - xc
+    L = L.reshape(B, H, N, S, dh)
+    # contract feature dim, node-masked
+    if masks is not None:
+        mk = masks[:, :, None, :]  # [B,H,1,S]
+        Lw = L * mk[..., None]
+    else:
+        Lw = L
+    R = jnp.einsum("bhnkd,bhmkd->bhnm", Lw, jnp.conj(L)).real / math.sqrt(S)
+    if not cfg.bidirectional:
+        causal = jnp.tril(jnp.ones((N, N), bool))
+        R = jnp.where(causal[None, None], R, -jnp.inf)
+    A = jax.nn.softmax(R, axis=-1)
+    return jnp.einsum("bhnm,bhmd->bhnd", A, v)
+
+
+# ---------------------------------------------------------------------------
+# streaming decode (serving)
+# ---------------------------------------------------------------------------
+
+
+def stlt_prefill(params: dict, cfg: STLTConfig, x: jax.Array):
+    """Parallel prefill: full-sequence outputs + the O(S*d) streaming state.
+
+    x [B, N, d] -> (y [B, N, d], state). Unilateral, factorized mode.
+    """
+    assert not cfg.bidirectional and cfg.mode == "factorized"
+    B, N, d = x.shape
+    H = cfg.num_heads
+    log_mag, theta, _, _ = _poles(params, cfg)
+    v = _split_heads(x @ params["w_v"], H)  # [B, H, N, dh]
+    u_re, u_im = params["nodes"]["u_re"], params["nodes"]["u_im"]
+
+    if cfg.window == "hann":
+        g = _hann_filters(params, cfg, None)
+        z = _hann_conv(v, g, reverse=False)
+        W = cfg.hann_support
+        # ring buffer holds the last W-1 values, newest first
+        take = min(W, N)
+        buf = jnp.zeros((B, H, W, cfg.head_dim), jnp.float32)
+        buf = buf.at[:, :, :take].set(v[:, :, ::-1][:, :, :take].astype(jnp.float32))
+        state = {"buf": buf, "pos": jnp.asarray(N, jnp.int32)}
+    else:
+        vh = v.transpose(1, 0, 2, 3)  # [H, B, N, dh]
+
+        def per_head(vh_, lm_, th_, ur_, ui_):
+            return scan_lib.stlt_chunked(
+                vh_, lm_, th_, ur_, ui_, chunk=cfg.chunk, return_state=True
+            )
+
+        z, (h_re, h_im) = jax.vmap(per_head)(
+            vh, log_mag, theta, u_re[:, None, :], u_im[:, None, :]
+        )
+        z = z.transpose(1, 0, 2, 3)
+        state = {
+            "h_re": h_re.transpose(1, 0, 2, 3),  # [B, H, S, dh]
+            "h_im": h_im.transpose(1, 0, 2, 3),
+        }
+
+    z = _merge_heads(z)
+    if cfg.gate:
+        z = z * jax.nn.silu(x @ params["w_g"])
+    return z @ params["w_o"], state
+
+
+def init_stlt_state(cfg: STLTConfig, batch: int, dtype=jnp.float32):
+    """O(S*d) streaming state (the paper's headline memory claim)."""
+    H, S, dh = cfg.num_heads, cfg.num_nodes, cfg.head_dim
+    if cfg.window == "hann":
+        return {"buf": jnp.zeros((batch, H, cfg.hann_support, dh), dtype),
+                "pos": jnp.zeros((), jnp.int32)}
+    return {
+        "h_re": jnp.zeros((batch, H, S, dh), dtype),
+        "h_im": jnp.zeros((batch, H, S, dh), dtype),
+    }
+
+
+def apply_stlt_step(params: dict, cfg: STLTConfig, x_t: jax.Array, state: dict):
+    """One decode step. x_t: [B, d_model] -> (y_t [B, d_model], new state).
+
+    Unilateral only (decoders are causal); adaptive masks at decode time use
+    the deterministic path pooled over the running state mean.
+    """
+    assert not cfg.bidirectional, "decode is causal"
+    B, d = x_t.shape
+    H = cfg.num_heads
+    v_t = (x_t @ params["w_v"]).reshape(B, H, cfg.head_dim)
+    log_mag, theta, _, _ = _poles(params, cfg)
+    u_re, u_im = params["nodes"]["u_re"], params["nodes"]["u_im"]
+
+    if cfg.window == "hann":
+        g = _hann_filters(params, cfg, None)  # [H, W]
+        buf = jnp.roll(state["buf"], 1, axis=2).at[:, :, 0].set(v_t)
+        z = jnp.einsum("bhwd,hw->bhd", buf, g)
+        new_state = {"buf": buf, "pos": state["pos"] + 1}
+    else:
+        z, h_re, h_im = scan_lib.stlt_decode_step(
+            v_t, state["h_re"], state["h_im"], log_mag, theta, u_re, u_im
+        )
+        new_state = {"h_re": h_re, "h_im": h_im}
+
+    z = z.reshape(B, d)
+    if cfg.gate:
+        z = z * jax.nn.silu(x_t @ params["w_g"])
+    return z @ params["w_o"], new_state
+
+
+# ---------------------------------------------------------------------------
+# cross-STLT (paper §3.5, decoder->encoder)
+# ---------------------------------------------------------------------------
+
+
+def init_cross_stlt(key: jax.Array, cfg: STLTConfig) -> dict:
+    ks = jax.random.split(key, 3)
+    d, dtype = cfg.d_model, cfg.param_dtype
+    return {
+        "nodes": nodes_lib.init_nodes(
+            ks[0], cfg.num_heads, cfg.num_nodes,
+            sigma_min=cfg.sigma_min, sigma_max=cfg.sigma_max,
+            omega_max=cfg.omega_max, init_T=cfg.init_T, dtype=dtype,
+        ),
+        "w_v": lecun_normal(ks[1], (d, d), dtype=dtype),
+        "w_o": lecun_normal(ks[2], (d, d), dtype=dtype),
+    }
+
+
+def apply_cross_stlt(params: dict, cfg: STLTConfig, x_dec: jax.Array, x_enc: jax.Array):
+    """R[n,m] = Re(sum_k L_dec[n,k] conj(L_enc[m,k])); Z = softmax(R/sqrt(S)) V_enc."""
+    B, N, d = x_dec.shape
+    M = x_enc.shape[1]
+    H, S = cfg.num_heads, cfg.num_nodes
+    log_mag, theta, _, _ = _poles(params, cfg)
+    lam = jnp.exp(log_mag + 1j * theta).astype(jnp.complex64)
+
+    def transform(x, bidirectional):
+        xh = _split_heads(x, H).reshape(B * H, x.shape[1], cfg.head_dim)
+        lam_b = jnp.tile(lam, (B, 1))
+        xc = jnp.broadcast_to(
+            xh[:, :, None, :].astype(jnp.complex64),
+            (B * H, x.shape[1], S, cfg.head_dim),
+        )
+        a_full = jnp.broadcast_to(lam_b[:, None, :, None], xc.shape)
+        L = scan_lib.scan_associative(a_full, xc, axis=-3)
+        if bidirectional:
+            L = L + scan_lib.scan_associative(a_full, xc, axis=-3, reverse=True) - xc
+        return L.reshape(B, H, x.shape[1], S, cfg.head_dim)
+
+    L_dec = transform(x_dec, bidirectional=False)  # causal side
+    L_enc = transform(x_enc, bidirectional=True)
+    R = jnp.einsum("bhnkd,bhmkd->bhnm", L_dec, jnp.conj(L_enc)).real / math.sqrt(S)
+    A = jax.nn.softmax(R, axis=-1)
+    v_enc = _split_heads(x_enc @ params["w_v"], H)
+    z = jnp.einsum("bhnm,bhmd->bhnd", A, v_enc)
+    return _merge_heads(z) @ params["w_o"]
+
+
+def cross_stlt_context(params: dict, cfg: STLTConfig, x_enc: jax.Array) -> dict:
+    """Precompute the encoder-side Laplace coefficients + values for decode.
+
+    Returns {"L_re","L_im": [B,H,M,S,dh], "v": [B,H,M,dh]}.
+    """
+    B, M, _ = x_enc.shape
+    H, S = cfg.num_heads, cfg.num_nodes
+    log_mag, theta, _, _ = _poles(params, cfg)
+    lam = jnp.exp(log_mag + 1j * theta).astype(jnp.complex64)
+    xh = _split_heads(x_enc, H).reshape(B * H, M, cfg.head_dim)
+    lam_b = jnp.tile(lam, (B, 1))
+    xc = jnp.broadcast_to(xh[:, :, None, :].astype(jnp.complex64), (B * H, M, S, cfg.head_dim))
+    a_full = jnp.broadcast_to(lam_b[:, None, :, None], xc.shape)
+    L = scan_lib.scan_associative(a_full, xc, axis=-3)
+    L = L + scan_lib.scan_associative(a_full, xc, axis=-3, reverse=True) - xc
+    L = L.reshape(B, H, M, S, cfg.head_dim)
+    v_enc = _split_heads(x_enc @ params["w_v"], H)
+    return {"L_re": L.real.astype(jnp.float32), "L_im": L.imag.astype(jnp.float32), "v": v_enc}
+
+
+def init_cross_stlt_state(cfg: STLTConfig, batch: int):
+    H, S, dh = cfg.num_heads, cfg.num_nodes, cfg.head_dim
+    return {
+        "h_re": jnp.zeros((batch, H, S, dh), jnp.float32),
+        "h_im": jnp.zeros((batch, H, S, dh), jnp.float32),
+    }
+
+
+def cross_stlt_step(params: dict, cfg: STLTConfig, x_t: jax.Array, state: dict, ctx: dict):
+    """One decoder step of cross-STLT. x_t [B, d] -> (z [B, d], new state)."""
+    B, d = x_t.shape
+    H, S = cfg.num_heads, cfg.num_nodes
+    log_mag, theta, _, _ = _poles(params, cfg)
+    xh = x_t.reshape(B, H, cfg.head_dim)
+    a_re = jnp.exp(log_mag) * jnp.cos(theta)  # [H, S]
+    a_im = jnp.exp(log_mag) * jnp.sin(theta)
+    h_re = a_re[None, :, :, None] * state["h_re"] - a_im[None, :, :, None] * state["h_im"] + xh[:, :, None, :]
+    h_im = a_re[None, :, :, None] * state["h_im"] + a_im[None, :, :, None] * state["h_re"]
+    # R[b,h,m] = Re sum_{k,d} L_dec conj(L_enc)
+    R = (
+        jnp.einsum("bhkd,bhmkd->bhm", h_re, ctx["L_re"])
+        + jnp.einsum("bhkd,bhmkd->bhm", h_im, ctx["L_im"])
+    ) / math.sqrt(S)
+    A = jax.nn.softmax(R, axis=-1)
+    z = jnp.einsum("bhm,bhmd->bhd", A.astype(ctx["v"].dtype), ctx["v"])
+    z = z.reshape(B, d) @ params["w_o"]
+    return z, {"h_re": h_re, "h_im": h_im}

@@ -1,0 +1,5 @@
+from repro.data.pipeline import DataPipeline
+from repro.data.synthetic import copy_task_batch, lm_batch_stream, needle_batch
+from repro.data.text import ByteCorpus
+
+__all__ = ["ByteCorpus", "DataPipeline", "copy_task_batch", "lm_batch_stream", "needle_batch"]

@@ -1,0 +1,64 @@
+"""Deterministic synthetic data: structured LM streams, copy/reverse seq2seq
+tasks (the WMT proxy), and needle-retrieval batches (the NarrativeQA proxy).
+
+All generators are step-indexed (stateless): ``batch(step)`` is a pure
+function of (seed, step), which is what makes checkpoint-resume exactly
+replayable — the fault-tolerance contract depends on it.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def _rng(seed: int, step: int) -> np.random.Generator:
+    return np.random.default_rng(np.random.SeedSequence([seed, step]))
+
+
+def lm_batch_stream(seed: int, step: int, batch: int, seq_len: int, vocab: int):
+    """Sparse first-order Markov stream: each token has 4 fixed successors
+    with weights (0.6, 0.2, 0.15, 0.05). Optimal CE ~= 1.2 nats vs ln(V)
+    uniform, and the transition table is a pure function of ``seed`` — so a
+    competent model drives loss far below uniform within tens of steps."""
+    table_rng = np.random.default_rng(np.random.SeedSequence([seed, 0xBEEF]))
+    succ = table_rng.integers(0, vocab, (vocab, 4))   # successor table
+    w = np.array([0.6, 0.2, 0.15, 0.05])
+    rng = _rng(seed, step)
+    x = np.zeros((batch, seq_len + 1), np.int32)
+    x[:, 0] = rng.integers(0, vocab, batch)
+    choice = rng.choice(4, size=(batch, seq_len + 1), p=w)
+    for t in range(1, seq_len + 1):
+        x[:, t] = succ[x[:, t - 1], choice[:, t]]
+    return {"inputs": x[:, :-1], "labels": x[:, 1:]}
+
+
+def copy_task_batch(seed: int, step: int, batch: int, src_len: int, vocab: int,
+                    reverse: bool = True):
+    """Seq2seq copy/reverse task (MT proxy): decoder must emit the (reversed)
+    source. BOS=1, EOS=2, PAD=0; payload tokens in [3, vocab)."""
+    rng = _rng(seed, step)
+    payload = rng.integers(3, vocab, (batch, src_len)).astype(np.int32)
+    src = payload
+    tgt_payload = payload[:, ::-1] if reverse else payload
+    dec_in = np.concatenate([np.ones((batch, 1), np.int32), tgt_payload[:, :-1]], axis=1)
+    labels = tgt_payload
+    return {"enc_inputs": src, "dec_inputs": dec_in, "labels": labels}
+
+
+def needle_batch(seed: int, step: int, batch: int, seq_len: int, vocab: int,
+                 key_tok: int = 3):
+    """Long-context retrieval (NarrativeQA/F1 proxy): a (key, value) pair is
+    planted at a random position in a long distractor stream; after the query
+    marker the model must produce the value. Label mask covers the answer."""
+    rng = _rng(seed, step)
+    x = rng.integers(10, vocab, (batch, seq_len)).astype(np.int32)
+    value = rng.integers(10, vocab, batch).astype(np.int32)
+    pos = rng.integers(1, seq_len - 4, batch)
+    for i in range(batch):
+        x[i, pos[i]] = key_tok
+        x[i, pos[i] + 1] = value[i]
+        x[i, -2] = key_tok  # query marker
+        x[i, -1] = value[i]  # answer (the label at the last position)
+    labels = np.roll(x, -1, axis=1)
+    mask = np.zeros((batch, seq_len), np.float32)
+    mask[:, -2] = 1.0  # only grade the answer position
+    return {"inputs": x, "labels": labels, "mask": mask, "answer": value}

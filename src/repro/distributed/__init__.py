@@ -1,0 +1,2 @@
+"""Distributed runtime: sharding rules, context parallelism, pipeline
+utility, fault tolerance scaffolding."""

@@ -1,0 +1,190 @@
+"""Sharding rules: parameter-path patterns -> PartitionSpec.
+
+Strategy (DESIGN.md §5):
+  * batch            -> ("pod","data")   [+ "model" for dp_only archs]
+  * TP (heads/mlp/vocab) -> "model"
+  * EP (experts)     -> "model"
+  * FSDP (ZeRO-3)    -> "data" on the non-TP param dim, for cfg.fsdp archs
+  * KV heads / STLT heads shard on "model" only when divisible, else replicate
+
+Everything here returns PartitionSpecs; NamedSharding wrapping happens at
+the jit boundary. Optimizer-state specs are derived from param specs by
+shape adaptation (Adafactor's factored moments drop the corresponding dim).
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.utils import tree_flatten_with_paths
+
+
+def mesh_axes(mesh: Mesh):
+    return tuple(mesh.axis_names)
+
+
+def batch_axes(cfg: ModelConfig, mesh: Mesh, global_batch: int):
+    """Largest prefix of DP axes that divides the global batch."""
+    axes = [a for a in ("pod", "data") if a in mesh.axis_names]
+    if cfg.dp_only and "model" in mesh.axis_names:
+        axes.append("model")
+    # drop trailing axes until the product divides the batch
+    while axes:
+        prod = int(np.prod([mesh.shape[a] for a in axes]))
+        if global_batch % prod == 0:
+            return tuple(axes)
+        axes.pop()
+    return ()
+
+
+def _div(n: int, mesh: Mesh, axis: str = "model") -> Optional[str]:
+    """axis name if n is divisible by its size (else None -> replicate)."""
+    if axis not in mesh.axis_names:
+        return None
+    return axis if n % mesh.shape[axis] == 0 else None
+
+
+def param_specs(params_shapes, cfg: ModelConfig, mesh: Mesh):
+    """Tree of PartitionSpec matching the params tree (by path rules)."""
+    model = "model" if "model" in mesh.axis_names else None
+    fsdp = "data" if (cfg.fsdp and "data" in mesh.axis_names) else None
+    if cfg.dp_only:
+        model = fsdp = None  # replicate everything
+
+    def spec_for(path: str, shape) -> P:
+        """NB: scan-over-layers stacks add a leading layer dim, so every rule
+        reads LOGICAL dims from the trailing end of ``shape`` (the caller
+        tail-aligns the returned spec)."""
+        nd = len(shape)
+        if nd <= 1 or "norm" in path or path.endswith(("/b", "/bias", "/lam")):
+            # vectors: shard big ones on model when clean, else replicate
+            if nd == 1 and model and shape[0] % mesh.shape["model"] == 0 and shape[0] >= 4096:
+                return P(model)
+            return P(*([None] * nd))
+        # --- embeddings / head (never stacked) ---------------------------------
+        if path.endswith("embed/embed"):
+            return P(_div(shape[0], mesh), fsdp)
+        if path.endswith("lm_head/kernel"):
+            return P(fsdp, _div(shape[1], mesh))
+        # --- MoE ---------------------------------------------------------------
+        if "/moe/" in path or path.startswith("moe/"):
+            if path.endswith("/router"):
+                return P(fsdp, None)
+            if re.search(r"/dense/w[123]$", path):
+                return P(fsdp, model) if path.endswith(("w1", "w3")) else P(model, fsdp)
+            if path.endswith(("/w1", "/w3")):  # logical [E, d, f]
+                return P(_div(shape[-3], mesh), fsdp, None)
+            if path.endswith("/w2"):  # logical [E, f, d]
+                return P(_div(shape[-3], mesh), None, fsdp)
+        # --- attention -----------------------------------------------------------
+        if path.endswith(("/wq",)):
+            return P(fsdp, _div(shape[-1], mesh))
+        if path.endswith(("/wk", "/wv")):
+            ok = model if (model and cfg.num_kv_heads % mesh.shape["model"] == 0) else None
+            return P(fsdp, ok)
+        if path.endswith("/wo"):
+            return P(_div(shape[-2], mesh), fsdp)
+        if path.endswith(("/bq",)):
+            return P(_div(shape[-1], mesh))
+        if path.endswith(("/bk", "/bv")):
+            return P(None)
+        # --- STLT ------------------------------------------------------------------
+        if "/nodes/" in path:  # sigma_hat/omega/u_re/u_im: logical [H, S]
+            ok = model if (model and cfg.num_heads % mesh.shape["model"] == 0) else None
+            return P(ok, None)
+        if path.endswith("/w_alpha"):  # [d, H, S]
+            ok = model if (model and cfg.num_heads % mesh.shape["model"] == 0) else None
+            return P(fsdp, ok, None)
+        if path.endswith("/b_alpha"):
+            ok = model if (model and cfg.num_heads % mesh.shape["model"] == 0) else None
+            return P(ok, None)
+        if path.endswith(("/w_v", "/w_g")):
+            return P(fsdp, _div(shape[-1], mesh))
+        if path.endswith("/w_o"):
+            return P(_div(shape[-2], mesh), fsdp)
+        # --- FFN ----------------------------------------------------------------------
+        if path.endswith(("/w1", "/w3")):
+            return P(fsdp, _div(shape[-1], mesh))
+        if path.endswith("/w2"):
+            return P(_div(shape[-2], mesh), fsdp)
+        # --- xLSTM / RG-LRU ---------------------------------------------------------------
+        if path.endswith("/w_up"):
+            return P(fsdp, _div(shape[-1], mesh))
+        if path.endswith("/w_down"):
+            return P(_div(shape[-2], mesh), fsdp)
+        if path.endswith(("/w_gate", "/w_x", "/w_a", "/w_i_rg")):
+            return P(fsdp, _div(shape[-1], mesh))
+        if path.endswith("/w_out"):
+            return P(_div(shape[-2], mesh), fsdp)
+        if path.endswith("/conv"):
+            return P(None, _div(shape[-1], mesh))
+        # default: fsdp on the logical first dim when clean
+        d0 = fsdp if (fsdp and shape[-2] % mesh.shape["data"] == 0) else None
+        return P(d0, *([None] * (min(nd, 2) - 1)))
+
+    flat = tree_flatten_with_paths(params_shapes)
+    specs = []
+    for path, leaf in flat:
+        sp = spec_for(path, leaf.shape)
+        # stacked (scan-over-layers) params carry a leading layer dim: shift
+        nd_expected = len(sp)
+        if len(leaf.shape) > nd_expected:
+            sp = P(*([None] * (len(leaf.shape) - nd_expected) + list(sp)))
+        # sanity: never shard a dim that does not divide
+        fixed = []
+        for dim, ax in zip(leaf.shape, tuple(sp) + (None,) * (len(leaf.shape) - len(sp))):
+            if ax is None:
+                fixed.append(None)
+            else:
+                sizes = [mesh.shape[a] for a in (ax if isinstance(ax, tuple) else (ax,))]
+                fixed.append(ax if dim % int(np.prod(sizes)) == 0 else None)
+        specs.append(P(*fixed))
+    treedef = jax.tree_util.tree_structure(params_shapes)
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def _shape_adapted_spec(pspec: P, pshape, leaf_shape) -> P:
+    """Adapt a param spec to an optimizer-state leaf (Adafactor vr/vc etc.)."""
+    if tuple(leaf_shape) == tuple(pshape):
+        return pspec
+    sp = tuple(pspec) + (None,) * (len(pshape) - len(pspec))
+    if tuple(leaf_shape) == tuple(pshape[:-1]):       # vr: drop last dim
+        return P(*sp[:-1])
+    if tuple(leaf_shape) == tuple(pshape[:-2] + pshape[-1:]):  # vc: drop 2nd-last
+        return P(*(sp[:-2] + sp[-1:]))
+    return P(*([None] * len(leaf_shape)))             # scalars / counters
+
+
+def opt_state_specs(opt_state_shapes, params_shapes, pspecs, cfg: ModelConfig, mesh: Mesh):
+    """Specs for optimizer state, by matching each leaf back to its param."""
+    pflat = dict(tree_flatten_with_paths(params_shapes))
+    pspec_flat = dict(
+        zip([k for k, _ in tree_flatten_with_paths(params_shapes)],
+            jax.tree_util.tree_leaves(pspecs, is_leaf=lambda x: isinstance(x, P)))
+    )
+    oflat = tree_flatten_with_paths(opt_state_shapes)
+    specs = []
+    for path, leaf in oflat:
+        # strip state prefixes/suffixes to recover the param path
+        m = re.match(r"^(mu|nu|v)/(.*)$", path)
+        core = m.group(2) if m else path
+        core = re.sub(r"/(vr|vc|v)$", "", core)
+        if core in pflat:
+            specs.append(_shape_adapted_spec(pspec_flat[core], pflat[core].shape, leaf.shape))
+        else:
+            specs.append(P(*([None] * len(leaf.shape))))
+    treedef = jax.tree_util.tree_structure(opt_state_shapes)
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def to_named(tree_of_specs, mesh: Mesh):
+    return jax.tree_util.tree_map(
+        lambda sp: NamedSharding(mesh, sp),
+        tree_of_specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,5 @@
+"""Pallas TPU kernels for the STLT hot path (pl.pallas_call + BlockSpec),
+with jit'd wrappers (ops.py) and pure-jnp oracles (ref.py)."""
+from repro.kernels.ops import stlt_scan
+
+__all__ = ["stlt_scan"]

@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the STLT scan kernel.
+
+Two reference levels:
+  * ``ref_sequential`` — literal per-step complex recurrence (the definition).
+  * ``repro.core.scan.stlt_chunked`` — the chunked algorithm the kernel
+    mirrors (itself validated against ``ref_sequential`` and against the
+    O(N^2 S) direct summation in repro/core/ref.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_sequential(x, log_mag, theta, u_re, u_im, reverse: bool = False):
+    """x [BH, N, d]; per-row poles [BH, S]. Returns z [BH, N, d] float32."""
+    x = x.astype(jnp.float32)
+    lam = jnp.exp(log_mag.astype(jnp.float32) + 1j * theta.astype(jnp.float32))
+    u = u_re.astype(jnp.float32) + 1j * u_im.astype(jnp.float32)
+    BH, N, d = x.shape
+    S = lam.shape[-1]
+    xs = jnp.moveaxis(x, 1, 0)  # [N, BH, d]
+    if reverse:
+        xs = xs[::-1]
+
+    def step(h, x_t):
+        # h [BH, S, d] complex; x_t [BH, d]
+        h = lam[:, :, None] * h + x_t[:, None, :].astype(jnp.complex64)
+        z = jnp.einsum("bsd,bs->bd", h, u).real
+        return h, z
+
+    h0 = jnp.zeros((BH, S, d), jnp.complex64)
+    _, zs = jax.lax.scan(step, h0, xs.astype(jnp.complex64))
+    if reverse:
+        zs = zs[::-1]
+    return jnp.moveaxis(zs, 0, 1)

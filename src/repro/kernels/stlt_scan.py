@@ -1,0 +1,125 @@
+"""Pallas TPU kernel for the fused factorized STLT scan.
+
+Math (DESIGN.md §3): for chunk c with inputs X_c [C, d] and complex carry
+h [S, d],
+
+    z_c      = M @ X_c + A @ h_re + B @ h_im          (fused node readout)
+    h_re'    = Pre @ X_c + dec_re*h_re - dec_im*h_im  (carry update)
+    h_im'    = Pim @ X_c + dec_re*h_im + dec_im*h_re
+
+where every operator is a tiny, N-independent function of the poles
+(precomputed on host by ops.py):
+
+    M[i,j]  = sum_k Re(u_k lambda_k^(i-j))   for i>=j   (lower-tri Toeplitz —
+              the node sum collapses the S complex Toeplitz matmuls into ONE
+              real C x C matmul; this is the key MXU trick)
+    A[i,k]  =  Re(u_k lambda_k^(i+1)),  B[i,k] = -Im(u_k lambda_k^(i+1))
+    Pre/Pim[k,j] = Re/Im(lambda_k^(C-1-j))
+    dec = lambda^C
+
+Grid: (BH, d/bd, N/C) with the chunk axis sequential ("arbitrary") and a
+VMEM scratch carry per (row, d-block). All matmul shapes are multiples of
+the 128 MXU tile when C = bd = 128. HBM traffic is exactly x-in + z-out
+(2*N*d*4B per row) — the O(N*S*d) Laplace coefficients never leave VMEM,
+preserving the paper's O(S*d) memory claim on-chip.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:  # TPU memory spaces (used for scratch); interpret mode accepts them too
+    from jax.experimental.pallas import tpu as pltpu
+
+    _VMEM = pltpu.VMEM
+    try:
+        _CompilerParams = pltpu.CompilerParams
+    except AttributeError:  # older naming
+        _CompilerParams = pltpu.TPUCompilerParams
+except Exception:  # pragma: no cover - non-TPU builds
+    pltpu = None
+    _VMEM = None
+    _CompilerParams = None
+
+
+def _kernel(x_ref, m_ref, a_ref, b_ref, pre_ref, pim_ref, dec_ref,
+            z_ref, hre_ref, him_ref):
+    """One (row, d-block, chunk) grid step."""
+    c = pl.program_id(2)
+
+    @pl.when(c == 0)
+    def _init():
+        hre_ref[...] = jnp.zeros_like(hre_ref)
+        him_ref[...] = jnp.zeros_like(him_ref)
+
+    x = x_ref[0]          # [C, bd]
+    h_re = hre_ref[...]   # [S, bd]
+    h_im = him_ref[...]
+    m = m_ref[0]          # [C, C]
+    a = a_ref[0]          # [C, S]
+    b = b_ref[0]
+    pre = pre_ref[0]      # [S, C]
+    pim = pim_ref[0]
+    dec_re = dec_ref[0, 0, :]  # [S]
+    dec_im = dec_ref[0, 1, :]
+
+    z = jnp.dot(m, x, preferred_element_type=jnp.float32)
+    z += jnp.dot(a, h_re, preferred_element_type=jnp.float32)
+    z += jnp.dot(b, h_im, preferred_element_type=jnp.float32)
+    z_ref[0] = z.astype(z_ref.dtype)
+
+    px = jnp.dot(pre, x, preferred_element_type=jnp.float32)
+    qx = jnp.dot(pim, x, preferred_element_type=jnp.float32)
+    new_re = px + dec_re[:, None] * h_re - dec_im[:, None] * h_im
+    new_im = qx + dec_re[:, None] * h_im + dec_im[:, None] * h_re
+    hre_ref[...] = new_re
+    him_ref[...] = new_im
+
+
+@functools.partial(
+    jax.jit, static_argnames=("chunk", "block_d", "interpret")
+)
+def stlt_scan_kernel(x, m, a, b, pre, pim, dec, *, chunk: int = 128,
+                     block_d: int = 128, interpret: bool = False):
+    """x [BH, N, d] (N % chunk == 0, d % block_d == 0); operators per row.
+
+    m [BH, C, C]; a,b [BH, C, S]; pre,pim [BH, S, C]; dec [BH, 2, S].
+    Returns z [BH, N, d] float32.
+    """
+    BH, N, d = x.shape
+    S = pre.shape[1]
+    assert N % chunk == 0 and d % block_d == 0, (N, chunk, d, block_d)
+    nc, nd = N // chunk, d // block_d
+
+    grid = (BH, nd, nc)
+    kwargs = {}
+    if _CompilerParams is not None and not interpret:
+        kwargs["compiler_params"] = _CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        )
+    scratch = [
+        _VMEM((S, block_d), jnp.float32) if _VMEM else
+        pl.BlockSpec(memory_space=None),
+        _VMEM((S, block_d), jnp.float32) if _VMEM else
+        pl.BlockSpec(memory_space=None),
+    ]
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, block_d), lambda bh, db, c: (bh, c, db)),
+            pl.BlockSpec((1, chunk, chunk), lambda bh, db, c: (bh, 0, 0)),
+            pl.BlockSpec((1, chunk, S), lambda bh, db, c: (bh, 0, 0)),
+            pl.BlockSpec((1, chunk, S), lambda bh, db, c: (bh, 0, 0)),
+            pl.BlockSpec((1, S, chunk), lambda bh, db, c: (bh, 0, 0)),
+            pl.BlockSpec((1, S, chunk), lambda bh, db, c: (bh, 0, 0)),
+            pl.BlockSpec((1, 2, S), lambda bh, db, c: (bh, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, block_d), lambda bh, db, c: (bh, c, db)),
+        out_shape=jax.ShapeDtypeStruct((BH, N, d), jnp.float32),
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(x, m, a, b, pre, pim, dec)

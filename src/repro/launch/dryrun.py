@@ -1,0 +1,304 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS_EXTRA", "")
+)
+# ^ MUST run before any other import: jax locks the device count on first init.
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture x input-shape x mesh) cell:
+  jit(step).lower(**input_specs).compile()
+on the production meshes — 16x16 (one pod, 256 chips) and 2x16x16 (two pods,
+512 chips) — and record memory_analysis(), cost_analysis(), and the
+collective bytes parsed from the partitioned HLO. One JSON per cell lands in
+results/dryrun/<mesh>/<cell>.json; benchmarks/roofline.py consumes them.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun [--arch A] [--shape S]
+      [--mesh single|multi|both] [--variant native|stlt|cell-default]
+      [--out results/dryrun]
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+
+from repro import configs as configs_lib
+from repro.launch import steps as steps_lib
+from repro.launch.mesh import make_production_mesh
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def parse_collective_bytes(hlo_text: str) -> dict:
+    """Sum result-shape bytes of every collective op in the partitioned HLO.
+
+    Shapes in the post-SPMD module are per-device, so the totals are
+    bytes-through-the-links per device per step (the §Roofline collective
+    term divides by per-chip link bandwidth).
+    """
+    totals = {k: {"bytes": 0, "count": 0} for k in COLLECTIVES}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.search(r"=\s*(.+?)\s+([a-z0-9-]+)\(", line)
+        if not m:
+            continue
+        result_part, op = m.groups()
+        base = None
+        for c in COLLECTIVES:
+            if op == c or op == c + "-start":
+                base = c
+                break
+        if base is None:
+            continue
+        nbytes = sum(_shape_bytes(dt, dims) for dt, dims in _SHAPE_RE.findall(result_part))
+        totals[base]["bytes"] += nbytes
+        totals[base]["count"] += 1
+    totals["total_bytes"] = sum(v["bytes"] for k, v in totals.items() if isinstance(v, dict))
+    return totals
+
+
+def memory_stats(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+        keys = [k for k in dir(ma) if k.endswith("_size_in_bytes") or k in (
+            "temp_size_in_bytes", "argument_size_in_bytes", "output_size_in_bytes",
+            "generated_code_size_in_bytes", "alias_size_in_bytes")]
+        out = {}
+        for k in set(keys):
+            try:
+                out[k] = int(getattr(ma, k))
+            except Exception:
+                pass
+        out["repr"] = str(ma)
+        return out
+    except Exception as e:  # pragma: no cover
+        return {"error": repr(e)}
+
+
+def _pattern_period(cfg) -> int:
+    """Repeating layer-pattern length (for the depth-probe correction)."""
+    if cfg.family == "hybrid":
+        return 3  # (rglru, rglru, local_attn)
+    if cfg.family == "xlstm":
+        return min(cfg.slstm_every, cfg.num_layers)
+    return 1
+
+
+def _depth_variant(cfg, depth_mult: int):
+    """cfg with num_layers = period * depth_mult, unrolled (no scan).
+
+    blockwise_threshold is raised so attention lowers DENSELY in the probes:
+    the blockwise path hides its KV loop inside lax.scan/map bodies that
+    cost_analysis counts once; the dense einsum counts exactly (same math).
+    The production/full compile keeps the blockwise path (memory realism).
+    """
+    import dataclasses
+    P = _pattern_period(cfg)
+    nl = P * depth_mult
+    kw = dict(num_layers=nl, scan_layers=False, blockwise_threshold=1 << 60)
+    if cfg.layer_types:
+        kw["layer_types"] = cfg.layer_types[:nl]
+    if cfg.family == "encdec":
+        kw["num_decoder_layers"] = min(cfg.num_decoder_layers, depth_mult)
+        kw["num_layers"] = depth_mult
+    return dataclasses.replace(cfg, **kw), P
+
+
+def analytic_arg_bytes(prog, mesh) -> dict:
+    """Per-device bytes of each jit argument, from shapes x partition specs.
+
+    More trustworthy than host-platform memory_analysis aggregation; this is
+    the "does it fit in 16 GB HBM" number for EXPERIMENTS.md.
+    """
+    import numpy as np
+    from jax.sharding import PartitionSpec
+
+    def frac(spec, shape):
+        denom = 1
+        dims = tuple(spec) if spec is not None else ()
+        for ax in dims:
+            if ax is None:
+                continue
+            for a in (ax if isinstance(ax, tuple) else (ax,)):
+                denom *= mesh.shape[a]
+        return denom
+
+    names = ("params", "opt_state", "batch", "step") if prog.kind == "train" else (
+        ("params", "inputs") if prog.kind == "prefill" else ("params", "token", "state"))
+    out = {}
+    for name, arg, spec_tree in zip(names, prog.args, prog.in_shardings):
+        leaves = jax.tree_util.tree_leaves(arg)
+        specs = jax.tree_util.tree_leaves(
+            spec_tree, is_leaf=lambda x: isinstance(x, PartitionSpec))
+        if len(specs) == 1 and len(leaves) > 1:
+            specs = specs * len(leaves)
+        total = 0
+        for leaf, sp in zip(leaves, specs):
+            n = int(np.prod(leaf.shape)) * jax.numpy.dtype(leaf.dtype).itemsize
+            total += n // max(1, frac(sp, leaf.shape))
+        out[name] = total
+    out["total"] = sum(out.values())
+    return out
+
+
+def _cell_metrics(compiled) -> dict:
+    cost = dict(compiled.cost_analysis() or {})
+    out = {k: float(v) for k, v in cost.items()
+           if isinstance(v, (int, float)) and not isinstance(v, bool)}
+    coll = parse_collective_bytes(compiled.as_text())
+    out["collective_bytes"] = float(coll["total_bytes"])
+    out["_collectives"] = coll
+    return out
+
+
+def _compile_for(cfg, shape, mesh, kind):
+    from repro.configs.base import SHAPES
+    if kind == "train":
+        prog = steps_lib.build_train_step(cfg, shape, mesh)
+    elif kind == "prefill":
+        prog = steps_lib.build_prefill_step(cfg, shape, mesh)
+    else:
+        prog = steps_lib.build_decode_step(cfg, shape, mesh)
+    return steps_lib.lower_cell(prog, mesh).compile(), prog
+
+
+def run_cell(arch: str, shape_name: str, variant: str, multi_pod: bool, out_dir: str,
+             verbose: bool = True, depth_probe: bool = True,
+             overrides: dict | None = None, tag: str = "") -> dict:
+    """Compile the full cell + two shallow depth probes.
+
+    XLA's cost_analysis counts a while/scan body ONCE, so scanned-layer
+    metrics must be trip-count corrected: with probes at depth P and 2P,
+    body = c(2P) - c(P), outside = c(P) - body, corrected = outside +
+    (L/P) * body. Memory analysis comes from the full compile (allocation is
+    trip-count independent); the probes only feed flops/bytes/collectives.
+    """
+    from repro import configs as configs_lib
+
+    mesh_name = "multi" if multi_pod else "single"
+    cell_key = f"{arch}__{shape_name}__{variant}" + (f"__{tag}" if tag else "")
+    path = os.path.join(out_dir, mesh_name, cell_key + ".json")
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    rec = {"arch": arch, "shape": shape_name, "variant": variant,
+           "mesh": mesh_name, "ok": False, "overrides": overrides or {}}
+    t0 = time.time()
+    try:
+        import dataclasses as _dc
+
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        cfg = configs_lib.get_config(arch, variant)
+        if overrides:
+            cfg = _dc.replace(cfg, **overrides)
+        shape = configs_lib.SHAPES[shape_name]
+        compiled, prog = _compile_for(cfg, shape, mesh, shape.kind)
+        t_full = time.time() - t0
+        rec.update(kind=prog.kind, memory=memory_stats(compiled),
+                   analytic_arg_bytes_per_device=analytic_arg_bytes(prog, mesh),
+                   cost_raw=_cell_metrics(compiled), devices=int(mesh.size),
+                   compile_s=round(t_full, 1))
+
+        if depth_probe:
+            # unroll chunk-loops so cost_analysis counts every inner
+            # iteration (lax.scan bodies are otherwise counted once)
+            from repro.core import scan as _scan_lib
+
+            cfg1, P = _depth_variant(cfg, 1)
+            cfg2, _ = _depth_variant(cfg, 2)
+            _scan_lib.MEASURE_UNROLL = True
+            try:
+                c1, _ = _compile_for(cfg1, shape, mesh, shape.kind)
+                c2, _ = _compile_for(cfg2, shape, mesh, shape.kind)
+            finally:
+                _scan_lib.MEASURE_UNROLL = False
+            m1, m2 = _cell_metrics(c1), _cell_metrics(c2)
+            mult = cfg.num_layers / P if cfg.family != "encdec" else cfg.num_layers
+            corrected = {}
+            for k in ("flops", "bytes accessed", "collective_bytes"):
+                a, b = m1.get(k, 0.0), m2.get(k, 0.0)
+                body = max(0.0, b - a)
+                outside = max(0.0, a - body)
+                corrected[k] = outside + mult * body
+            rec["cost_corrected"] = corrected
+            rec["depth_probe"] = {"P": P, "mult": mult,
+                                  "d1": {k: m1.get(k) for k in corrected},
+                                  "d2": {k: m2.get(k) for k in corrected}}
+        rec["ok"] = True
+        if verbose:
+            print(compiled.memory_analysis())
+            print({k: v for k, v in rec.get("cost_corrected", {}).items()})
+    except Exception as e:
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    rec["wall_s"] = round(time.time() - t0, 1)
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+    status = "OK" if rec["ok"] else f"FAIL ({rec.get('error', '?')[:120]})"
+    print(f"[dryrun:{mesh_name}] {cell_key}: {status}  ({rec['wall_s']}s)", flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--variant", default=None,
+                    help="native|stlt; default: the cell policy from configs.cells_for")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--include-skipped", action="store_true")
+    args = ap.parse_args()
+
+    cells = configs_lib.all_cells()
+    if args.arch:
+        cells = [c for c in cells if c.arch == args.arch]
+    if args.shape:
+        cells = [c for c in cells if c.shape.name == args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    n_ok = n_fail = n_skip = 0
+    for cell in cells:
+        if cell.skip and not args.include_skipped:
+            n_skip += 1
+            mesh_names = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+            for mn in mesh_names:
+                path = os.path.join(args.out, mn, cell.key + ".json")
+                os.makedirs(os.path.dirname(path), exist_ok=True)
+                with open(path, "w") as f:
+                    json.dump({"arch": cell.arch, "shape": cell.shape.name,
+                               "variant": cell.variant, "mesh": mn,
+                               "ok": True, "skipped": cell.skip}, f, indent=1)
+            print(f"[dryrun] {cell.key}: SKIP ({cell.skip[:80]})", flush=True)
+            continue
+        variant = args.variant or cell.variant
+        for multi in meshes:
+            rec = run_cell(cell.arch, cell.shape.name, variant, multi, args.out,
+                           verbose=False)
+            n_ok += rec["ok"]
+            n_fail += not rec["ok"]
+    print(f"[dryrun] done: {n_ok} ok, {n_fail} failed, {n_skip} skipped-by-design")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Production mesh definitions.
+
+A TPU v5e pod is 16x16 = 256 chips; the multi-pod config is 2 pods = 512
+chips with the "pod" axis outermost (data parallelism composes over
+pod x data; "model" is the intra-pod TP/EP axis, riding the fast ICI
+dimension).
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state — the dry-run must set XLA_FLAGS
+before the first jax call.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 2, model: int = 2):
+    """Small mesh over host devices (tests; requires forced device count)."""
+    return jax.make_mesh((data, model), ("data", "model"))

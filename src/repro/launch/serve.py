@@ -1,0 +1,64 @@
+"""Serving driver: batched requests through the ServeEngine.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --reduced \
+      --requests 8 --prompt-len 32 --max-new 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro import configs as configs_lib
+from repro.launch.train import paper_small
+from repro.models import transformer as T
+from repro.serving import ServeEngine
+from repro.serving.engine import Request
+from repro.utils import cast_params_for_compute, tree_size
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--variant", default="native")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--max-len", type=int, default=256)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args(argv)
+
+    cfg = paper_small() if args.arch is None else configs_lib.get_config(
+        args.arch, args.variant)
+    if args.reduced and args.arch is not None:
+        cfg = cfg.reduced()
+    if cfg.family == "encdec":
+        raise SystemExit("enc-dec serving: see examples/translate.py")
+    params = T.init_lm(jax.random.key(0), cfg)
+    params = cast_params_for_compute(params, cfg.act_dtype)
+    print(f"[serve] {cfg.name}: {tree_size(params)/1e6:.1f}M params")
+
+    eng = ServeEngine(params, cfg, max_len=args.max_len,
+                      temperature=args.temperature)
+    rng = np.random.default_rng(0)
+    reqs = [
+        Request(rng.integers(3, cfg.vocab, rng.integers(4, args.prompt_len)).astype(np.int32),
+                args.max_new, id=i)
+        for i in range(args.requests)
+    ]
+    t0 = time.time()
+    results = eng.serve(reqs, slots=args.slots, prompt_len=args.prompt_len)
+    dt = time.time() - t0
+    n_tok = sum(len(v) for v in results.values())
+    for rid in sorted(results):
+        print(f"  req {rid}: {results[rid][:12]}{'...' if len(results[rid]) > 12 else ''}")
+    print(f"[serve] {len(reqs)} requests, {n_tok} tokens in {dt:.2f}s "
+          f"({n_tok/max(dt,1e-9):.1f} tok/s)")
+
+
+if __name__ == "__main__":
+    main()

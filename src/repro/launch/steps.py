@@ -1,0 +1,329 @@
+"""Cell builder: for an (arch, shape, mesh, variant) cell, produce the step
+function + abstract arguments + in/out shardings ready for
+``jax.jit(...).lower(...).compile()``.
+
+This is the single place where model family, shape kind (train / prefill /
+decode) and sharding rules meet; both the dry-run and the real launchers
+build their steps here.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import configs as configs_lib
+from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
+from repro.core.adaptive import anneal_tau
+from repro.distributed import sharding as sh
+from repro.models import transformer as T
+from repro.models import whisper as W
+from repro.optim import clip_by_global_norm, make_optimizer, make_schedule
+from repro.optim.adamw import apply_updates
+from repro.utils import cast_params_for_compute
+
+WHISPER_ENC_FRAMES = 1500  # fixed encoder context for whisper decode shapes
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# abstract params / optimizer state
+# ---------------------------------------------------------------------------
+
+
+def init_fn(cfg: ModelConfig) -> Callable:
+    if cfg.family == "encdec":
+        return lambda key: W.init_encdec(key, cfg)
+    return lambda key: T.init_lm(key, cfg)
+
+
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(init_fn(cfg), jax.random.key(0))
+
+
+def serving_params(cfg: ModelConfig):
+    """Abstract params in inference dtype (large matrices in act_dtype)."""
+    def conv(s):
+        big = len(s.shape) >= 2 and int(np.prod(s.shape)) > 65536
+        dt = cfg.act_dtype if big and jnp.issubdtype(s.dtype, jnp.floating) else s.dtype
+        return jax.ShapeDtypeStruct(s.shape, dt)
+
+    return jax.tree_util.tree_map(conv, abstract_params(cfg))
+
+
+def loss_fn(cfg: ModelConfig):
+    if cfg.family == "encdec":
+        return W.encdec_loss
+    return T.lm_loss
+
+
+# ---------------------------------------------------------------------------
+# batches
+# ---------------------------------------------------------------------------
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    """(abstract batch, PartitionSpec tree)."""
+    B, N = shape.global_batch, shape.seq_len
+    bax = sh.batch_axes(cfg, mesh, B) or None
+    if cfg.family == "encdec":
+        batch = {
+            "enc_inputs": sds((B, N, cfg.d_model), cfg.act_dtype),  # frame stub
+            "dec_inputs": sds((B, N), jnp.int32),
+            "labels": sds((B, N), jnp.int32),
+        }
+        spec = {
+            "enc_inputs": P(bax, None, None),
+            "dec_inputs": P(bax, None),
+            "labels": P(bax, None),
+        }
+    elif cfg.input_mode in ("embeddings", "both"):
+        batch = {
+            "inputs": sds((B, N, cfg.d_model), cfg.act_dtype),  # patch/frame stub
+            "labels": sds((B, N), jnp.int32),
+        }
+        spec = {"inputs": P(bax, None, None), "labels": P(bax, None)}
+    else:
+        batch = {
+            "inputs": sds((B, N), jnp.int32),
+            "labels": sds((B, N), jnp.int32),
+        }
+        spec = {"inputs": P(bax, None), "labels": P(bax, None)}
+    return batch, spec
+
+
+def input_specs(arch: str, shape_name: str, variant: str = "native",
+                mesh: Optional[Mesh] = None):
+    """ShapeDtypeStruct stand-ins for every model input of a cell — the
+    public hook the dry-run (and tests) use. No device allocation."""
+    cfg = configs_lib.get_config(arch, variant)
+    shape = configs_lib.SHAPES[shape_name]
+    if mesh is None:
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+    if shape.kind == "train":
+        batch, _ = train_batch_specs(cfg, shape, mesh)
+        return batch
+    if shape.kind == "prefill":
+        return {"inputs": _prefill_inputs(cfg, shape)}
+    return {"token_t": sds((shape.global_batch,), jnp.int32)}
+
+
+def _prefill_inputs(cfg: ModelConfig, shape: ShapeConfig):
+    B, N = shape.global_batch, shape.seq_len
+    if cfg.family == "encdec" or cfg.input_mode in ("embeddings", "both"):
+        return sds((B, N, cfg.d_model), cfg.act_dtype)
+    return sds((B, N), jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# decode-state specs (mirror the init_decode_state structures)
+# ---------------------------------------------------------------------------
+
+
+def _state_spec_for(path: str, leaf, cfg: ModelConfig, bax, mesh: Mesh) -> P:
+    """Spec for one decode-state leaf.
+
+    Base specs are aligned to the TRAILING dims (stacked scan-over-layers
+    states carry extra leading dims, which replicate)."""
+    model_ok = lambda n: ("model" if ("model" in mesh.axis_names and not cfg.dp_only
+                                      and n % mesh.shape["model"] == 0) else None)
+    name = path.split("/")[-1]
+    shape = leaf.shape
+    nd = len(shape)
+    H, KV = cfg.num_heads, cfg.num_kv_heads
+
+    def tail(base):  # align base to trailing dims, replicate leading extras
+        assert nd >= len(base), (path, shape, base)
+        return P(*([None] * (nd - len(base)) + list(base)))
+
+    if name == "pos" or nd == 0:
+        return P()
+    if name in ("k", "v", "xk", "xv"):              # [B, size, kv, dh]
+        kv_ax = model_ok(KV)
+        if kv_ax is None:
+            # GQA/MQA with few KV heads: shard the TIME dim instead
+            # (flash-decoding style sequence sharding; softmax reductions
+            # over the sharded axis become small all-reduces)
+            return tail([bax, model_ok(shape[-3]), None, None])
+        return tail([bax, None, kv_ax, None])
+    if name in ("h_re", "h_im", "buf"):             # [B, H, S|W, dh]
+        return tail([bax, model_ok(H), None, None])
+    if name in ("L_re", "L_im"):                    # cross ctx [B, H, M, S, dh]
+        return tail([bax, model_ok(H), None, None, None])
+    if name == "C":                                  # mlstm [B, H, dk, dv]
+        return tail([bax, model_ok(H), None, None])
+    if name == "n" and nd >= 3 and shape[-2] == H:   # mlstm [B, H, dh]
+        return tail([bax, model_ok(H), None])
+    if name == "m" and shape[-1] == H:               # mlstm [B, H]
+        return tail([bax, model_ok(H)])
+    if name == "conv_buf":                           # [B, W-1, di]
+        return tail([bax, None, None])
+    if name in ("h", "c", "n", "m"):                 # slstm/rglru [B, d]
+        return tail([bax, None])
+    return P(*([None] * nd))
+
+
+def decode_state_specs(state_shapes, cfg: ModelConfig, mesh: Mesh, batch: int):
+    bax = sh.batch_axes(cfg, mesh, batch)
+    bax = bax if bax else None
+    flat = jax.tree_util.tree_flatten_with_path(state_shapes)[0]
+    from repro.utils import _path_str
+
+    specs = []
+    for pth, leaf in flat:
+        path = "/".join(_path_str(p) for p in pth)
+        specs.append(_state_spec_for(path, leaf, cfg, bax, mesh))
+    treedef = jax.tree_util.tree_structure(state_shapes)
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class CellProgram:
+    kind: str
+    fn: Callable
+    args: tuple           # abstract ShapeDtypeStructs
+    in_shardings: tuple
+    out_shardings: Any
+    donate_argnums: tuple = ()
+
+
+def build_train_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                     tcfg: Optional[TrainConfig] = None) -> CellProgram:
+    tcfg = tcfg or TrainConfig()
+    if cfg.optimizer == "adamw":
+        opt = make_optimizer(
+            cfg.optimizer, weight_decay=tcfg.weight_decay, b1=tcfg.beta1,
+            b2=tcfg.beta2, moment_dtype=jnp.dtype(cfg.opt_moment_dtype),
+        )
+    else:
+        opt = make_optimizer(cfg.optimizer, weight_decay=0.0)
+    sched = make_schedule(tcfg.schedule, tcfg.learning_rate, tcfg.warmup_steps, tcfg.total_steps)
+    lfn = loss_fn(cfg)
+
+    def train_step(params, opt_state, batch, step):
+        tau = anneal_tau(step, tcfg.total_steps, tcfg.adaptive_tau_start, tcfg.adaptive_tau_end)
+        rng = jax.random.fold_in(jax.random.key(tcfg.seed), step)
+
+        def compute_loss(p):
+            # mixed precision: bf16 compute params, fp32 master + small params
+            p = cast_params_for_compute(p, cfg.act_dtype)
+            return lfn(p, cfg, batch, rng=rng, deterministic=False, tau=tau)
+
+        (loss, metrics), grads = jax.value_and_grad(compute_loss, has_aux=True)(params)
+        grads, gnorm = clip_by_global_norm(grads, tcfg.grad_clip)
+        updates, opt_state = opt.update(grads, opt_state, params, sched(step))
+        params = apply_updates(params, updates)
+        metrics = {**metrics, "grad_norm": gnorm, "lr": sched(step)}
+        return params, opt_state, metrics
+
+    pshapes = abstract_params(cfg)
+    pspecs = sh.param_specs(pshapes, cfg, mesh)
+    oshapes = jax.eval_shape(opt.init, pshapes)
+    ospecs = sh.opt_state_specs(oshapes, pshapes, pspecs, cfg, mesh)
+    batch_shapes, batch_spec = train_batch_specs(cfg, shape, mesh)
+
+    args = (pshapes, oshapes, batch_shapes, sds((), jnp.int32))
+    in_sh = (pspecs, ospecs, batch_spec, P())
+    # metrics are scalars -> replicated (structure known per family)
+    mkeys = ("loss", "ce", "grad_norm", "lr") if cfg.family == "encdec" else (
+        "loss", "ce", "reg", "aux_loss", "router_z", "s_eff", "grad_norm", "lr")
+    out_metrics = {k: P() for k in mkeys}
+    out_sh = (pspecs, ospecs, out_metrics)
+    return CellProgram("train", train_step, args, in_sh, out_sh, donate_argnums=(0, 1))
+
+
+def build_prefill_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh) -> CellProgram:
+    B, N = shape.global_batch, shape.seq_len
+    bax = sh.batch_axes(cfg, mesh, B)
+    bax_or_none = bax if bax else None
+    inputs = _prefill_inputs(cfg, shape)
+
+    if cfg.family == "encdec":
+        def prefill_step(params, inputs):
+            state = W.init_encdec_decode_state(params, cfg, inputs, B, N)
+            return state
+        fn, extra_out = prefill_step, None
+    else:
+        def prefill_step(params, inputs):
+            return T.prefill(params, cfg, inputs, max_len=N)
+        fn = prefill_step
+
+    pshapes = serving_params(cfg)
+    pspecs = sh.param_specs(pshapes, cfg, mesh)
+    in_spec = P(bax_or_none, None, None) if len(inputs.shape) == 3 else P(bax_or_none, None)
+    out_shapes = jax.eval_shape(fn, pshapes, inputs)
+    if cfg.family == "encdec":
+        out_sh = decode_state_specs(out_shapes, cfg, mesh, B)
+    else:
+        logits_spec = P(bax_or_none, None)
+        state_spec = decode_state_specs(out_shapes[1], cfg, mesh, B)
+        out_sh = (logits_spec, state_spec)
+    return CellProgram("prefill", fn, (pshapes, inputs), (pspecs, in_spec), out_sh)
+
+
+def build_decode_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh) -> CellProgram:
+    B, N = shape.global_batch, shape.seq_len
+    bax = sh.batch_axes(cfg, mesh, B)
+    bax_or_none = bax if bax else None
+
+    if cfg.family == "encdec":
+        enc = sds((B, WHISPER_ENC_FRAMES, cfg.d_model), cfg.act_dtype)
+        state_shapes = jax.eval_shape(
+            lambda p, e: W.init_encdec_decode_state(p, cfg, e, B, N),
+            serving_params(cfg), enc,
+        )
+        step_fn = lambda params, token_t, state: W.encdec_decode_step(params, cfg, token_t, state)
+    else:
+        state_shapes = jax.eval_shape(lambda: T.init_decode_state(cfg, B, N))
+        step_fn = lambda params, token_t, state: T.decode_step(params, cfg, token_t, state)
+
+    pshapes = serving_params(cfg)
+    pspecs = sh.param_specs(pshapes, cfg, mesh)
+    sspecs = decode_state_specs(state_shapes, cfg, mesh, B)
+    token = sds((B,), jnp.int32)
+    out_sh = (P(bax_or_none, None), sspecs)
+    return CellProgram(
+        "decode", step_fn, (pshapes, token, state_shapes),
+        (pspecs, P(bax_or_none), sspecs), out_sh, donate_argnums=(2,),
+    )
+
+
+def build_cell_program(arch: str, shape_name: str, mesh: Mesh,
+                       variant: str = "native",
+                       tcfg: Optional[TrainConfig] = None) -> CellProgram:
+    cfg = configs_lib.get_config(arch, variant)
+    shape = configs_lib.SHAPES[shape_name]
+    if shape.kind == "train":
+        return build_train_step(cfg, shape, mesh, tcfg)
+    if shape.kind == "prefill":
+        return build_prefill_step(cfg, shape, mesh)
+    return build_decode_step(cfg, shape, mesh)
+
+
+def lower_cell(prog: CellProgram, mesh: Mesh):
+    """jit with shardings under the mesh; returns the Lowered object."""
+    named = lambda tree: jax.tree_util.tree_map(
+        lambda sp: NamedSharding(mesh, sp), tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+    jitted = jax.jit(
+        prog.fn,
+        in_shardings=named(prog.in_shardings),
+        out_shardings=named(prog.out_shardings),
+        donate_argnums=prog.donate_argnums,
+    )
+    with mesh:
+        return jitted.lower(*prog.args)

@@ -1,0 +1,2 @@
+"""Model zoo: shared layers, attention, MoE, transformer LM, xLSTM, RG-LRU
+hybrid, Whisper enc-dec, and the VLM backbone wrapper."""

@@ -1,0 +1,249 @@
+"""Softmax attention (the paper's baseline): GQA/MQA, RoPE, local windows,
+flash-style blockwise computation for long sequences, and a KV cache for
+decode. Pure JAX — on TPU the blockwise path lowers to an efficient fused
+loop; it exists mainly so prefill_32k never materializes an N x N matrix.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class AttentionConfig:
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int = 0  # 0 -> d_model // num_heads
+    qkv_bias: bool = False
+    rope_fraction: float = 1.0  # 0.0 disables RoPE; 0.5 = ChatGLM 2d-RoPE
+    rope_theta: float = 10000.0
+    causal: bool = True
+    window: int = 0  # >0: local sliding-window attention
+    block_q: int = 512
+    block_kv: int = 1024
+    blockwise_threshold: int = 8192  # use blockwise path for N >= this
+    param_dtype: Any = jnp.float32
+
+    @property
+    def dh(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+
+def init_attention(key, cfg: AttentionConfig):
+    ks = jax.random.split(key, 4)
+    d, dh = cfg.d_model, cfg.dh
+    p = {
+        "wq": L.lecun_normal(ks[0], (d, cfg.num_heads * dh), dtype=cfg.param_dtype),
+        "wk": L.lecun_normal(ks[1], (d, cfg.num_kv_heads * dh), dtype=cfg.param_dtype),
+        "wv": L.lecun_normal(ks[2], (d, cfg.num_kv_heads * dh), dtype=cfg.param_dtype),
+        "wo": L.lecun_normal(
+            ks[3], (cfg.num_heads * dh, d), fan_in=cfg.num_heads * dh, dtype=cfg.param_dtype
+        ),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.num_heads * dh,), cfg.param_dtype)
+        p["bk"] = jnp.zeros((cfg.num_kv_heads * dh,), cfg.param_dtype)
+        p["bv"] = jnp.zeros((cfg.num_kv_heads * dh,), cfg.param_dtype)
+    return p
+
+
+def _qkv(params, cfg: AttentionConfig, x, positions):
+    B, N, _ = x.shape
+    dh = cfg.dh
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if cfg.qkv_bias:
+        # biases stay fp32 under the mixed-precision policy; keep act dtype
+        q = (q + params["bq"]).astype(x.dtype)
+        k = (k + params["bk"]).astype(x.dtype)
+        v = (v + params["bv"]).astype(x.dtype)
+    q = q.reshape(B, N, cfg.num_heads, dh)
+    k = k.reshape(B, N, cfg.num_kv_heads, dh)
+    v = v.reshape(B, N, cfg.num_kv_heads, dh)
+    if cfg.rope_fraction > 0:
+        rot = int(dh * cfg.rope_fraction)
+        rot -= rot % 2
+        sin, cos = L.rope_angles(positions, rot, cfg.rope_theta)
+        q = L.apply_rope(q, sin, cos, cfg.rope_fraction)
+        k = L.apply_rope(k, sin, cos, cfg.rope_fraction)
+    return q, k, v
+
+
+def _mask_bias(nq, nk, q_off, cfg: AttentionConfig, dtype=jnp.float32):
+    """Additive mask block for query rows [q_off, q_off+nq) vs keys [0, nk)."""
+    qi = jnp.arange(nq)[:, None] + q_off
+    kj = jnp.arange(nk)[None, :]
+    ok = jnp.ones((nq, nk), bool)
+    if cfg.causal:
+        ok &= kj <= qi
+    if cfg.window > 0:
+        ok &= kj > qi - cfg.window
+    return jnp.where(ok, 0.0, NEG_INF).astype(dtype)
+
+
+def _sdpa_dense(q, k, v, cfg: AttentionConfig, q_off=0):
+    """Reference einsum attention. q [B,Nq,H,dh], k/v [B,Nk,Hkv,dh]."""
+    B, Nq, H, dh = q.shape
+    Nk = k.shape[1]
+    G = H // cfg.num_kv_heads
+    qg = q.reshape(B, Nq, cfg.num_kv_heads, G, dh)
+    scores = jnp.einsum("bnkgd,bmkd->bkgnm", qg, k) / math.sqrt(dh)
+    scores = scores + _mask_bias(Nq, Nk, q_off, cfg)[None, None, None]
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgnm,bmkd->bnkgd", probs, v)
+    return out.reshape(B, Nq, H, dh)
+
+
+def _sdpa_blockwise(q, k, v, cfg: AttentionConfig):
+    """Flash-style online-softmax attention over KV blocks (O(N) memory)."""
+    B, N, H, dh = q.shape
+    G = H // cfg.num_kv_heads
+    bq, bkv = min(cfg.block_q, N), min(cfg.block_kv, N)
+    nq, nkv = -(-N // bq), -(-N // bkv)
+    pad_q, pad_kv = nq * bq - N, nkv * bkv - N
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+    qb = qp.reshape(B, nq, bq, cfg.num_kv_heads, G, dh)
+    kb = kp.reshape(B, nkv, bkv, cfg.num_kv_heads, dh)
+    vb = vp.reshape(B, nkv, bkv, cfg.num_kv_heads, dh)
+    kv_valid = (jnp.arange(nkv * bkv) < N).reshape(nkv, bkv)
+
+    def per_qblock(qi, q_blk):
+        # q_blk [B, bq, Hkv, G, dh]
+        m0 = jnp.full((B, cfg.num_kv_heads, G, bq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, cfg.num_kv_heads, G, bq), jnp.float32)
+        acc0 = jnp.zeros((B, bq, cfg.num_kv_heads, G, dh), jnp.float32)
+
+        def body(carry, inputs):
+            m, l, acc = carry
+            kj, k_blk, v_blk, valid = inputs
+            s = jnp.einsum("bnkgd,bmkd->bkgnm", q_blk, k_blk) / math.sqrt(dh)
+            qpos = qi * bq + jnp.arange(bq)[:, None]
+            kpos = kj * bkv + jnp.arange(bkv)[None, :]
+            ok = valid[None, :]
+            if cfg.causal:
+                ok = ok & (kpos <= qpos)
+            if cfg.window > 0:
+                ok = ok & (kpos > qpos - cfg.window)
+            s = jnp.where(ok[None, None, None], s.astype(jnp.float32), NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            acc_new = acc * corr.transpose(0, 3, 1, 2)[..., None] + jnp.einsum(
+                "bkgnm,bmkd->bnkgd", p, v_blk
+            )
+            return (m_new, l_new, acc_new), None
+
+        (m, l, acc), _ = jax.lax.scan(
+            body,
+            (m0, l0, acc0),
+            (jnp.arange(nkv), jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0), kv_valid),
+        )
+        out = acc / jnp.maximum(l, 1e-30).transpose(0, 3, 1, 2)[..., None]
+        return out.astype(q.dtype)
+
+    outs = jax.lax.map(lambda args: per_qblock(*args), (jnp.arange(nq), jnp.moveaxis(qb, 1, 0)))
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, nq * bq, H, dh)
+    return out[:, :N]
+
+
+def apply_attention(
+    params,
+    cfg: AttentionConfig,
+    x: jax.Array,
+    *,
+    positions: Optional[jax.Array] = None,
+    force_dense: bool = False,
+):
+    """Full-sequence attention. x [B, N, d] -> [B, N, d]."""
+    B, N, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(N)
+    q, k, v = _qkv(params, cfg, x, positions)
+    if N >= cfg.blockwise_threshold and not force_dense:
+        out = _sdpa_blockwise(q, k, v, cfg)
+    else:
+        out = _sdpa_dense(q, k, v, cfg)
+    return out.reshape(B, N, -1) @ params["wo"]
+
+
+# ---------------------------------------------------------------------------
+# KV cache (decode)
+# ---------------------------------------------------------------------------
+
+
+def init_kv_cache(cfg: AttentionConfig, batch: int, max_len: int, dtype=jnp.float32):
+    """Ring buffer when windowed (bounded memory), linear buffer otherwise."""
+    size = min(max_len, cfg.window) if cfg.window > 0 else max_len
+    return {
+        "k": jnp.zeros((batch, size, cfg.num_kv_heads, cfg.dh), dtype),
+        "v": jnp.zeros((batch, size, cfg.num_kv_heads, cfg.dh), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def apply_attention_step(params, cfg: AttentionConfig, x_t: jax.Array, cache: dict):
+    """One decode step. x_t [B, d] -> (y_t [B, d], cache')."""
+    B, d = x_t.shape
+    pos = cache["pos"]
+    q, k, v = _qkv(params, cfg, x_t[:, None, :], jnp.asarray(pos)[None])
+    size = cache["k"].shape[1]
+    slot = pos % size if cfg.window > 0 else pos
+    ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+    # attend over valid cache entries
+    G = cfg.num_heads // cfg.num_kv_heads
+    qg = q.reshape(B, 1, cfg.num_kv_heads, G, cfg.dh)
+    s = jnp.einsum("bnkgd,bmkd->bkgnm", qg, ck) / math.sqrt(cfg.dh)
+    idx = jnp.arange(size)
+    if cfg.window > 0:
+        valid = (idx <= slot) | (pos >= size)  # ring: all slots valid once full
+        age_ok = jnp.ones_like(valid)
+        ok = valid & age_ok
+    else:
+        ok = idx <= pos
+    s = jnp.where(ok[None, None, None, None, :], s.astype(jnp.float32), NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(x_t.dtype)
+    o = jnp.einsum("bkgnm,bmkd->bnkgd", p, cv).reshape(B, 1, -1)
+    y = (o @ params["wo"])[:, 0]
+    return y, {"k": ck, "v": cv, "pos": pos + 1}
+
+
+def prefill_kv_cache(params, cfg: AttentionConfig, x: jax.Array, max_len: int):
+    """Run full attention AND build the cache for subsequent decode."""
+    B, N, _ = x.shape
+    positions = jnp.arange(N)
+    q, k, v = _qkv(params, cfg, x, positions)
+    out = (
+        _sdpa_blockwise(q, k, v, cfg)
+        if N >= cfg.blockwise_threshold
+        else _sdpa_dense(q, k, v, cfg)
+    )
+    y = out.reshape(B, N, -1) @ params["wo"]
+    cache = init_kv_cache(cfg, B, max_len, dtype=x.dtype)
+    size = cache["k"].shape[1]
+    if cfg.window > 0 and N > size:
+        k_keep, v_keep = k[:, -size:], v[:, -size:]
+        # ring layout: slot i holds absolute position N-size+i ... keep aligned
+        # by rotating so that slot (N mod size) is the next write position.
+        shift = N % size
+        k_keep = jnp.roll(k_keep, shift, axis=1)
+        v_keep = jnp.roll(v_keep, shift, axis=1)
+        cache["k"], cache["v"] = k_keep, v_keep
+    else:
+        cache["k"] = jax.lax.dynamic_update_slice(cache["k"], k, (0, 0, 0, 0))
+        cache["v"] = jax.lax.dynamic_update_slice(cache["v"], v, (0, 0, 0, 0))
+    cache["pos"] = jnp.asarray(N, jnp.int32)
+    return y, cache

@@ -1,0 +1,173 @@
+"""Shared neural-net layers (pure JAX): norms, dense, embeddings, RoPE, FFN.
+
+Naming conventions matter: the distributed runtime assigns shardings by
+parameter *path* (see ``repro/distributed/sharding.py``), so keys like
+``"w1"``, ``"embed"``, ``"wq"`` are part of the contract.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import lecun_normal, trunc_normal
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def init_rmsnorm(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rms_norm(params, x, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"]).astype(dtype)
+
+
+def init_layernorm(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layer_norm(params, x, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = x.mean(-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"] + params["bias"]).astype(dtype)
+
+
+def init_norm(kind: str, d: int, dtype=jnp.float32):
+    return init_layernorm(d, dtype) if kind == "layernorm" else init_rmsnorm(d, dtype)
+
+
+def apply_norm(kind: str, params, x):
+    return layer_norm(params, x) if kind == "layernorm" else rms_norm(params, x)
+
+
+# ---------------------------------------------------------------------------
+# Dense / embedding
+# ---------------------------------------------------------------------------
+
+
+def init_dense(key, d_in: int, d_out: int, bias: bool = False, dtype=jnp.float32):
+    p = {"kernel": lecun_normal(key, (d_in, d_out), dtype=dtype)}
+    if bias:
+        p["bias"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(params, x):
+    y = x @ params["kernel"]
+    if "bias" in params:
+        y = y + params["bias"]
+    return y
+
+
+def init_embedding(key, vocab: int, d: int, dtype=jnp.float32):
+    return {"embed": trunc_normal(key, (vocab, d), stddev=1.0, dtype=dtype)}
+
+
+def embed(params, tokens):
+    return jnp.take(params["embed"], tokens, axis=0)
+
+
+def unembed(params, x):
+    """Tied read-out: logits = x @ embed.T (scaled)."""
+    return x @ params["embed"].T
+
+
+# ---------------------------------------------------------------------------
+# Positional encodings
+# ---------------------------------------------------------------------------
+
+
+def sinusoidal_pe(n: int, d: int, offset=0, dtype=jnp.float32):
+    pos = jnp.arange(n)[:, None] + offset
+    dim = jnp.arange(0, d, 2)[None, :]
+    angle = pos / jnp.power(10000.0, dim / d)
+    pe = jnp.zeros((n, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(angle))
+    pe = pe.at[:, 1::2].set(jnp.cos(angle[:, : (d + 1) // 2]))
+    return pe.astype(dtype)
+
+
+def rope_angles(positions: jax.Array, rot_dim: int, theta: float = 10000.0):
+    """positions [...,N] -> (sin, cos) of shape [..., N, rot_dim//2]."""
+    freq = 1.0 / (theta ** (jnp.arange(0, rot_dim, 2, dtype=jnp.float32) / rot_dim))
+    ang = positions[..., None].astype(jnp.float32) * freq
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x: jax.Array, sin: jax.Array, cos: jax.Array, fraction: float = 1.0):
+    """Rotary embedding on the leading ``fraction`` of head dims.
+
+    x: [B, N, H, dh]; sin/cos: [N, rot//2] (or broadcastable [B, N, rot//2]).
+    ``fraction=0.5`` reproduces ChatGLM's 2d-RoPE (rotate half the dims).
+    """
+    dh = x.shape[-1]
+    rot = int(dh * fraction)
+    rot -= rot % 2
+    if rot == 0:
+        return x
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    x1, x2 = x_rot[..., 0::2], x_rot[..., 1::2]
+    # broadcast sin/cos over head axis: [.., N, 1, rot/2]
+    s = sin[..., :, None, :]
+    c = cos[..., :, None, :]
+    y1 = x1 * c - x2 * s
+    y2 = x2 * c + x1 * s
+    y = jnp.stack([y1, y2], axis=-1).reshape(x_rot.shape)
+    return jnp.concatenate([y, x_pass], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Feed-forward
+# ---------------------------------------------------------------------------
+
+
+def init_ffn(key, d: int, d_ff: int, act: str = "swiglu", dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    if act == "swiglu":
+        return {
+            "w1": lecun_normal(ks[0], (d, d_ff), dtype=dtype),   # gate
+            "w3": lecun_normal(ks[1], (d, d_ff), dtype=dtype),   # up
+            "w2": lecun_normal(ks[2], (d_ff, d), fan_in=d_ff, dtype=dtype),
+        }
+    return {
+        "w1": lecun_normal(ks[0], (d, d_ff), dtype=dtype),
+        "w2": lecun_normal(ks[2], (d_ff, d), fan_in=d_ff, dtype=dtype),
+        "b1": jnp.zeros((d_ff,), dtype),
+        "b2": jnp.zeros((d,), dtype),
+    }
+
+
+def ffn(params, x, act: str = "swiglu"):
+    if act == "swiglu":
+        return (jax.nn.silu(x @ params["w1"]) * (x @ params["w3"])) @ params["w2"]
+    h = jax.nn.gelu(x @ params["w1"] + params["b1"])
+    return h @ params["w2"] + params["b2"]
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array, mask: Optional[jax.Array] = None):
+    """Token-mean cross entropy. logits [..., V] float, labels int."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - ll
+    if mask is not None:
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()

@@ -1,0 +1,112 @@
+"""Griffin / RecurrentGemma recurrent block (arXiv:2402.19427).
+
+Block = two parallel branches over the normed input:
+  gate branch:  gelu(x W_gate)
+  rec branch:   x W_x -> causal depthwise conv (width 4) -> RG-LRU
+output = (gate * rec) W_out.
+
+RG-LRU (real gated linear recurrence unit, per channel):
+  r_t = sigmoid(x_t W_a + b_a)          recurrence gate
+  i_t = sigmoid(x_t W_i + b_i)          input gate
+  a_t = exp(c * r_t * log(a_param))     with a_param = sigmoid(Lambda), c = 8
+  h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+The recurrence is linear with input-dependent decay, so training uses the
+shared associative-scan engine (repro.core.scan) — the same machinery as the
+paper's STLT, with dynamic real poles instead of static complex ones.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import scan as scan_lib
+from repro.models import layers as L
+from repro.utils import lecun_normal
+
+CONV_W = 4
+C_EXP = 8.0
+
+
+def init_rglru_block(key, cfg) -> dict:
+    d = cfg.d_model
+    ks = jax.random.split(key, 7)
+    # a_param init so that a^c is in ~[0.9, 0.999] (long memory at init)
+    lam0 = jax.random.uniform(ks[4], (d,), jnp.float32, 0.9, 0.999)
+    lambda_init = jnp.log(lam0 ** (1.0 / C_EXP) / (1 - lam0 ** (1.0 / C_EXP)))
+    return {
+        "w_gate": lecun_normal(ks[0], (d, d), dtype=cfg.p_dtype),
+        "w_x": lecun_normal(ks[1], (d, d), dtype=cfg.p_dtype),
+        "conv": 0.1 * jax.random.normal(ks[2], (CONV_W, d), cfg.p_dtype),
+        "w_a": lecun_normal(ks[3], (d, d), dtype=cfg.p_dtype),
+        "b_a": jnp.zeros((d,), cfg.p_dtype),
+        "w_i": lecun_normal(ks[5], (d, d), dtype=cfg.p_dtype),
+        "b_i": jnp.zeros((d,), cfg.p_dtype),
+        "lam": lambda_init.astype(cfg.p_dtype),
+        "w_out": lecun_normal(ks[6], (d, d), dtype=cfg.p_dtype),
+    }
+
+
+def _conv_causal(x, w):
+    out = w[-1] * x
+    for t in range(CONV_W - 1):
+        shift = CONV_W - 1 - t
+        out = out + w[t] * jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, : x.shape[1]]
+    return out
+
+
+def _rglru_gates(params, xc):
+    """a_t [.., d] in (0,1) and gated input."""
+    log_a_param = jax.nn.log_sigmoid(params["lam"].astype(jnp.float32))  # log sigmoid(Lambda)
+    r = jax.nn.sigmoid((xc @ params["w_a"] + params["b_a"]).astype(jnp.float32))
+    i = jax.nn.sigmoid((xc @ params["w_i"] + params["b_i"]).astype(jnp.float32))
+    log_a = C_EXP * r * log_a_param
+    a = jnp.exp(log_a)
+    gated_in = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-8)) * (i * xc.astype(jnp.float32))
+    return a, gated_in
+
+
+def apply_rglru_block(params, cfg, x):
+    B, N, d = x.shape
+    gate = jax.nn.gelu(x @ params["w_gate"])
+    xr = x @ params["w_x"]
+    xc = _conv_causal(xr, params["conv"])
+    a, b = _rglru_gates(params, xc)
+    h = scan_lib.scan_associative(a, b, axis=-2)  # input-dependent real poles
+    h = h.astype(x.dtype)
+    return (gate * h) @ params["w_out"]
+
+
+def rglru_prefill(params, cfg, x):
+    """Parallel prefill: outputs + final recurrent state + conv buffer."""
+    B, N, d = x.shape
+    gate = jax.nn.gelu(x @ params["w_gate"])
+    xr = x @ params["w_x"]
+    xc = _conv_causal(xr, params["conv"])
+    a, b = _rglru_gates(params, xc)
+    h = scan_lib.scan_associative(a, b, axis=-2)
+    y = (gate * h.astype(x.dtype)) @ params["w_out"]
+    buf = jnp.zeros((B, CONV_W - 1, d), jnp.float32)
+    take = min(CONV_W - 1, N)
+    if take:
+        buf = buf.at[:, CONV_W - 1 - take:].set(xr[:, N - take:].astype(jnp.float32))
+    return y, {"h": h[:, -1], "conv_buf": buf}
+
+
+def init_rglru_state(cfg, batch: int):
+    d = cfg.d_model
+    return {
+        "h": jnp.zeros((batch, d), jnp.float32),
+        "conv_buf": jnp.zeros((batch, CONV_W - 1, d), jnp.float32),
+    }
+
+
+def apply_rglru_step(params, cfg, x_t, state):
+    gate = jax.nn.gelu(x_t @ params["w_gate"])
+    xr = (x_t @ params["w_x"]).astype(jnp.float32)
+    window = jnp.concatenate([state["conv_buf"], xr[:, None]], axis=1)
+    xc = jnp.einsum("bwd,wd->bd", window, params["conv"].astype(jnp.float32))
+    a, b = _rglru_gates(params, xc.astype(x_t.dtype))
+    h = a * state["h"] + b
+    y = (gate * h.astype(x_t.dtype)) @ params["w_out"]
+    return y, {"h": h, "conv_buf": window[:, 1:]}

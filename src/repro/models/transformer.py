@@ -1,0 +1,430 @@
+"""Decoder-only transformer LM with pluggable token mixers.
+
+Block types (``ModelConfig.block_types()``):
+  attn       — GQA softmax attention (baseline)
+  local_attn — sliding-window attention (recurrentgemma's attention third)
+  stlt       — the paper's factorized STLT (linear)
+  stlt_rel   — the paper's relevance-softmax STLT (figure formulation)
+  mlstm/slstm— xLSTM cells (models/xlstm.py)
+  rglru      — Griffin RG-LRU recurrent block (models/rglru.py)
+
+Runs of consecutive identical block types are stacked and executed with
+``jax.lax.scan`` (scan-over-layers) so a 94-layer model lowers as one layer
+body — essential for compile time and HLO size at dry-run scale. Remat wraps
+each block body.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import stlt as stlt_lib
+from repro.models import attention as attn_lib
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+from repro.models import rglru as rglru_lib
+from repro.models import xlstm as xlstm_lib
+from repro.utils import fold_key, trunc_normal
+
+AUX_KEYS = ("reg", "aux_loss", "router_z", "s_eff")
+
+
+def _zero_aux():
+    return {k: jnp.zeros((), jnp.float32) for k in AUX_KEYS}
+
+
+def _attn_cfg(cfg: ModelConfig, window: int = 0) -> attn_lib.AttentionConfig:
+    return attn_lib.AttentionConfig(
+        d_model=cfg.d_model,
+        num_heads=cfg.num_heads,
+        num_kv_heads=cfg.num_kv_heads,
+        head_dim=cfg.head_dim,
+        qkv_bias=cfg.qkv_bias,
+        rope_fraction=cfg.rope_fraction,
+        rope_theta=cfg.rope_theta,
+        causal=True,
+        window=window,
+        blockwise_threshold=cfg.blockwise_threshold,
+        param_dtype=cfg.p_dtype,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+
+def init_block(key, cfg: ModelConfig, block_type: str) -> dict:
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    p: dict = {"norm1": L.init_norm(cfg.norm, d, cfg.p_dtype)}
+    if block_type in ("attn", "local_attn"):
+        window = cfg.local_window if block_type == "local_attn" else 0
+        p["attn"] = attn_lib.init_attention(ks[0], _attn_cfg(cfg, window))
+    elif block_type in ("stlt", "stlt_rel"):
+        p["stlt"] = stlt_lib.init_stlt(ks[0], cfg.stlt_config())
+    elif block_type == "mlstm":
+        p["cell"] = xlstm_lib.init_mlstm(ks[0], cfg)
+    elif block_type == "slstm":
+        p["cell"] = xlstm_lib.init_slstm(ks[0], cfg)
+    elif block_type == "rglru":
+        p["rec"] = rglru_lib.init_rglru_block(ks[0], cfg)
+    else:
+        raise ValueError(block_type)
+    # xLSTM blocks have no separate FFN sub-block (the cell embeds projections)
+    if block_type not in ("mlstm", "slstm"):
+        p["norm2"] = L.init_norm(cfg.norm, d, cfg.p_dtype)
+        if cfg.is_moe:
+            p["moe"] = moe_lib.init_moe(ks[1], cfg.moe_config())
+        else:
+            p["ffn"] = L.init_ffn(ks[1], d, cfg.d_ff, act=cfg.act, dtype=cfg.p_dtype)
+    return p
+
+
+def apply_block(
+    params: dict,
+    cfg: ModelConfig,
+    block_type: str,
+    x: jax.Array,
+    *,
+    rng: Optional[jax.Array] = None,
+    deterministic: bool = True,
+    tau: Optional[jax.Array] = None,
+):
+    aux = _zero_aux()
+    h = L.apply_norm(cfg.norm, params["norm1"], x)
+    if block_type in ("attn", "local_attn"):
+        window = cfg.local_window if block_type == "local_attn" else 0
+        mixed = attn_lib.apply_attention(params["attn"], _attn_cfg(cfg, window), h)
+    elif block_type in ("stlt", "stlt_rel"):
+        mixed, sa = stlt_lib.apply_stlt(
+            params["stlt"], cfg.stlt_config(), h,
+            rng=rng, deterministic=deterministic, tau=tau,
+        )
+        aux["reg"] = sa["reg"].astype(jnp.float32)
+        aux["s_eff"] = sa["s_eff"].mean().astype(jnp.float32)
+    elif block_type == "mlstm":
+        mixed = xlstm_lib.apply_mlstm(params["cell"], cfg, h)
+    elif block_type == "slstm":
+        mixed = xlstm_lib.apply_slstm(params["cell"], cfg, h)
+    elif block_type == "rglru":
+        mixed = rglru_lib.apply_rglru_block(params["rec"], cfg, h)
+    else:
+        raise ValueError(block_type)
+    x = x + mixed.astype(x.dtype)
+    if "norm2" in params:
+        h2 = L.apply_norm(cfg.norm, params["norm2"], x)
+        if cfg.is_moe:
+            y, ma = moe_lib.apply_moe(params["moe"], cfg.moe_config(), h2)
+            aux["aux_loss"] = ma["aux_loss"].astype(jnp.float32)
+            aux["router_z"] = ma["router_z"].astype(jnp.float32)
+        else:
+            y = L.ffn(params["ffn"], h2, act=cfg.act)
+        x = x + y.astype(x.dtype)
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# Whole model
+# ---------------------------------------------------------------------------
+
+
+def execution_plan(cfg: ModelConfig):
+    """(block_type, count) runs. count > 1 => stacked + lax.scan'd.
+
+    The plan is a pure function of the config, so the params pytree holds
+    only arrays (optimizers/checkpointing never see structure metadata).
+    """
+    groups: list[list] = []
+    for t in cfg.block_types():
+        if groups and groups[-1][0] == t:
+            groups[-1][1] += 1
+        else:
+            groups.append([t, 1])
+    plan = []
+    for t, c in groups:
+        if cfg.scan_layers and c > 1:
+            plan.append((t, c))
+        else:
+            plan.extend((t, 1) for _ in range(c))
+    return tuple(plan)
+
+
+def init_lm(key, cfg: ModelConfig) -> dict:
+    ks = iter(jax.random.split(key, 4))
+    params: dict = {}
+    if cfg.input_mode in ("tokens", "both"):
+        params["embed"] = {
+            "embed": trunc_normal(next(ks), (cfg.vocab, cfg.d_model), stddev=0.02, dtype=cfg.p_dtype)
+        }
+    layers = []
+    li = 0
+    for btype, count in execution_plan(cfg):
+        if count > 1:
+            stack = [init_block(fold_key(key, 1000 + li + j), cfg, btype) for j in range(count)]
+            layers.append(jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *stack))
+        else:
+            layers.append(init_block(fold_key(key, 1000 + li), cfg, btype))
+        li += count
+    params["layers"] = layers
+    params["final_norm"] = L.init_norm(cfg.norm, cfg.d_model, cfg.p_dtype)
+    if not cfg.tie_embeddings or cfg.input_mode == "embeddings":
+        params["lm_head"] = {
+            "kernel": trunc_normal(next(ks), (cfg.d_model, cfg.vocab), stddev=0.02, dtype=cfg.p_dtype)
+        }
+    return params
+
+
+def _maybe_remat(fn, cfg: ModelConfig):
+    if not cfg.remat:
+        return fn
+    policy = None
+    if cfg.remat_policy == "dots":
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    return jax.checkpoint(fn, prevent_cse=False, policy=policy)
+
+
+def apply_lm(
+    params: dict,
+    cfg: ModelConfig,
+    inputs: jax.Array,
+    *,
+    rng: Optional[jax.Array] = None,
+    deterministic: bool = True,
+    tau: Optional[jax.Array] = None,
+):
+    """Forward pass. inputs: int tokens [B, N] or embeddings [B, N, d].
+
+    Returns (logits [B, N, V], aux).
+    """
+    if jnp.issubdtype(inputs.dtype, jnp.integer):
+        x = L.embed(params["embed"], inputs).astype(cfg.act_dtype)
+    else:  # precomputed embeddings (VLM patch/audio-frame stubs)
+        x = inputs.astype(cfg.act_dtype)
+    B, N = x.shape[0], x.shape[1]
+    if cfg.mixer != "attention" or cfg.family in ("xlstm",):
+        # STLT/SSM paths carry no RoPE -> absolute sinusoidal PE (paper: X+P)
+        x = x + L.sinusoidal_pe(N, cfg.d_model, dtype=x.dtype)[None]
+
+    total_aux = _zero_aux()
+    rng = rng if rng is not None else jax.random.key(0)
+    li = 0
+    for (btype, count), stacked in zip(execution_plan(cfg), params["layers"]):
+        if count > 1:
+            keys = jax.random.split(fold_key(rng, li), count)
+
+            def body(carry, scanned):
+                x_in, aux_in = carry
+                layer_params, k = scanned
+                x_out, aux = apply_block(
+                    layer_params, cfg, btype, x_in,
+                    rng=k, deterministic=deterministic, tau=tau,
+                )
+                aux_out = {kk: aux_in[kk] + aux[kk] for kk in AUX_KEYS}
+                return (x_out, aux_out), None
+
+            body = _maybe_remat(body, cfg)
+            (x, total_aux), _ = jax.lax.scan(body, (x, total_aux), (stacked, keys))
+        else:
+            fn = _maybe_remat(
+                lambda p, xx: apply_block(
+                    p, cfg, btype, xx, rng=fold_key(rng, li),
+                    deterministic=deterministic, tau=tau,
+                ),
+                cfg,
+            )
+            x, aux = fn(stacked, x)
+            total_aux = {kk: total_aux[kk] + aux[kk] for kk in AUX_KEYS}
+        li += count
+
+    x = L.apply_norm(cfg.norm, params["final_norm"], x)
+    if "lm_head" in params:
+        logits = x @ params["lm_head"]["kernel"]
+    else:
+        logits = L.unembed(params["embed"], x)
+    nl = max(1, cfg.num_layers)
+    total_aux["s_eff"] = total_aux["s_eff"] / nl
+    return logits, total_aux
+
+
+def lm_loss(
+    params: dict,
+    cfg: ModelConfig,
+    batch: dict,
+    *,
+    rng: Optional[jax.Array] = None,
+    deterministic: bool = False,
+    tau: Optional[jax.Array] = None,
+):
+    """batch: {"inputs": [B,N] or [B,N,d], "labels": [B,N], optional "mask"}."""
+    logits, aux = apply_lm(
+        params, cfg, batch["inputs"], rng=rng, deterministic=deterministic, tau=tau
+    )
+    ce = L.cross_entropy(logits, batch["labels"], batch.get("mask"))
+    loss = ce + aux["reg"] + aux["aux_loss"] + aux["router_z"]
+    metrics = {"loss": loss, "ce": ce, **{k: aux[k] for k in AUX_KEYS}}
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# Decode (serving)
+# ---------------------------------------------------------------------------
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int):
+    """Per-layer caches, mirroring the execution plan's group structure."""
+    states = []
+    for btype, count in execution_plan(cfg):
+        one = _init_block_state(cfg, btype, batch, max_len)
+        if count > 1:
+            st = jax.tree_util.tree_map(
+                lambda x: jnp.zeros((count,) + x.shape, x.dtype), one
+            )
+        else:
+            st = one
+        states.append(st)
+    return {"layers": states, "pos": jnp.zeros((), jnp.int32)}
+
+
+def _init_block_state(cfg: ModelConfig, btype: str, batch: int, max_len: int):
+    dtype = cfg.act_dtype
+    if btype in ("attn", "local_attn"):
+        window = cfg.local_window if btype == "local_attn" else 0
+        return attn_lib.init_kv_cache(_attn_cfg(cfg, window), batch, max_len, dtype)
+    if btype in ("stlt", "stlt_rel"):
+        return stlt_lib.init_stlt_state(cfg.stlt_config(), batch, jnp.float32)
+    if btype == "mlstm":
+        return xlstm_lib.init_mlstm_state(cfg, batch)
+    if btype == "slstm":
+        return xlstm_lib.init_slstm_state(cfg, batch)
+    if btype == "rglru":
+        return rglru_lib.init_rglru_state(cfg, batch)
+    raise ValueError(btype)
+
+
+def _block_prefill(params, cfg: ModelConfig, btype: str, x, max_len: int):
+    """Full-sequence forward + cache construction for one block."""
+    h = L.apply_norm(cfg.norm, params["norm1"], x)
+    if btype in ("attn", "local_attn"):
+        window = cfg.local_window if btype == "local_attn" else 0
+        mixed, state = attn_lib.prefill_kv_cache(params["attn"], _attn_cfg(cfg, window), h, max_len)
+    elif btype == "stlt":
+        mixed, state = stlt_lib.stlt_prefill(params["stlt"], cfg.stlt_config(), h)
+    elif btype == "mlstm":
+        mixed, state = xlstm_lib.mlstm_prefill(params["cell"], cfg, h)
+    elif btype == "slstm":
+        mixed, state = xlstm_lib.slstm_prefill(params["cell"], cfg, h)
+    elif btype == "rglru":
+        mixed, state = rglru_lib.rglru_prefill(params["rec"], cfg, h)
+    else:
+        raise ValueError(f"prefill unsupported for block type {btype!r}")
+    x = x + mixed.astype(x.dtype)
+    if "norm2" in params:
+        h2 = L.apply_norm(cfg.norm, params["norm2"], x)
+        if cfg.is_moe:
+            y, _ = moe_lib.apply_moe(params["moe"], cfg.moe_config(), h2)
+        else:
+            y = L.ffn(params["ffn"], h2, act=cfg.act)
+        x = x + y.astype(x.dtype)
+    return x, state
+
+
+def prefill(params: dict, cfg: ModelConfig, inputs: jax.Array, max_len: int):
+    """Parallel prefill over the whole prompt: (last-token logits, decode state).
+
+    inputs: int tokens [B, N] or embeddings [B, N, d].
+    """
+    if jnp.issubdtype(inputs.dtype, jnp.integer):
+        x = L.embed(params["embed"], inputs).astype(cfg.act_dtype)
+    else:
+        x = inputs.astype(cfg.act_dtype)
+    B, N = x.shape[0], x.shape[1]
+    if cfg.mixer != "attention" or cfg.family in ("xlstm",):
+        x = x + L.sinusoidal_pe(N, cfg.d_model, dtype=x.dtype)[None]
+
+    states = []
+    for (btype, count), stacked in zip(execution_plan(cfg), params["layers"]):
+        if count > 1:
+
+            def body(x_in, layer_params):
+                x_out, st = _block_prefill(layer_params, cfg, btype, x_in, max_len)
+                return x_out, st
+
+            x, st = jax.lax.scan(body, x, stacked)
+        else:
+            x, st = _block_prefill(stacked, cfg, btype, x, max_len)
+        states.append(st)
+
+    x_last = L.apply_norm(cfg.norm, params["final_norm"], x[:, -1:, :])[:, 0]
+    if "lm_head" in params:
+        logits = x_last @ params["lm_head"]["kernel"]
+    else:
+        logits = L.unembed(params["embed"], x_last)
+    return logits, {"layers": states, "pos": jnp.asarray(N, jnp.int32)}
+
+
+def _block_step(params, cfg: ModelConfig, btype: str, x_t, state, pos):
+    h = L.apply_norm(cfg.norm, params["norm1"], x_t[:, None, :])[:, 0]
+    if btype in ("attn", "local_attn"):
+        window = cfg.local_window if btype == "local_attn" else 0
+        mixed, state = attn_lib.apply_attention_step(
+            params["attn"], _attn_cfg(cfg, window), h, state
+        )
+    elif btype in ("stlt", "stlt_rel"):
+        mixed, state = stlt_lib.apply_stlt_step(params["stlt"], cfg.stlt_config(), h, state)
+    elif btype == "mlstm":
+        mixed, state = xlstm_lib.apply_mlstm_step(params["cell"], cfg, h, state)
+    elif btype == "slstm":
+        mixed, state = xlstm_lib.apply_slstm_step(params["cell"], cfg, h, state)
+    elif btype == "rglru":
+        mixed, state = rglru_lib.apply_rglru_step(params["rec"], cfg, h, state)
+    else:
+        raise ValueError(btype)
+    x_t = x_t + mixed.astype(x_t.dtype)
+    if "norm2" in params:
+        h2 = L.apply_norm(cfg.norm, params["norm2"], x_t[:, None, :])[:, 0]
+        if cfg.is_moe:
+            y, _ = moe_lib.apply_moe(params["moe"], cfg.moe_config(), h2[:, None, :])
+            y = y[:, 0]
+        else:
+            y = L.ffn(params["ffn"], h2, act=cfg.act)
+        x_t = x_t + y.astype(x_t.dtype)
+    return x_t, state
+
+
+def decode_step(params: dict, cfg: ModelConfig, token_t: jax.Array, state: dict):
+    """One token for the whole stack. token_t [B] ints (or [B, d] embeddings)."""
+    pos = state["pos"]
+    if jnp.issubdtype(token_t.dtype, jnp.integer):
+        x_t = L.embed(params["embed"], token_t).astype(cfg.act_dtype)
+    else:
+        x_t = token_t.astype(cfg.act_dtype)
+    if cfg.mixer != "attention" or cfg.family in ("xlstm",):
+        x_t = x_t + L.sinusoidal_pe(1, cfg.d_model, offset=pos, dtype=x_t.dtype)[0]
+
+    new_states = []
+    for (btype, count), stacked, st in zip(
+        execution_plan(cfg), params["layers"], state["layers"]
+    ):
+        if count > 1:
+
+            def body(x_in, scanned):
+                layer_params, layer_state = scanned
+                x_out, new_s = _block_step(layer_params, cfg, btype, x_in, layer_state, pos)
+                return x_out, new_s
+
+            x_t, new_s = jax.lax.scan(body, x_t, (stacked, st))
+        else:
+            x_t, new_s = _block_step(stacked, cfg, btype, x_t, st, pos)
+        new_states.append(new_s)
+
+    x_t = L.apply_norm(cfg.norm, params["final_norm"], x_t[:, None, :])[:, 0]
+    if "lm_head" in params:
+        logits = x_t @ params["lm_head"]["kernel"]
+    else:
+        logits = L.unembed(params["embed"], x_t)
+    return logits, {"layers": new_states, "pos": pos + 1}

@@ -1,0 +1,319 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, chunked-parallel)
+and sLSTM (scalar memory, sequential recurrence with block-diagonal R).
+
+The mLSTM uses exponential input gates and sigmoid forget gates with the
+standard max-stabilizer m_t; training uses a chunkwise-parallel algorithm
+(intra-chunk attention-like scores + O(dk*dv) inter-chunk state — the same
+family as GLA/TFLA chunking), decode uses the exact sequential update.
+
+Both cells share the scan machinery philosophy of ``repro.core.scan`` but
+need their own implementations because the recurrence is input-gated
+(mLSTM) or nonlinear in h_{t-1} (sLSTM).
+
+Simplifications vs the reference implementation (documented in DESIGN.md):
+projection factor pf=2 for mLSTM with qk-dim = v-dim; sLSTM uses pf=1 with a
+single output projection. Block structure: ``x + cell(norm(x))`` with no
+separate FFN (the cells embed their own up/down projections), matching
+d_ff=0 in the assigned config.
+"""
+from __future__ import annotations
+
+from typing import TYPE_CHECKING
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.utils import lecun_normal
+
+if TYPE_CHECKING:  # pragma: no cover
+    from repro.configs.base import ModelConfig
+
+CONV_W = 4
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def _di(cfg) -> int:
+    return 2 * cfg.d_model  # projection factor 2
+
+
+def init_mlstm(key, cfg) -> dict:
+    d, di, H = cfg.d_model, _di(cfg), cfg.num_heads
+    ks = jax.random.split(key, 8)
+    return {
+        "w_up": lecun_normal(ks[0], (d, 2 * di), dtype=cfg.p_dtype),  # -> (x_m, z)
+        "conv": 0.1 * jax.random.normal(ks[1], (CONV_W, di), cfg.p_dtype),
+        "wq": lecun_normal(ks[2], (di, di), dtype=cfg.p_dtype),
+        "wk": lecun_normal(ks[3], (di, di), dtype=cfg.p_dtype),
+        "wv": lecun_normal(ks[4], (di, di), dtype=cfg.p_dtype),
+        "w_i": lecun_normal(ks[5], (di, H), dtype=cfg.p_dtype),
+        "w_f": lecun_normal(ks[6], (di, H), dtype=cfg.p_dtype),
+        "b_i": jnp.zeros((H,), cfg.p_dtype),
+        "b_f": 3.0 * jnp.ones((H,), cfg.p_dtype),  # forget-open init
+        "norm": L.init_rmsnorm(di, cfg.p_dtype),   # multi-head out norm
+        "w_down": lecun_normal(ks[7], (di, d), fan_in=di, dtype=cfg.p_dtype),
+    }
+
+
+def _causal_conv(x, w):
+    """Depthwise causal conv, width CONV_W. x [B,N,di], w [CONV_W, di]."""
+    out = w[-1] * x
+    for t in range(CONV_W - 1):
+        shift = CONV_W - 1 - t
+        out = out + w[t] * jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, : x.shape[1]]
+    return out
+
+
+def _mlstm_gates_qkv(params, cfg, x):
+    B, N, d = x.shape
+    di, H = _di(cfg), cfg.num_heads
+    dh = di // H
+    up = x @ params["w_up"]
+    x_m, z = up[..., :di], up[..., di:]
+    x_c = jax.nn.silu(_causal_conv(x_m, params["conv"]))
+    q = (x_c @ params["wq"]).reshape(B, N, H, dh)
+    k = (x_c @ params["wk"]).reshape(B, N, H, dh) / jnp.sqrt(float(dh))
+    v = (x_m @ params["wv"]).reshape(B, N, H, dh)
+    li = (x_c @ params["w_i"] + params["b_i"]).astype(jnp.float32)  # log input gate
+    lf = jax.nn.log_sigmoid((x_c @ params["w_f"] + params["b_f"]).astype(jnp.float32))
+    return q, k, v, li, lf, z
+
+
+def mlstm_chunked(q, k, v, li, lf, chunk: int = 64, return_state: bool = False):
+    """Stabilized chunkwise-parallel mLSTM.
+
+    q/k/v: [B, N, H, dh]; li/lf: [B, N, H] (log input gate, log forget gate).
+    Returns h [B, N, H, dh].
+    """
+    B, N, H, dh = q.shape
+    dt = jnp.float32
+    q, k, v = q.astype(dt), k.astype(dt), v.astype(dt)
+    pad = (-N) % chunk
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        li = jnp.pad(li, ((0, 0), (0, pad), (0, 0)), constant_values=-1e30)
+        lf = jnp.pad(lf, ((0, 0), (0, pad), (0, 0)))
+    nc = q.shape[1] // chunk
+
+    def resh(x):  # [B, nc, W, H, ...] -> scan over nc
+        return jnp.moveaxis(x.reshape((B, nc, chunk) + x.shape[2:]), 1, 0)
+
+    qs, ks, vs, lis, lfs = map(resh, (q, k, v, li, lf))
+    C0 = jnp.zeros((B, H, dh, dh), dt)
+    n0 = jnp.zeros((B, H, dh), dt)
+    m0 = jnp.full((B, H), -1e30, dt)
+
+    def body(carry, inp):
+        C_p, n_p, m_p = carry
+        qc, kc, vc, lic, lfc = inp  # [B, W, H, ...]
+        b = jnp.cumsum(lfc, axis=1)                      # [B, W, H]
+        a = jax.lax.cummax(lic - b, axis=1)              # max_i (li_i - b_i)
+        m = b + jnp.maximum(a, m_p[:, None, :])          # per-pos stabilizer
+        # intra-chunk scores
+        logw = b[:, :, None, :] - b[:, None, :, :] + lic[:, None, :, :] - m[:, :, None, :]
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        w = jnp.where(tri[None, :, :, None], jnp.exp(logw), 0.0)   # [B, W, W, H]
+        s = jnp.einsum("bihd,bjhd->bijh", qc, kc) * w              # [B, W, W, H]
+        out_intra = jnp.einsum("bijh,bjhd->bihd", s, vc)
+        den_intra = s.sum(axis=2)                                   # [B, W, H]
+        # inter-chunk
+        scale = jnp.exp(b + m_p[:, None, :] - m)                    # [B, W, H]
+        out_inter = jnp.einsum("bihd,bhde->bihe", qc, C_p) * scale[..., None]
+        den_inter = jnp.einsum("bihd,bhd->bih", qc, n_p) * scale
+        den = jnp.abs(den_intra + den_inter)
+        h = (out_intra + out_inter) / jnp.maximum(den, jnp.exp(-m))[..., None]
+        # carry update (state at chunk end, stabilized by m_W)
+        m_W = m[:, -1, :]                                           # [B, H]
+        wk_end = jnp.exp(b[:, -1, None, :] - b + lic - m_W[:, None, :])  # [B, W, H]
+        C_new = jnp.einsum("bjh,bjhd,bjhe->bhde", wk_end, kc, vc) + jnp.exp(
+            b[:, -1, :] + m_p - m_W
+        )[..., None, None] * C_p
+        n_new = jnp.einsum("bjh,bjhd->bhd", wk_end, kc) + jnp.exp(
+            b[:, -1, :] + m_p - m_W
+        )[..., None] * n_p
+        return (C_new, n_new, m_W), h
+
+    from repro.core.scan import _scan_unroll
+    (C_f, n_f, m_f), hs = jax.lax.scan(body, (C0, n0, m0), (qs, ks, vs, lis, lfs),
+                                       unroll=_scan_unroll(nc))
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, nc * chunk, H, dh)
+    # padding is state-transparent (f=1, i=0 on padded steps), so the final
+    # carry IS the state at position N
+    if return_state:
+        return h[:, :N], (C_f, n_f, m_f)
+    return h[:, :N]
+
+
+def apply_mlstm(params, cfg, x):
+    B, N, d = x.shape
+    q, k, v, li, lf, z = _mlstm_gates_qkv(params, cfg, x)
+    h = mlstm_chunked(q, k, v, li, lf, chunk=min(64, max(8, N)))
+    h = h.reshape(B, N, -1).astype(x.dtype)
+    h = L.rms_norm(params["norm"], h) * jax.nn.silu(z)
+    return h @ params["w_down"]
+
+
+def mlstm_prefill(params, cfg, x):
+    """Parallel prefill: outputs + exact streaming state (C, n, m, conv buf)."""
+    B, N, d = x.shape
+    di = _di(cfg)
+    q, k, v, li, lf, z = _mlstm_gates_qkv(params, cfg, x)
+    h, (C, n, m) = mlstm_chunked(q, k, v, li, lf, chunk=min(64, max(8, N)), return_state=True)
+    h = h.reshape(B, N, -1).astype(x.dtype)
+    h = L.rms_norm(params["norm"], h) * jax.nn.silu(z)
+    y = h @ params["w_down"]
+    # conv buffer: last CONV_W-1 pre-conv activations
+    up = x @ params["w_up"]
+    x_m = up[..., :di].astype(jnp.float32)
+    buf = jnp.zeros((B, CONV_W - 1, di), jnp.float32)
+    take = min(CONV_W - 1, N)
+    if take:
+        buf = buf.at[:, CONV_W - 1 - take:].set(x_m[:, N - take:])
+    return y, {"C": C, "n": n, "m": m, "conv_buf": buf}
+
+
+def init_mlstm_state(cfg, batch: int):
+    di, H = _di(cfg), cfg.num_heads
+    dh = di // H
+    return {
+        "C": jnp.zeros((batch, H, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, H, dh), jnp.float32),
+        "m": jnp.full((batch, H), -1e30, jnp.float32),
+        "conv_buf": jnp.zeros((batch, CONV_W - 1, di), jnp.float32),
+    }
+
+
+def apply_mlstm_step(params, cfg, x_t, state):
+    """Exact sequential mLSTM update. x_t [B, d]."""
+    B, d = x_t.shape
+    di, H = _di(cfg), cfg.num_heads
+    dh = di // H
+    up = x_t @ params["w_up"]
+    x_m, z = up[..., :di], up[..., di:]
+    window = jnp.concatenate([state["conv_buf"], x_m.astype(jnp.float32)[:, None]], axis=1)
+    x_c = jax.nn.silu(jnp.einsum("bwd,wd->bd", window, params["conv"].astype(jnp.float32)))
+    x_c = x_c.astype(x_t.dtype)
+    q = (x_c @ params["wq"]).reshape(B, H, dh).astype(jnp.float32)
+    k = ((x_c @ params["wk"]) / jnp.sqrt(float(dh))).reshape(B, H, dh).astype(jnp.float32)
+    v = (x_m @ params["wv"]).reshape(B, H, dh).astype(jnp.float32)
+    li = (x_c @ params["w_i"] + params["b_i"]).astype(jnp.float32)  # [B, H]
+    lf = jax.nn.log_sigmoid((x_c @ params["w_f"] + params["b_f"]).astype(jnp.float32))
+    m_new = jnp.maximum(lf + state["m"], li)
+    sc_f = jnp.exp(lf + state["m"] - m_new)
+    sc_i = jnp.exp(li - m_new)
+    C = sc_f[..., None, None] * state["C"] + sc_i[..., None, None] * jnp.einsum(
+        "bhd,bhe->bhde", k, v
+    )
+    n = sc_f[..., None] * state["n"] + sc_i[..., None] * k
+    num = jnp.einsum("bhd,bhde->bhe", q, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q, n)), jnp.exp(-m_new))
+    h = (num / den[..., None]).reshape(B, di).astype(x_t.dtype)
+    h = L.rms_norm(params["norm"], h[:, None, :])[:, 0] * jax.nn.silu(z)
+    y = h @ params["w_down"]
+    new_state = {
+        "C": C, "n": n, "m": m_new,
+        "conv_buf": window[:, 1:],
+    }
+    return y, new_state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(key, cfg) -> dict:
+    d, H = cfg.d_model, cfg.num_heads
+    dh = d // H
+    ks = jax.random.split(key, 4)
+    return {
+        "w_in": lecun_normal(ks[0], (d, 4 * d), dtype=cfg.p_dtype),   # z, i, f, o
+        "r": 0.1 * jax.random.normal(ks[1], (4, H, dh, dh), cfg.p_dtype),  # block-diag R
+        "b": jnp.concatenate([
+            jnp.zeros((d,), cfg.p_dtype),            # z
+            jnp.zeros((d,), cfg.p_dtype),            # i
+            3.0 * jnp.ones((d,), cfg.p_dtype),       # f (forget-open)
+            jnp.zeros((d,), cfg.p_dtype),            # o
+        ]),
+        "norm": L.init_rmsnorm(d, cfg.p_dtype),
+        "w_out": lecun_normal(ks[2], (d, d), dtype=cfg.p_dtype),
+    }
+
+
+def _slstm_step_core(params, cfg, x_proj_t, st):
+    """x_proj_t: [B, 4d] pre-computed input projections + bias."""
+    H = cfg.num_heads
+    d = cfg.d_model
+    dh = d // H
+    B = x_proj_t.shape[0]
+    h_prev = st["h"]  # [B, d] float32
+    hh = h_prev.reshape(B, H, dh)
+    rec = jnp.einsum("bhd,ghde->bghe", hh, params["r"].astype(jnp.float32))  # [B,4,H,dh]
+    pre = x_proj_t.astype(jnp.float32).reshape(B, 4, d) + rec.reshape(B, 4, d)
+    z = jnp.tanh(pre[:, 0])
+    li = pre[:, 1]                          # log input gate (exp gating)
+    lf = jax.nn.log_sigmoid(pre[:, 2])
+    o = jax.nn.sigmoid(pre[:, 3])
+    m_new = jnp.maximum(lf + st["m"], li)
+    sc_f = jnp.exp(lf + st["m"] - m_new)
+    sc_i = jnp.exp(li - m_new)
+    c = sc_f * st["c"] + sc_i * z
+    n = sc_f * st["n"] + sc_i
+    h = o * c / jnp.maximum(n, 1e-6)
+    return {"h": h, "c": c, "n": n, "m": m_new}
+
+
+def apply_slstm(params, cfg, x):
+    """Sequential recurrence over N (true recurrence, h_{t-1} feeds gates)."""
+    B, N, d = x.shape
+    x_proj = x @ params["w_in"] + params["b"]  # [B, N, 4d]
+    st0 = init_slstm_state(cfg, B)
+
+    def step(st, xp):
+        st = _slstm_step_core(params, cfg, xp, st)
+        return st, st["h"]
+
+    _, hs = jax.lax.scan(step, st0, jnp.moveaxis(x_proj, 1, 0))
+    h = jnp.moveaxis(hs, 0, 1).astype(x.dtype)  # [B, N, d]
+    h = L.rms_norm(params["norm"], h)
+    return h @ params["w_out"]
+
+
+def slstm_prefill(params, cfg, x):
+    """Sequential by nature; returns outputs + final recurrent state."""
+    B, N, d = x.shape
+    x_proj = x @ params["w_in"] + params["b"]
+    st = init_slstm_state(cfg, B)
+
+    def step(s, xp):
+        s = _slstm_step_core(params, cfg, xp, s)
+        return s, s["h"]
+
+    st_f, hs = jax.lax.scan(step, st, jnp.moveaxis(x_proj, 1, 0))
+    h = jnp.moveaxis(hs, 0, 1).astype(x.dtype)
+    h = L.rms_norm(params["norm"], h)
+    return h @ params["w_out"], st_f
+
+
+def init_slstm_state(cfg, batch: int):
+    d = cfg.d_model
+    return {
+        "h": jnp.zeros((batch, d), jnp.float32),
+        "c": jnp.zeros((batch, d), jnp.float32),
+        "n": jnp.zeros((batch, d), jnp.float32),
+        "m": jnp.full((batch, d), -1e30, jnp.float32),
+    }
+
+
+def apply_slstm_step(params, cfg, x_t, state):
+    xp = x_t @ params["w_in"] + params["b"]
+    new = _slstm_step_core(params, cfg, xp, state)
+    h = L.rms_norm(params["norm"], new["h"].astype(x_t.dtype)[:, None, :])[:, 0]
+    y = h @ params["w_out"]
+    return y, new

@@ -1,0 +1,20 @@
+"""Optimizers and schedules (pure JAX — optax is not available here)."""
+from repro.optim.adafactor import adafactor
+from repro.optim.adamw import adamw
+from repro.optim.clip import clip_by_global_norm
+from repro.optim.compression import compress_gradients
+from repro.optim.schedules import make_schedule
+
+
+def make_optimizer(name: str, **kw):
+    if name == "adamw":
+        return adamw(**kw)
+    if name == "adafactor":
+        return adafactor(**{k: v for k, v in kw.items() if k in ("learning_rate", "weight_decay")})
+    raise ValueError(name)
+
+
+__all__ = [
+    "adafactor", "adamw", "clip_by_global_norm", "compress_gradients",
+    "make_optimizer", "make_schedule",
+]

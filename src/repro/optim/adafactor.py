@@ -1,0 +1,75 @@
+"""Adafactor (Shazeer & Stern, 2018) with factored second moments.
+
+The memory-frugal optimizer for the >=100B assigned archs (qwen3-moe-235b,
+arctic-480b, internvl2-76b): the second moment of an [n, m] matrix is stored
+as a row vector [n] + column vector [m] instead of [n, m]; beta1=0 (no first
+moment). Optimizer state is ~O(n+m) per matrix => the dominant training-state
+cost collapses to params + grads.
+
+Tensors with <2 dims (or tiny trailing dims) fall back to full second
+moments. Update-clipping (d=1.0) and relative step sizes follow the paper.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.adamw import Optimizer
+
+EPS1 = 1e-30
+EPS2 = 1e-3
+CLIP_D = 1.0
+
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] >= 8 and shape[-2] >= 8
+
+
+def adafactor(learning_rate=None, weight_decay: float = 0.0, decay_rate: float = 0.8):
+    def init(params):
+        def per_leaf(p):
+            if _factored(p.shape):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),       # row (sum over cols)
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return {
+            "v": jax.tree_util.tree_map(per_leaf, params, is_leaf=None),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params, lr, wd_mask=None):
+        count = state["count"] + 1
+        t = count.astype(jnp.float32)
+        beta2 = 1.0 - t ** (-decay_rate)
+
+        def upd(g, v, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + EPS1
+            if _factored(p.shape):
+                vr = beta2 * v["vr"] + (1 - beta2) * g2.mean(-1)
+                vc = beta2 * v["vc"] + (1 - beta2) * g2.mean(-2)
+                denom = vr.mean(-1, keepdims=True)[..., None]
+                vhat = (vr[..., None] * vc[..., None, :]) / jnp.maximum(denom, EPS1)
+                new_v = {"vr": vr, "vc": vc}
+            else:
+                vhat = beta2 * v["v"] + (1 - beta2) * g2
+                new_v = {"v": vhat}
+            u = g / jnp.sqrt(jnp.maximum(vhat, EPS1))
+            # update clipping (RMS(u) <= d)
+            rms_u = jnp.sqrt(jnp.mean(u * u) + EPS1)
+            u = u / jnp.maximum(1.0, rms_u / CLIP_D)
+            step = u + weight_decay * p.astype(jnp.float32)
+            return (-lr * step).astype(p.dtype), new_v
+
+        # grads' array leaves cut traversal, so each call receives the whole
+        # {"v"} / {"vr","vc"} state dict for that parameter.
+        leaves_is = lambda t_: isinstance(t_, tuple)
+        out = jax.tree_util.tree_map(upd, grads, state["v"], params)
+        updates = jax.tree_util.tree_map(lambda o: o[0], out, is_leaf=leaves_is)
+        new_v = jax.tree_util.tree_map(lambda o: o[1], out, is_leaf=leaves_is)
+        return updates, {"v": new_v, "count": count}
+
+    return Optimizer(init=init, update=update)

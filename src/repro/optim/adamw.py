@@ -1,0 +1,90 @@
+"""AdamW with decoupled weight decay (paper §4: AdamW, lr 3e-4,
+betas (0.9, 0.98), wd 0.1/0.01).
+
+Interface mirrors optax: ``opt = adamw(...)``; ``state = opt.init(params)``;
+``updates, state = opt.update(grads, state, params, lr)``;
+``params = apply_updates(params, updates)``.
+
+Moment dtype is configurable — bf16 moments halve optimizer memory for the
+multi-hundred-B archs (the dry-run memory table uses this where noted).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Any
+    update: Any
+
+
+def adamw(
+    b1: float = 0.9,
+    b2: float = 0.98,
+    eps: float = 1e-9,
+    weight_decay: float = 0.1,
+    moment_dtype=jnp.float32,
+):
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, moment_dtype)
+        return {
+            "mu": jax.tree_util.tree_map(zeros, params),
+            "nu": jax.tree_util.tree_map(zeros, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params, lr, wd_mask=None):
+        count = state["count"] + 1
+        c1 = 1.0 - b1 ** count.astype(jnp.float32)
+        c2 = 1.0 - b2 ** count.astype(jnp.float32)
+        if wd_mask is None:
+            wd_mask = default_wd_mask(params)
+
+        def upd(g, m, v, p, wm):
+            g = g.astype(jnp.float32)
+            m32, v32 = m.astype(jnp.float32), v.astype(jnp.float32)
+            m_new = b1 * m32 + (1 - b1) * g
+            v_new = b2 * v32 + (1 - b2) * g * g
+            mhat = m_new / c1
+            vhat = v_new / c2
+            step = mhat / (jnp.sqrt(vhat) + eps) + wm * weight_decay * p.astype(jnp.float32)
+            return (-lr * step).astype(p.dtype), m_new.astype(moment_dtype), v_new.astype(moment_dtype)
+
+        out = jax.tree_util.tree_map(upd, grads, state["mu"], state["nu"], params, wd_mask)
+        updates = jax.tree_util.tree_map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+        mu = jax.tree_util.tree_map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+        nu = jax.tree_util.tree_map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+        return updates, {"mu": mu, "nu": nu, "count": count}
+
+    return Optimizer(init=init, update=update)
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(lambda p, u: p + u.astype(p.dtype), params, updates)
+
+
+def default_wd_mask(params):
+    """Decoupled weight decay applies to MATRICES only. Norm scales, biases,
+    and the STLT node parameters (sigma_hat/omega/T_hat/u — the paper's
+    interpretable Laplace nodes) are excluded: decaying sigma_hat toward 0
+    silently drags every half-life toward ln2/softplus(0), and decaying the
+    complex mixers u kills the mixer outright (observed in lm_ppl before
+    this mask — all STLT variants collapsed to identical FFN-only nets).
+    """
+    from repro.utils import tree_flatten_with_paths
+
+    flat = tree_flatten_with_paths(params)
+    mask = []
+    for path, leaf in flat:
+        exclude = (
+            getattr(leaf, "ndim", 0) <= 1
+            or "/nodes/" in path or path.endswith(("sigma_hat", "omega", "T_hat", "u_re", "u_im"))
+            or "norm" in path
+            or path.endswith(("b_alpha", "conv", "lam"))
+        )
+        mask.append(0.0 if exclude else 1.0)
+    treedef = jax.tree_util.tree_structure(params)
+    return jax.tree_util.tree_unflatten(treedef, mask)

@@ -1,0 +1,50 @@
+"""Gradient compression for the cross-pod all-reduce.
+
+At 512+ chips the data-parallel gradient all-reduce (and in particular its
+inter-pod hop over DCI) is the dominant training collective. Two options:
+
+* ``bf16``    — cast gradients to bf16 before the (pjit-implicit) all-reduce,
+                halving collective bytes. Stateless.
+* ``bf16_ef`` — bf16 with error feedback: the quantization residual is kept
+                in an accumulator and re-added next step, making the
+                compression unbiased over time (1-bit-Adam-style EF).
+
+Under pjit the all-reduce is implicit in the backward pass, so "compressing
+the collective" means computing the loss/grads such that the gradients
+*cross the data axis* in bf16: we expose ``compress_gradients`` to be applied
+inside the grad function boundary (the dtype the tensor has when the
+psum/reduce-scatter fires is the dtype on the wire).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_gradients(grads, mode: str, error_state: Optional[dict] = None):
+    """Returns (grads', new_error_state)."""
+    if mode == "none":
+        return grads, error_state
+    if mode == "bf16":
+        return jax.tree_util.tree_map(lambda g: g.astype(jnp.bfloat16), grads), error_state
+    if mode == "bf16_ef":
+        assert error_state is not None, "bf16_ef needs an error accumulator"
+
+        def comp(g, e):
+            g32 = g.astype(jnp.float32) + e
+            q = g32.astype(jnp.bfloat16)
+            new_e = g32 - q.astype(jnp.float32)
+            return q, new_e
+
+        out = jax.tree_util.tree_map(comp, grads, error_state)
+        is_tup = lambda t: isinstance(t, tuple)
+        q = jax.tree_util.tree_map(lambda t: t[0], out, is_leaf=is_tup)
+        e = jax.tree_util.tree_map(lambda t: t[1], out, is_leaf=is_tup)
+        return q, e
+    raise ValueError(mode)
+
+
+def init_error_state(params):
+    return jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

@@ -1,0 +1,23 @@
+"""LR schedules: linear warmup into cosine / linear / constant decay."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def make_schedule(kind: str, peak_lr: float, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.1):
+    warmup = max(1, warmup_steps)
+
+    def sched(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * jnp.minimum(1.0, step / warmup)
+        frac = jnp.clip((step - warmup) / jnp.maximum(1, total_steps - warmup), 0.0, 1.0)
+        if kind == "cosine":
+            decay = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        elif kind == "linear":
+            decay = 1.0 - (1 - final_frac) * frac
+        else:  # constant
+            decay = jnp.ones_like(frac)
+        return jnp.where(step < warmup, warm, peak_lr * decay)
+
+    return sched

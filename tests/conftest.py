@@ -1,0 +1,21 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests must see exactly
+one device (the dry-run forces 512 in its own process)."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def small_cfg(**kw):
+    from repro.configs.base import ModelConfig
+
+    base = dict(
+        name="t", family="lm", vocab=64, num_layers=2, d_model=32,
+        num_heads=4, num_kv_heads=2, d_ff=64, dtype="float32",
+        scan_layers=False, remat=False, blockwise_threshold=10_000,
+    )
+    base.update(kw)
+    return ModelConfig(**base)

@@ -1,0 +1,90 @@
+"""Adaptive node allocation: masks, S_eff, temperature annealing, (Reg)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import adaptive as A
+
+
+def _setup(rng, d=16, H=2, S=8):
+    params = A.init_adaptive(jax.random.key(0), d, H, S)
+    x = jnp.asarray(rng.normal(size=(3, 10, d)), jnp.float32)
+    return params, x
+
+
+def test_deterministic_eval_has_no_noise(rng):
+    params, x = _setup(rng)
+    cfg = A.AdaptiveConfig(enabled=True)
+    m1, _ = A.node_masks(params, x, cfg, deterministic=True)
+    m2, _ = A.node_masks(params, x, cfg, rng=jax.random.key(9), deterministic=True)
+    np.testing.assert_array_equal(np.asarray(m1), np.asarray(m2))
+
+
+def test_training_noise_varies_with_rng(rng):
+    params, x = _setup(rng)
+    cfg = A.AdaptiveConfig(enabled=True, tau=0.5)
+    m1, _ = A.node_masks(params, x, cfg, rng=jax.random.key(1), deterministic=False)
+    m2, _ = A.node_masks(params, x, cfg, rng=jax.random.key(2), deterministic=False)
+    assert float(jnp.abs(m1 - m2).max()) > 1e-3
+
+
+def test_low_tau_hardens_masks(rng):
+    params, x = _setup(rng)
+    soft, _ = A.node_masks(params, x, A.AdaptiveConfig(enabled=True, tau=5.0),
+                           rng=jax.random.key(1), deterministic=False)
+    hard, _ = A.node_masks(params, x, A.AdaptiveConfig(enabled=True, tau=0.05),
+                           rng=jax.random.key(1), deterministic=False)
+    def entropy(m):
+        m = np.clip(np.asarray(m), 1e-6, 1 - 1e-6)
+        return float(-(m * np.log(m) + (1 - m) * np.log(1 - m)).mean())
+    assert entropy(hard) < entropy(soft)
+
+
+def test_hard_eval_thresholding(rng):
+    params, x = _setup(rng)
+    cfg = A.AdaptiveConfig(enabled=True, hard_eval=True)
+    m, s_eff = A.node_masks(params, x, cfg, deterministic=True)
+    assert set(np.unique(np.asarray(m))) <= {0.0, 1.0}
+
+
+def test_anneal_tau_schedule():
+    assert float(A.anneal_tau(0, 100)) == 1.0
+    assert abs(float(A.anneal_tau(40, 100)) - 0.1) < 1e-6  # 40% point
+    assert abs(float(A.anneal_tau(90, 100)) - 0.1) < 1e-6
+    mid = float(A.anneal_tau(20, 100))
+    assert 0.1 < mid < 1.0
+
+
+def test_regularization_terms(rng):
+    H, S = 2, 6
+    sigma = jnp.asarray(np.sort(rng.uniform(0.01, 1.0, (H, S)), -1), jnp.float32)
+    omega = jnp.asarray(rng.normal(size=(H, S)), jnp.float32)
+    masks = jnp.ones((4, H, S))
+    cfg = A.AdaptiveConfig(lambda_omega=1.0, lambda_sigma=0.0, lambda_mask=0.0)
+    r_om = float(A.regularization(sigma, omega, masks, cfg))
+    assert abs(r_om - float(jnp.abs(omega).sum())) < 1e-4
+    cfg2 = A.AdaptiveConfig(lambda_omega=0.0, lambda_sigma=0.0, lambda_mask=1.0)
+    r_mask = float(A.regularization(sigma, omega, masks, cfg2))
+    assert abs(r_mask - H * S) < 1e-4
+    # mask penalty decreases as masks shrink
+    r_small = float(A.regularization(sigma, omega, 0.1 * masks, cfg2))
+    assert r_small < r_mask
+
+
+def test_mask_regularization_gradient_shrinks_masks(rng):
+    """lambda_mask drives node usage down through the Gumbel-sigmoid."""
+    params, x = _setup(rng)
+    acfg = A.AdaptiveConfig(enabled=True, lambda_mask=1.0)
+
+    def loss(p):
+        m, _ = A.node_masks(p, x, acfg, deterministic=True)
+        sigma = jnp.ones((2, 8)) * 0.5
+        omega = jnp.zeros((2, 8))
+        return A.regularization(sigma, omega, m, acfg)
+
+    g = jax.grad(loss)(params)
+    # pushing along -grad reduces expected S_eff
+    p2 = jax.tree_util.tree_map(lambda p, gg: p - 1.0 * gg, params, g)
+    _, s0 = A.node_masks(params, x, acfg, deterministic=True)
+    _, s1 = A.node_masks(p2, x, acfg, deterministic=True)
+    assert float(s1.mean()) < float(s0.mean())

@@ -1,0 +1,87 @@
+"""Attention baseline: GQA correctness, blockwise==dense, windows, caches."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import attention as A
+
+
+def _cfg(**kw):
+    base = dict(d_model=32, num_heads=4, num_kv_heads=2, causal=True,
+                blockwise_threshold=10_000)
+    base.update(kw)
+    return A.AttentionConfig(**base)
+
+
+def test_blockwise_matches_dense(rng):
+    cfg = _cfg(block_q=8, block_kv=16)
+    params = A.init_attention(jax.random.key(0), cfg)
+    x = jnp.asarray(rng.normal(size=(2, 50, 32)), jnp.float32)
+    y_dense = A.apply_attention(params, cfg, x, force_dense=True)
+    positions = jnp.arange(50)
+    q, k, v = A._qkv(params, cfg, x, positions)
+    y_block = A._sdpa_blockwise(q, k, v, cfg).reshape(2, 50, -1) @ params["wo"]
+    np.testing.assert_allclose(np.asarray(y_block), np.asarray(y_dense),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_window_masks_out_far_tokens(rng):
+    cfg = _cfg(window=4)
+    params = A.init_attention(jax.random.key(0), cfg)
+    x = jnp.asarray(rng.normal(size=(1, 20, 32)), jnp.float32)
+    y1 = A.apply_attention(params, cfg, x)
+    # perturb a token > window away from the last position
+    x2 = x.at[:, 5].set(0.0)
+    y2 = A.apply_attention(params, cfg, x2)
+    np.testing.assert_allclose(np.asarray(y1[:, -1]), np.asarray(y2[:, -1]),
+                               atol=1e-6)
+    assert float(jnp.abs(y1[:, 6] - y2[:, 6]).max()) > 1e-6  # inside window
+
+
+def test_gqa_reduces_to_mha_when_kv_equals_heads(rng):
+    cfg = _cfg(num_kv_heads=4)
+    params = A.init_attention(jax.random.key(0), cfg)
+    x = jnp.asarray(rng.normal(size=(1, 10, 32)), jnp.float32)
+    y = A.apply_attention(params, cfg, x)
+    # manual MHA
+    positions = jnp.arange(10)
+    q, k, v = A._qkv(params, cfg, x, positions)
+    s = jnp.einsum("bnhd,bmhd->bhnm", q, k) / np.sqrt(8)
+    mask = jnp.tril(jnp.ones((10, 10), bool))
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, -1)
+    o = jnp.einsum("bhnm,bmhd->bnhd", p, v).reshape(1, 10, 32) @ params["wo"]
+    np.testing.assert_allclose(np.asarray(y), np.asarray(o), rtol=2e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("window", [0, 6])
+def test_cache_decode_matches_full(rng, window):
+    cfg = _cfg(window=window)
+    params = A.init_attention(jax.random.key(0), cfg)
+    x = jnp.asarray(rng.normal(size=(2, 18, 32)), jnp.float32)
+    y_full = A.apply_attention(params, cfg, x, force_dense=True)
+    y_pre, cache = A.prefill_kv_cache(params, cfg, x[:, :10], max_len=24)
+    np.testing.assert_allclose(np.asarray(y_pre), np.asarray(y_full[:, :10]),
+                               rtol=2e-4, atol=1e-5)
+    for t in range(10, 18):
+        y_t, cache = A.apply_attention_step(params, cfg, x[:, t], cache)
+        np.testing.assert_allclose(np.asarray(y_t), np.asarray(y_full[:, t]),
+                                   rtol=2e-3, atol=2e-4)
+
+
+def test_rope_relative_property(rng):
+    """RoPE: q.k depends only on relative distance."""
+    from repro.models import layers as L
+
+    q = jnp.asarray(rng.normal(size=(1, 1, 1, 16)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 1, 1, 16)), jnp.float32)
+    def score(p_q, p_k):
+        sin_q, cos_q = L.rope_angles(jnp.array([p_q]), 16)
+        sin_k, cos_k = L.rope_angles(jnp.array([p_k]), 16)
+        qr = L.apply_rope(q, sin_q, cos_q)
+        kr = L.apply_rope(k, sin_k, cos_k)
+        return float(jnp.sum(qr * kr))
+
+    assert abs(score(3, 1) - score(10, 8)) < 1e-4
+    assert abs(score(3, 1) - score(4, 1)) > 1e-5

@@ -1,0 +1,68 @@
+"""Checkpointing: roundtrip, atomicity, rotation, resume, corruption safety."""
+import json
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, load_checkpoint, save_checkpoint
+from repro.checkpoint.checkpointer import latest_step
+
+
+@pytest.fixture
+def tree():
+    return {"w": jnp.arange(12.0).reshape(3, 4), "opt": {"mu": jnp.ones((5,)),
+            "count": jnp.asarray(7, jnp.int32)}}
+
+
+def test_roundtrip(tmp_path, tree):
+    save_checkpoint(str(tmp_path), 42, tree)
+    like = jax.tree_util.tree_map(jnp.zeros_like, tree)
+    restored, step = load_checkpoint(str(tmp_path), like)
+    assert step == 42
+    for a, b in zip(jax.tree_util.tree_leaves(restored), jax.tree_util.tree_leaves(tree)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_partial_write_is_invisible(tmp_path, tree):
+    """A .tmp dir (simulated crash mid-save) must not be picked up."""
+    save_checkpoint(str(tmp_path), 10, tree)
+    os.makedirs(tmp_path / "step_00000020.tmp")
+    (tmp_path / "step_00000020.tmp" / "shard_0000.npz").write_bytes(b"garbage")
+    assert latest_step(str(tmp_path)) == 10
+
+
+def test_manifest_validation_rejects_shape_mismatch(tmp_path, tree):
+    save_checkpoint(str(tmp_path), 1, tree)
+    bad = {"w": jnp.zeros((2, 2)), "opt": tree["opt"]}
+    with pytest.raises(ValueError, match="shape mismatch"):
+        load_checkpoint(str(tmp_path), bad)
+
+
+def test_rotation_keeps_newest_and_periodic(tmp_path, tree):
+    mgr = CheckpointManager(str(tmp_path), max_to_keep=2, keep_period=100,
+                            async_saves=False)
+    for s in [50, 100, 150, 200, 250]:
+        mgr.save(s, tree)
+    kept = sorted(int(d[5:]) for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert kept == [100, 200, 250]  # 2 newest + the keep_period multiples
+
+
+def test_async_save_and_resume(tmp_path, tree):
+    mgr = CheckpointManager(str(tmp_path), async_saves=True)
+    mgr.save(5, tree)
+    mgr.save(9, tree)
+    mgr.wait()
+    restored, step = mgr.restore_or_init(
+        lambda: jax.tree_util.tree_map(jnp.zeros_like, tree))
+    assert step == 9
+    np.testing.assert_array_equal(np.asarray(restored["w"]), np.asarray(tree["w"]))
+
+
+def test_restore_or_init_fresh(tmp_path, tree):
+    mgr = CheckpointManager(str(tmp_path))
+    restored, step = mgr.restore_or_init(lambda: tree)
+    assert step == -1

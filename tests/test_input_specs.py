@@ -1,0 +1,18 @@
+"""Deliverable (f) hook: input_specs() yields shardable ShapeDtypeStruct
+stand-ins for every assigned (arch x shape) cell — no device allocation."""
+import jax
+import pytest
+
+from repro import configs as configs_lib
+from repro.launch import steps as steps_lib
+
+
+@pytest.mark.parametrize("cell", [c for c in configs_lib.all_cells() if not c.skip],
+                         ids=lambda c: c.key)
+def test_input_specs_cover_cell(cell):
+    specs = steps_lib.input_specs(cell.arch, cell.shape.name, cell.variant)
+    leaves = jax.tree_util.tree_leaves(specs)
+    assert leaves, cell.key
+    for leaf in leaves:
+        assert isinstance(leaf, jax.ShapeDtypeStruct)
+        assert leaf.shape[0] == cell.shape.global_batch

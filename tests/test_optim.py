@@ -1,0 +1,93 @@
+"""Optimizers, schedules, clipping, gradient compression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import optim
+from repro.optim.adamw import apply_updates
+from repro.optim.compression import compress_gradients, init_error_state
+
+
+def test_adamw_matches_reference_implementation(rng):
+    b1, b2, eps, wd, lr = 0.9, 0.98, 1e-9, 0.1, 1e-2
+    opt = optim.adamw(b1=b1, b2=b2, eps=eps, weight_decay=wd)
+    p = {"w": jnp.asarray(rng.normal(size=(4, 4)), jnp.float32)}
+    st = opt.init(p)
+    m = np.zeros((4, 4)); v = np.zeros((4, 4)); w_ref = np.asarray(p["w"]).copy()
+    for t in range(1, 4):
+        g = rng.normal(size=(4, 4)).astype(np.float32)
+        ups, st = opt.update({"w": jnp.asarray(g)}, st, p, lr)
+        p = apply_updates(p, ups)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mh, vh = m / (1 - b1**t), v / (1 - b2**t)
+        w_ref -= lr * (mh / (np.sqrt(vh) + eps) + wd * w_ref)
+        np.testing.assert_allclose(np.asarray(p["w"]), w_ref, rtol=1e-5, atol=1e-6)
+
+
+def test_adamw_reduces_quadratic():
+    opt = optim.adamw(weight_decay=0.0)
+    p = {"x": jnp.asarray([5.0, -3.0])}
+    st = opt.init(p)
+    loss = lambda p: jnp.sum(p["x"] ** 2)
+    for _ in range(200):
+        g = jax.grad(loss)(p)
+        ups, st = opt.update(g, st, p, 0.1)
+        p = apply_updates(p, ups)
+    assert float(loss(p)) < 1e-2
+
+
+def test_adafactor_memory_is_factored():
+    opt = optim.adafactor()
+    p = {"big": jnp.zeros((256, 512)), "vec": jnp.zeros((100,))}
+    st = opt.init(p)
+    assert st["v"]["big"]["vr"].shape == (256,)
+    assert st["v"]["big"]["vc"].shape == (512,)
+    assert st["v"]["vec"]["v"].shape == (100,)
+
+
+def test_adafactor_reduces_quadratic():
+    opt = optim.adafactor()
+    p = {"x": jnp.full((8, 8), 3.0)}
+    st = opt.init(p)
+    loss = lambda p: jnp.sum(p["x"] ** 2)
+    for _ in range(100):
+        g = jax.grad(loss)(p)
+        ups, st = opt.update(g, st, p, 0.3)
+        p = apply_updates(p, ups)
+    assert float(loss(p)) < 1.0
+
+
+def test_clip_by_global_norm(rng):
+    g = {"a": jnp.full((10,), 10.0)}
+    clipped, norm = optim.clip_by_global_norm(g, 1.0)
+    assert abs(float(norm) - 10.0 * np.sqrt(10)) < 1e-3
+    cn = float(jnp.sqrt(jnp.sum(clipped["a"] ** 2)))
+    assert abs(cn - 1.0) < 1e-5
+
+
+def test_schedule_shapes():
+    s = optim.make_schedule("cosine", 1e-3, 10, 100)
+    assert float(s(0)) == 0.0
+    assert abs(float(s(10)) - 1e-3) < 1e-9
+    assert float(s(100)) < float(s(50)) < float(s(10))
+    lin = optim.make_schedule("linear", 1e-3, 0, 100)
+    assert float(lin(100)) == pytest.approx(1e-4, rel=1e-3)
+
+
+def test_bf16_error_feedback_is_unbiased_over_time(rng):
+    """EF accumulates quantization residue: summed compressed grads converge
+    to summed true grads (plain bf16 drifts)."""
+    g_true = jnp.asarray(rng.normal(size=(512,)) * 1e-3, jnp.float32)
+    es = init_error_state({"g": g_true})["g"]
+    total_ef = np.zeros(512, np.float64)
+    for _ in range(64):
+        q, es = compress_gradients({"g": g_true}, "bf16_ef", {"g": es})
+        es = es["g"]
+        q = q["g"]
+        total_ef += np.asarray(q, np.float64)
+    true_total = np.asarray(g_true, np.float64) * 64
+    # EF total error stays at one quantum; relative error small
+    rel = np.abs(total_ef - true_total).max() / np.abs(true_total).max()
+    assert rel < 0.02, rel

@@ -1,0 +1,109 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import scan as scan_lib
+
+_pole = st.tuples(
+    st.floats(0.01, 1.5),    # sigma
+    st.floats(0.0, 2.0),     # omega
+)
+
+
+def _run(x, poles, u_scale=0.3, chunk=8, reverse=False):
+    S = len(poles)
+    lm = jnp.asarray([-p[0] for p in poles], jnp.float32)
+    th = jnp.asarray([-p[1] for p in poles], jnp.float32)
+    ur = jnp.full((S,), u_scale, jnp.float32)
+    ui = jnp.full((S,), -u_scale / 2, jnp.float32)
+    return scan_lib.stlt_chunked(x, lm, th, ur, ui, chunk=chunk, reverse=reverse)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(3, 40),
+    poles=st.lists(_pole, min_size=1, max_size=5),
+    seed=st.integers(0, 2**16),
+    alpha=st.floats(-3.0, 3.0),
+)
+def test_stlt_is_linear_in_x(n, poles, seed, alpha):
+    rng = np.random.default_rng(seed)
+    x1 = jnp.asarray(rng.normal(size=(1, n, 3)), jnp.float32)
+    x2 = jnp.asarray(rng.normal(size=(1, n, 3)), jnp.float32)
+    z = _run(x1 + alpha * x2, poles)
+    z_lin = _run(x1, poles) + alpha * _run(x2, poles)
+    np.testing.assert_allclose(np.asarray(z), np.asarray(z_lin),
+                               rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(5, 40),
+    poles=st.lists(_pole, min_size=1, max_size=4),
+    seed=st.integers(0, 2**16),
+)
+def test_unilateral_stlt_is_causal(n, poles, seed):
+    """Perturbing the future never changes past outputs."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(1, n, 2)), jnp.float32)
+    cut = n // 2
+    x2 = x.at[:, cut:].add(jnp.asarray(rng.normal(size=(1, n - cut, 2)), jnp.float32))
+    z1, z2 = _run(x, poles), _run(x2, poles)
+    np.testing.assert_allclose(np.asarray(z1[:, :cut]), np.asarray(z2[:, :cut]),
+                               atol=1e-5)
+    # and the reverse transform is anti-causal
+    z1r, z2r = _run(x, poles, reverse=True), _run(x2, poles, reverse=True)
+    assert float(jnp.abs(z1r[:, :cut] - z2r[:, :cut]).max()) > 0 or n < 8
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    poles=st.lists(_pole, min_size=1, max_size=4),
+    seed=st.integers(0, 2**16),
+)
+def test_stlt_output_is_bounded_by_geometric_sum(poles, seed):
+    """|z| <= sum_k |u_k| * |x|_inf / (1 - |lambda_k|): BIBO stability of the
+    strictly-decaying pole parameterization."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.uniform(-1, 1, size=(1, 64, 2)), jnp.float32)
+    z = _run(x, poles, u_scale=0.3)
+    bound = sum((0.3 + 0.15) / (1 - np.exp(-p[0])) for p in poles)
+    assert float(jnp.abs(z).max()) <= bound + 1e-4
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**16), k=st.integers(1, 3))
+def test_moe_gate_weights_are_convex(seed, k):
+    """Per-token combine weights are a convex combination (sum == 1)."""
+    from repro.models import moe as M
+
+    rng = np.random.default_rng(seed)
+    cfg = M.MoEConfig(d_model=8, d_ff=16, num_experts=4, top_k=k,
+                      capacity_factor=8.0, param_dtype=jnp.float32)
+    params = M.init_moe(jax.random.key(seed % 100), cfg)
+    x = jnp.asarray(rng.normal(size=(1, 6, 8)), jnp.float32)
+    logits = (np.asarray(x).reshape(-1, 8) @ np.asarray(params["router"]))
+    probs = np.asarray(jax.nn.softmax(jnp.asarray(logits), -1))
+    gv = np.sort(probs, -1)[:, -k:]
+    gv = gv / gv.sum(-1, keepdims=True)
+    np.testing.assert_allclose(gv.sum(-1), 1.0, rtol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(0, 2**16),
+    n=st.integers(4, 24),
+)
+def test_adaptive_masks_in_unit_interval(seed, n):
+    from repro.core import adaptive as A
+
+    rng = np.random.default_rng(seed)
+    params = A.init_adaptive(jax.random.key(seed % 97), 8, 2, 4)
+    x = jnp.asarray(rng.normal(size=(2, n, 8)), jnp.float32)
+    cfg = A.AdaptiveConfig(enabled=True, tau=0.7)
+    m, s_eff = A.node_masks(params, x, cfg, rng=jax.random.key(1),
+                            deterministic=False)
+    assert bool(jnp.all((m >= 0) & (m <= 1)))
+    assert bool(jnp.all(s_eff >= 0)) and bool(jnp.all(s_eff <= 4 * 2))

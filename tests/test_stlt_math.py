@@ -1,0 +1,138 @@
+"""Faithfulness of the STLT implementation against the paper's definitions
+(eq. 3/4 direct summation, relevance matrix, windows, error bounds)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ref as core_ref
+from repro.core import scan as scan_lib
+from repro.core import stlt as stlt_lib
+from repro.core.stlt import STLTConfig
+
+
+def _setup(rng, N=24, d=6, S=4, T=8.0):
+    x = rng.normal(size=(N, d)).astype(np.float32)
+    sigma = rng.uniform(0.02, 0.6, S)
+    omega = rng.uniform(0.0, 1.0, S)
+    return x, sigma, omega, T
+
+
+def test_unilateral_matches_direct_summation(rng):
+    """Streaming scan == eq. (4) direct sum (exponential window folded)."""
+    x, sigma, omega, T = _setup(rng)
+    L_direct = core_ref.stlt_direct(x, sigma, omega, T, window="exponential")
+    # scan path: sigma_eff = sigma + 1/T
+    lm = jnp.asarray(-(sigma + 1.0 / T), jnp.float32)
+    th = jnp.asarray(-omega, jnp.float32)
+    L_scan = scan_lib.stlt_transform(jnp.asarray(x)[None], lm, th)[0]
+    np.testing.assert_allclose(np.asarray(L_scan), L_direct, rtol=2e-4, atol=1e-4)
+
+
+def test_bilateral_matches_direct_summation(rng):
+    x, sigma, omega, T = _setup(rng)
+    L_direct = core_ref.stlt_direct(x, sigma, omega, T, window="exponential",
+                                    bidirectional=True)
+    lm = jnp.asarray(-(sigma + 1.0 / T), jnp.float32)
+    th = jnp.asarray(-omega, jnp.float32)
+    xb = jnp.asarray(x)[None]
+    L_f = scan_lib.stlt_transform(xb, lm, th)
+    L_b = scan_lib.stlt_transform(xb, lm, th, reverse=True)
+    S = sigma.shape[0]
+    L_bi = (L_f + L_b - jnp.broadcast_to(xb[:, :, None, :], L_f.shape))[0]
+    np.testing.assert_allclose(np.asarray(L_bi), L_direct, rtol=2e-4, atol=1e-4)
+
+
+def test_absolute_exponent_is_degenerate(rng):
+    """DESIGN.md §2: the paper's literal e^{-s m Delta} kernel is position-
+    non-stationary — coefficient magnitudes collapse like e^{-sigma n} with
+    absolute position, while the relative reading (the one the §3.3
+    recurrence computes) stays O(1). This motivates the relative-decay
+    implementation choice."""
+    x = np.ones((64, 1), np.float32)
+    sigma = np.array([0.5])
+    omega = np.array([0.0])
+    L_rel = core_ref.stlt_direct(x, sigma, omega, T=1e9, window="none")
+    L_abs = core_ref.stlt_direct(x, sigma, omega, T=1e9, window="none",
+                                 absolute_exponent=True)
+    mag_rel = np.abs(L_rel[:, 0, 0])
+    mag_abs = np.abs(L_abs[:, 0, 0])
+    # relative form converges to the geometric sum 1/(1-e^-sigma)
+    assert abs(mag_rel[-1] - 1.0 / (1 - np.exp(-0.5))) < 1e-3
+    # absolute form saturates: later tokens contribute e^{-sigma m} ~ 0,
+    # so L_abs stops changing (token n=63 has weight e^{-31.5})
+    assert abs(mag_abs[-1] - mag_abs[32]) < 1e-6  # saturated (vs O(1) growth)
+    assert abs(np.exp(-0.5 * 63)) < 1e-12  # the weight the last token gets
+
+
+def test_hann_factorized_matches_direct(rng):
+    """FFT-conv hann path == direct windowed sum + node readout."""
+    N, d, S = 20, 8, 4
+    x = rng.normal(size=(1, N, d * S // S * 4)).astype(np.float32)  # d_model=32
+    # init_T < hann_support so the conv truncation and the window's own
+    # support coincide (the direct sum cuts at T, the FFT conv at support)
+    cfg = STLTConfig(d_model=32, num_heads=4, num_nodes=S, window="hann",
+                     hann_support=16, chunk=8, init_T=6.0)
+    params = stlt_lib.init_stlt(jax.random.key(0), cfg)
+    y, _ = stlt_lib.apply_stlt(params, cfg, jnp.asarray(x))
+    # direct: per head, L via direct sum with hann window on the value proj
+    from repro.core.nodes import node_poles
+    log_mag, theta, sigma, T = node_poles(params["nodes"], fold_window=False)
+    v = (jnp.asarray(x) @ params["w_v"]).reshape(1, N, 4, 8).transpose(0, 2, 1, 3)
+    z_direct = np.zeros((1, 4, N, 8), np.float32)
+    u = np.asarray(params["nodes"]["u_re"]) + 1j * np.asarray(params["nodes"]["u_im"])
+    for h in range(4):
+        L = core_ref.stlt_direct(
+            np.asarray(v[0, h]), np.asarray(sigma[h]), -np.asarray(theta[h]),
+            float(T[h]), window="hann",
+        )
+        # finite support: hann window support T_h; direct sum handles it
+        z_direct[0, h] = core_ref.factorized_readout_direct(L, u[h])
+    z_direct = z_direct.transpose(0, 2, 1, 3).reshape(1, N, 32)
+    y_direct = z_direct @ np.asarray(params["w_o"])
+    np.testing.assert_allclose(np.asarray(y), y_direct, rtol=5e-3, atol=5e-3)
+
+
+def test_relevance_mode_matches_direct(rng):
+    """softmax(R/sqrt(S)) V with R from the direct-sum L (causal)."""
+    N, S = 12, 4
+    cfg = STLTConfig(d_model=16, num_heads=2, num_nodes=S, mode="relevance",
+                     engine="associative")
+    params = stlt_lib.init_stlt(jax.random.key(1), cfg)
+    x = jnp.asarray(rng.normal(size=(1, N, 16)), jnp.float32)
+    y, _ = stlt_lib.apply_stlt(params, cfg, x)
+
+    from repro.core.nodes import node_poles
+    _, theta, sigma, T = node_poles(params["nodes"], fold_window=True)
+    sig_eff = np.asarray(sigma) + 1.0 / np.asarray(T)[:, None]
+    xh = np.asarray(x).reshape(1, N, 2, 8).transpose(0, 2, 1, 3)
+    v = (np.asarray(x) @ np.asarray(params["w_v"])).reshape(1, N, 2, 8).transpose(0, 2, 1, 3)
+    z = np.zeros_like(v)
+    for h in range(2):
+        L = core_ref.stlt_direct(xh[0, h], sig_eff[h], -np.asarray(theta[h]),
+                                 T=1e18, window="none")
+        R = core_ref.relevance_direct(L)
+        mask = np.tril(np.ones((N, N), bool))
+        R = np.where(mask, R, -np.inf)
+        A = jax.nn.softmax(jnp.asarray(R), axis=-1)
+        z[0, h] = np.asarray(A) @ v[0, h]
+    y_direct = z.transpose(0, 2, 1, 3).reshape(1, N, 16) @ np.asarray(params["w_o"])
+    np.testing.assert_allclose(np.asarray(y), y_direct, rtol=2e-3, atol=2e-3)
+
+
+def test_error_bound_decay_with_S():
+    """§3.7: reconstruction error of the node basis decays as S grows."""
+    errs = [core_ref.reconstruction_error(N=256, S=s) for s in (2, 4, 8, 16, 32)]
+    assert all(b <= a * 1.05 for a, b in zip(errs, errs[1:])), errs
+    assert errs[-1] < 0.15 * errs[0], errs  # 0.35 -> 0.048 measured
+
+
+def test_half_life_interpretability():
+    from repro.core import half_lives, init_nodes
+
+    nodes = init_nodes(jax.random.key(0), 2, 8)
+    hl = half_lives({k: v for k, v in nodes.items()})
+    assert hl.shape == (2, 8)
+    assert bool(jnp.all(hl > 0))
+    # log-spaced init spans short and long half-lives
+    assert float(hl.max()) / float(hl.min()) > 50

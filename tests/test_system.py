@@ -1,0 +1,110 @@
+"""End-to-end behaviour: training runs learn, resume is exact, the paper's
+claims hold at smoke scale (linear decode state, STLT trains comparably to
+attention on the same data)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import TrainConfig
+from repro.data import lm_batch_stream
+from repro.launch.train import make_step
+from repro.models import transformer as T
+from conftest import small_cfg
+
+
+def _train(cfg, steps=30, batch=8, seq=64, seed=0):
+    tcfg = TrainConfig(total_steps=steps, warmup_steps=5, seed=seed,
+                       learning_rate=3e-3)
+    opt, step_fn = make_step(cfg, tcfg)
+    params = T.init_lm(jax.random.key(seed), cfg)
+    state = opt.init(params)
+    losses = []
+    for s in range(steps):
+        b = lm_batch_stream(seed, s, batch, seq, cfg.vocab)
+        batch_j = {k: jnp.asarray(v) for k, v in b.items()}
+        params, state, m = step_fn(params, state, batch_j, s)
+        losses.append(float(m["ce"]))
+    return losses
+
+
+def test_stlt_lm_learns():
+    cfg = small_cfg(mixer="stlt", stlt_nodes=8, stlt_chunk=16, num_layers=2)
+    losses = _train(cfg, steps=80)
+    assert min(losses) < losses[0] - 0.3, (losses[0], min(losses))
+
+
+def test_stlt_adaptive_learns():
+    cfg = small_cfg(mixer="stlt", stlt_nodes=8, stlt_chunk=16, stlt_adaptive=True)
+    losses = _train(cfg, steps=80)
+    assert min(losses) < losses[0] - 0.25
+
+
+def test_stlt_tracks_attention_baseline():
+    """Paper Tables 1/2: STLT is competitive with attention at equal size.
+    At smoke scale we assert it reaches within a fraction of attention's
+    loss drop on the same data."""
+    cfg_a = small_cfg(mixer="attention")
+    cfg_s = small_cfg(mixer="stlt", stlt_nodes=8, stlt_chunk=16)
+    la = _train(cfg_a, steps=80)
+    ls = _train(cfg_s, steps=80)
+    drop_a = la[0] - min(la)
+    drop_s = ls[0] - min(ls)
+    # the factorized (linear-readout) STLT learns; the full quality
+    # comparison vs attention runs in benchmarks/lm_ppl.py with the
+    # relevance readout and longer training (paper Table 1 proxy)
+    assert drop_a > 0.8 and drop_s > 0.2 * drop_a, (drop_a, drop_s)
+
+
+def test_training_is_deterministic():
+    cfg = small_cfg(mixer="stlt", stlt_nodes=4)
+    l1 = _train(cfg, steps=5)
+    l2 = _train(cfg, steps=5)
+    np.testing.assert_allclose(l1, l2, rtol=1e-6)
+
+
+def test_checkpoint_resume_matches_uninterrupted(tmp_path):
+    """Train 10 steps straight == train 5, checkpoint, restore, train 5."""
+    from repro.checkpoint import CheckpointManager
+
+    cfg = small_cfg(mixer="stlt", stlt_nodes=4)
+    tcfg = TrainConfig(total_steps=10, warmup_steps=2, seed=3, learning_rate=1e-3)
+    opt, step_fn = make_step(cfg, tcfg)
+
+    def run(start, stop, state):
+        for s in range(start, stop):
+            b = lm_batch_stream(3, s, 2, 32, cfg.vocab)
+            bj = {k: jnp.asarray(v) for k, v in b.items()}
+            p, o, _ = step_fn(state["params"], state["opt"], bj, s)
+            state = {"params": p, "opt": o}
+        return state
+
+    params = T.init_lm(jax.random.key(3), cfg)
+    gold = run(0, 10, {"params": params, "opt": opt.init(params)})
+
+    mgr = CheckpointManager(str(tmp_path), async_saves=False)
+    half = run(0, 5, {"params": params, "opt": opt.init(params)})
+    mgr.save(4, half)
+    restored, step = mgr.restore_or_init(lambda: {"params": params, "opt": opt.init(params)})
+    assert step == 4
+    resumed = run(5, 10, restored)
+    for a, b in zip(jax.tree_util.tree_leaves(gold["params"]),
+                    jax.tree_util.tree_leaves(resumed["params"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_long_context_streaming_constant_memory():
+    """Stream tokens through the decode state: the STLT state never grows
+    (the paper's >100k-token claim, scaled to CPU)."""
+    cfg = small_cfg(mixer="stlt", stlt_nodes=8)
+    params = T.init_lm(jax.random.key(0), cfg)
+    state = T.init_decode_state(cfg, batch=1, max_len=64)
+    from repro.utils import tree_bytes
+    b0 = tree_bytes(state)
+    tok = jnp.zeros((1,), jnp.int32)
+    step = jax.jit(lambda t, s: T.decode_step(params, cfg, t, s))
+    for _ in range(64):
+        logits, state = step(tok, state)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    assert tree_bytes(state) == b0
+    assert bool(jnp.isfinite(logits).all())
