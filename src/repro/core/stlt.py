@@ -368,7 +368,7 @@ def stlt_prefill(params: dict, cfg: STLTConfig, x: jax.Array):
         take = min(W, N)
         buf = jnp.zeros((B, H, W, cfg.head_dim), jnp.float32)
         buf = buf.at[:, :, :take].set(v[:, :, ::-1][:, :, :take].astype(jnp.float32))
-        state = {"buf": buf, "pos": jnp.asarray(N, jnp.int32)}
+        state = {"buf": buf, "pos": jnp.full((B,), N, jnp.int32)}
     else:
         vh = v.transpose(1, 0, 2, 3)  # [H, B, N, dh]
 
@@ -393,15 +393,37 @@ def stlt_prefill(params: dict, cfg: STLTConfig, x: jax.Array):
 
 
 def init_stlt_state(cfg: STLTConfig, batch: int, dtype=jnp.float32):
-    """O(S*d) streaming state (the paper's headline memory claim)."""
+    """O(S*d) streaming state (the paper's headline memory claim).
+
+    Every leaf carries a leading [batch] axis (including the hann ring's
+    ``pos``) so states are sliceable/splicable per sequence — the invariant
+    the serving slot pool relies on (see ``stlt_state_slice``)."""
     H, S, dh = cfg.num_heads, cfg.num_nodes, cfg.head_dim
     if cfg.window == "hann":
         return {"buf": jnp.zeros((batch, H, cfg.hann_support, dh), dtype),
-                "pos": jnp.zeros((), jnp.int32)}
+                "pos": jnp.zeros((batch,), jnp.int32)}
     return {
         "h_re": jnp.zeros((batch, H, S, dh), dtype),
         "h_im": jnp.zeros((batch, H, S, dh), dtype),
     }
+
+
+def stlt_state_slice(state: dict, index, length: int = 1) -> dict:
+    """Slice ``length`` sequences starting at ``index`` out of a batched
+    STLT state (exponential h_re/h_im or hann ring buffer)."""
+    return jax.tree_util.tree_map(
+        lambda leaf: jax.lax.dynamic_slice_in_dim(leaf, index, length, axis=0),
+        state,
+    )
+
+
+def stlt_state_insert(pool: dict, state: dict, index) -> dict:
+    """Splice a (small-batch) STLT state into a batched pool at ``index``."""
+    return jax.tree_util.tree_map(
+        lambda p, s: jax.lax.dynamic_update_slice_in_dim(
+            p, s.astype(p.dtype), index, axis=0),
+        pool, state,
+    )
 
 
 def apply_stlt_step(params: dict, cfg: STLTConfig, x_t: jax.Array, state: dict):

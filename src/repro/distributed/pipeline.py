@@ -21,6 +21,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.utils import shard_map as shard_map_compat
+
 
 def pipeline_apply(
     stage_fn: Callable,     # (stage_params, x) -> y   (one stage's compute)
@@ -67,7 +69,7 @@ def pipeline_apply(
         outs = jax.lax.ppermute(outs, axis, [((D - 1 + i) % D, i) for i in range(D)])
         return outs
 
-    shmap = jax.shard_map(
+    shmap = shard_map_compat(
         local,
         mesh=mesh,
         in_specs=(P(axis), P(None)),

@@ -1,7 +1,10 @@
 """Serving driver: batched requests through the ServeEngine.
 
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --reduced \
-      --requests 8 --prompt-len 32 --max-new 16
+      --requests 8 --prompt-len 32 --max-new 16 --mode continuous
+
+``--mode continuous`` (default) is the slot-level continuous-batching
+scheduler; ``--mode wave`` is the legacy admission-wave baseline.
 """
 from __future__ import annotations
 
@@ -30,6 +33,7 @@ def main(argv=None):
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=256)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--mode", default="continuous", choices=["continuous", "wave"])
     args = ap.parse_args(argv)
 
     cfg = paper_small() if args.arch is None else configs_lib.get_config(
@@ -51,13 +55,18 @@ def main(argv=None):
         for i in range(args.requests)
     ]
     t0 = time.time()
-    results = eng.serve(reqs, slots=args.slots, prompt_len=args.prompt_len)
+    results, stats = eng.serve(reqs, slots=args.slots, prompt_len=args.prompt_len,
+                               mode=args.mode, return_stats=True)
     dt = time.time() - t0
     n_tok = sum(len(v) for v in results.values())
     for rid in sorted(results):
         print(f"  req {rid}: {results[rid][:12]}{'...' if len(results[rid]) > 12 else ''}")
-    print(f"[serve] {len(reqs)} requests, {n_tok} tokens in {dt:.2f}s "
-          f"({n_tok/max(dt,1e-9):.1f} tok/s)")
+    lat = sorted(s["finish"] - s["arrival"] for s in stats.values())
+    p50 = lat[len(lat) // 2]
+    p99 = lat[min(len(lat) - 1, int(len(lat) * 0.99))]
+    print(f"[serve] mode={args.mode}: {len(reqs)} requests, {n_tok} tokens in "
+          f"{dt:.2f}s ({n_tok/max(dt,1e-9):.1f} tok/s), "
+          f"latency p50={p50} p99={p99} ticks")
 
 
 if __name__ == "__main__":

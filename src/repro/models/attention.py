@@ -185,36 +185,46 @@ def apply_attention(
 
 
 def init_kv_cache(cfg: AttentionConfig, batch: int, max_len: int, dtype=jnp.float32):
-    """Ring buffer when windowed (bounded memory), linear buffer otherwise."""
+    """Ring buffer when windowed (bounded memory), linear buffer otherwise.
+
+    ``pos`` is a per-sequence [batch] vector so caches from sequences at
+    different decode depths can share one batched cache (slot pools)."""
     size = min(max_len, cfg.window) if cfg.window > 0 else max_len
     return {
         "k": jnp.zeros((batch, size, cfg.num_kv_heads, cfg.dh), dtype),
         "v": jnp.zeros((batch, size, cfg.num_kv_heads, cfg.dh), dtype),
-        "pos": jnp.zeros((), jnp.int32),
+        "pos": jnp.zeros((batch,), jnp.int32),
     }
 
 
 def apply_attention_step(params, cfg: AttentionConfig, x_t: jax.Array, cache: dict):
-    """One decode step. x_t [B, d] -> (y_t [B, d], cache')."""
+    """One decode step. x_t [B, d] -> (y_t [B, d], cache').
+
+    Each batch row advances independently (``cache["pos"]`` is [B]): RoPE
+    angles, cache write slots, and validity masks are all per-row, so a
+    continuous-batching slot pool can hold sequences of different depths.
+    """
     B, d = x_t.shape
     pos = cache["pos"]
-    q, k, v = _qkv(params, cfg, x_t[:, None, :], jnp.asarray(pos)[None])
+    if pos.ndim == 0:  # legacy scalar-pos caches
+        pos = jnp.full((B,), pos, jnp.int32)
+    q, k, v = _qkv(params, cfg, x_t[:, None, :], pos[:, None])
     size = cache["k"].shape[1]
-    slot = pos % size if cfg.window > 0 else pos
-    ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
-    cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+    slot = pos % size if cfg.window > 0 else pos  # [B]
+    bidx = jnp.arange(B)
+    ck = cache["k"].at[bidx, slot].set(k[:, 0])
+    cv = cache["v"].at[bidx, slot].set(v[:, 0])
     # attend over valid cache entries
     G = cfg.num_heads // cfg.num_kv_heads
     qg = q.reshape(B, 1, cfg.num_kv_heads, G, cfg.dh)
     s = jnp.einsum("bnkgd,bmkd->bkgnm", qg, ck) / math.sqrt(cfg.dh)
-    idx = jnp.arange(size)
+    idx = jnp.arange(size)[None, :]  # [1, size]
     if cfg.window > 0:
-        valid = (idx <= slot) | (pos >= size)  # ring: all slots valid once full
-        age_ok = jnp.ones_like(valid)
-        ok = valid & age_ok
+        # ring: all slots valid once full
+        ok = (idx <= slot[:, None]) | (pos[:, None] >= size)
     else:
-        ok = idx <= pos
-    s = jnp.where(ok[None, None, None, None, :], s.astype(jnp.float32), NEG_INF)
+        ok = idx <= pos[:, None]
+    s = jnp.where(ok[:, None, None, None, :], s.astype(jnp.float32), NEG_INF)
     p = jax.nn.softmax(s, axis=-1).astype(x_t.dtype)
     o = jnp.einsum("bkgnm,bmkd->bnkgd", p, cv).reshape(B, 1, -1)
     y = (o @ params["wo"])[:, 0]
@@ -245,5 +255,5 @@ def prefill_kv_cache(params, cfg: AttentionConfig, x: jax.Array, max_len: int):
     else:
         cache["k"] = jax.lax.dynamic_update_slice(cache["k"], k, (0, 0, 0, 0))
         cache["v"] = jax.lax.dynamic_update_slice(cache["v"], v, (0, 0, 0, 0))
-    cache["pos"] = jnp.asarray(N, jnp.int32)
+    cache["pos"] = jnp.full((B,), N, jnp.int32)
     return y, cache

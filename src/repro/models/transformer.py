@@ -276,18 +276,24 @@ def lm_loss(
 
 
 def init_decode_state(cfg: ModelConfig, batch: int, max_len: int):
-    """Per-layer caches, mirroring the execution plan's group structure."""
+    """Per-layer caches, mirroring the execution plan's group structure.
+
+    Positions are per-sequence [batch] vectors (not scalars): a slot pool
+    holds sequences admitted at different times, each at its own depth.
+    """
     states = []
     for btype, count in execution_plan(cfg):
         one = _init_block_state(cfg, btype, batch, max_len)
         if count > 1:
+            # repeat (not zero) so non-zero inits survive stacking — e.g. the
+            # xLSTM max-tracker m = -1e30
             st = jax.tree_util.tree_map(
-                lambda x: jnp.zeros((count,) + x.shape, x.dtype), one
+                lambda x: jnp.repeat(x[None], count, axis=0), one
             )
         else:
             st = one
         states.append(st)
-    return {"layers": states, "pos": jnp.zeros((), jnp.int32)}
+    return {"layers": states, "pos": jnp.zeros((batch,), jnp.int32)}
 
 
 def _init_block_state(cfg: ModelConfig, btype: str, batch: int, max_len: int):
@@ -364,7 +370,7 @@ def prefill(params: dict, cfg: ModelConfig, inputs: jax.Array, max_len: int):
         logits = x_last @ params["lm_head"]["kernel"]
     else:
         logits = L.unembed(params["embed"], x_last)
-    return logits, {"layers": states, "pos": jnp.asarray(N, jnp.int32)}
+    return logits, {"layers": states, "pos": jnp.full((B,), N, jnp.int32)}
 
 
 def _block_step(params, cfg: ModelConfig, btype: str, x_t, state, pos):
@@ -397,14 +403,23 @@ def _block_step(params, cfg: ModelConfig, btype: str, x_t, state, pos):
 
 
 def decode_step(params: dict, cfg: ModelConfig, token_t: jax.Array, state: dict):
-    """One token for the whole stack. token_t [B] ints (or [B, d] embeddings)."""
+    """One token for the whole stack. token_t [B] ints (or [B, d] embeddings).
+
+    ``state["pos"]`` is a per-sequence [B] vector; positional encodings are
+    evaluated per row so co-resident slots may sit at different depths.
+    """
     pos = state["pos"]
+    if pos.ndim == 0:  # legacy scalar-pos states
+        pos = jnp.full((token_t.shape[0],), pos, jnp.int32)
     if jnp.issubdtype(token_t.dtype, jnp.integer):
         x_t = L.embed(params["embed"], token_t).astype(cfg.act_dtype)
     else:
         x_t = token_t.astype(cfg.act_dtype)
     if cfg.mixer != "attention" or cfg.family in ("xlstm",):
-        x_t = x_t + L.sinusoidal_pe(1, cfg.d_model, offset=pos, dtype=x_t.dtype)[0]
+        pe = jax.vmap(
+            lambda p: L.sinusoidal_pe(1, cfg.d_model, offset=p, dtype=x_t.dtype)[0]
+        )(pos)
+        x_t = x_t + pe
 
     new_states = []
     for (btype, count), stacked, st in zip(
@@ -428,3 +443,55 @@ def decode_step(params: dict, cfg: ModelConfig, token_t: jax.Array, state: dict)
     else:
         logits = L.unembed(params["embed"], x_t)
     return logits, {"layers": new_states, "pos": pos + 1}
+
+
+# ---------------------------------------------------------------------------
+# Slot pool (continuous-batching serving)
+# ---------------------------------------------------------------------------
+#
+# A decode-state pytree built by init_decode_state(cfg, batch=n_slots, ...) is
+# a POOL: every leaf carries the slot axis — axis 0 normally, axis 1 for
+# scan-over-layers groups (whose leaves are stacked [count, batch, ...]).
+# The helpers below splice single-sequence states in and out of a pool along
+# that axis, uniformly across attention KV caches, STLT h_re/h_im, hann ring
+# buffers, rg-LRU / xLSTM recurrent states, and all per-sequence positions.
+
+
+def _slot_axis(count: int) -> int:
+    return 1 if count > 1 else 0
+
+
+def insert_slot(pool: dict, state: dict, slot, cfg: ModelConfig) -> dict:
+    """Splice a batch-1 decode state (e.g. fresh from ``prefill``) into slot
+    ``slot`` of a pooled decode state. jit-safe; ``slot`` may be traced."""
+    layers = []
+    for (btype, count), pl, sl in zip(
+        execution_plan(cfg), pool["layers"], state["layers"]
+    ):
+        ax = _slot_axis(count)
+        layers.append(jax.tree_util.tree_map(
+            lambda p, s: jax.lax.dynamic_update_slice_in_dim(
+                p, s.astype(p.dtype), slot, axis=ax),
+            pl, sl,
+        ))
+    pos = jax.lax.dynamic_update_slice_in_dim(
+        pool["pos"], state["pos"].astype(pool["pos"].dtype), slot, axis=0)
+    return {"layers": layers, "pos": pos}
+
+
+def extract_slot(pool: dict, slot, cfg: ModelConfig) -> dict:
+    """The inverse of ``insert_slot``: the batch-1 decode state of one slot."""
+    layers = []
+    for (btype, count), pl in zip(execution_plan(cfg), pool["layers"]):
+        ax = _slot_axis(count)
+        layers.append(jax.tree_util.tree_map(
+            lambda p: jax.lax.dynamic_slice_in_dim(p, slot, 1, axis=ax), pl,
+        ))
+    return {"layers": layers,
+            "pos": jax.lax.dynamic_slice_in_dim(pool["pos"], slot, 1, axis=0)}
+
+
+def reset_slot(pool: dict, slot, cfg: ModelConfig, max_len: int) -> dict:
+    """Return ``slot`` to its pristine init state (zeros, pos 0, and the
+    correct non-zero init for states like the xLSTM max-tracker)."""
+    return insert_slot(pool, init_decode_state(cfg, 1, max_len), slot, cfg)

@@ -1,21 +1,46 @@
-"""Batched serving engine: parallel prefill + jitted decode loop, with a
-slot-based continuous-batching scheduler.
+"""Slot-level continuous-batching serve engine.
 
 Key property being served (the paper's headline): for STLT/SSM/hybrid archs
 the per-sequence decode state is O(S*d) / O(d^2) — independent of context
 length — so a single engine instance sustains 512k-token contexts at the
 same memory as 2k (benchmarks/scaling.py measures this).
 
+Architecture
+------------
+The engine owns a fixed pool of ``n_slots`` decode slots whose layer states
+(attention KV caches, STLT ``h_re``/``h_im``, hann ring buffers, rg-LRU /
+xLSTM recurrences) live in ONE preallocated batched pytree built by
+``transformer.init_decode_state(cfg, batch=n_slots, max_len)``. Every
+per-sequence position in that tree is a [n_slots] vector, so co-resident
+slots sit at different depths.
+
+Three jitted operations drive it:
+
+* ``insert_slot``  — splice a freshly prefilled batch-1 state into a free
+  slot (the admission path; ``slot`` is a traced scalar so one compile
+  covers every slot).
+* ``reset_slot``   — return a released slot to its pristine init state.
+* ``decode_step``  — one batched token step for the WHOLE pool.
+
+The host-side :class:`Scheduler` tracks which slot holds which request.
+Admission is per-slot: the moment a sequence finishes (budget or EOS) its
+slot is released and the next queued request is prefilled and spliced in
+while the other slots keep decoding — no wave barrier, so one long
+generation never stalls the short requests behind it.
+
 ``ServeEngine.generate`` is the simple API (one batch in, tokens out).
-``ServeEngine.serve`` runs continuous batching: a fixed number of decode
-slots; finished sequences release their slot to queued requests, prefill
-happens per admission wave.
+``ServeEngine.serve`` runs the scheduler; ``mode="wave"`` keeps the legacy
+admission-wave engine (a whole wave drains before the next is admitted) as a
+baseline for benchmarks/serving.py. Time is measured in ticks: one batched
+decode step == one tick, which is also the unit of the optional per-request
+``arrivals`` trace and of the latency stats returned by
+``serve(..., return_stats=True)``.
 """
 from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Callable, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -23,7 +48,12 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import transformer as T
-from repro.serving.sampler import sample_token
+from repro.serving.sampler import (
+    advance_slots,
+    sample_slot_tokens,
+    sample_token,
+    split_slot_keys,
+)
 
 
 @dataclasses.dataclass
@@ -31,18 +61,59 @@ class Request:
     prompt: np.ndarray          # [L] int32
     max_new_tokens: int
     id: int = 0
+    temperature: Optional[float] = None  # None -> engine default
+
+
+class Scheduler:
+    """Host-side slot bookkeeping: which request occupies which slot, how
+    many tokens it has emitted, and when it arrived/was admitted."""
+
+    def __init__(self, n_slots: int):
+        self.n_slots = n_slots
+        self.req = [None] * n_slots          # slot -> Request | None
+        self.live = np.zeros(n_slots, bool)
+        self.emitted = np.zeros(n_slots, np.int64)
+        self.budgets = np.zeros(n_slots, np.int64)
+        self.stats: dict[int, dict] = {}
+
+    def free_slots(self):
+        return [s for s in range(self.n_slots) if not self.live[s]]
+
+    def bind(self, slot: int, req: Request, arrival: int, tick: int):
+        self.req[slot] = req
+        self.live[slot] = True
+        self.emitted[slot] = 0
+        self.budgets[slot] = req.max_new_tokens
+        self.stats[req.id] = {"arrival": arrival, "admit": tick,
+                              "finish": None, "n_tokens": 0}
+
+    def release(self, slot: int, tick: int):
+        req = self.req[slot]
+        self.stats[req.id]["finish"] = tick
+        self.stats[req.id]["n_tokens"] = int(self.emitted[slot])
+        self.req[slot] = None
+        self.live[slot] = False
 
 
 class ServeEngine:
     def __init__(self, params, cfg: ModelConfig, max_len: int = 4096,
-                 temperature: float = 0.0, eos_id: int = -1):
+                 temperature: float = 0.0, eos_id: int = -1, top_k: int = 0):
         self.params = params
         self.cfg = cfg
         self.max_len = max_len
         self.temperature = temperature
         self.eos_id = eos_id
+        self.top_k = top_k
         self._prefill = jax.jit(partial(T.prefill, cfg=cfg, max_len=max_len))
         self._step = jax.jit(partial(T.decode_step, cfg=cfg))
+        self._insert = jax.jit(partial(T.insert_slot, cfg=cfg))
+        self._reset = jax.jit(partial(T.reset_slot, cfg=cfg, max_len=max_len))
+        self._sample = jax.jit(partial(sample_slot_tokens, top_k=top_k))
+        self._split = jax.jit(split_slot_keys)
+        # only unbounded causal attention allocates a length-bounded cache;
+        # windowed attention uses a ring and STLT/SSM states are O(1) in N
+        self._length_bounded = any(
+            bt == "attn" for bt, _ in T.execution_plan(cfg))
 
     # ------------------------------------------------------------------ simple
     def generate(self, prompts: np.ndarray, max_new_tokens: int, rng=None):
@@ -50,52 +121,213 @@ class ServeEngine:
         rng = rng if rng is not None else jax.random.key(0)
         logits, state = self._prefill(self.params, inputs=jnp.asarray(prompts))
         outs = []
-        tok = sample_token(logits, rng, self.temperature)
+        tok = sample_token(logits, rng, self.temperature, self.top_k)
         outs.append(tok)
         for i in range(max_new_tokens - 1):
             rng, sub = jax.random.split(rng)
             logits, state = self._step(self.params, token_t=tok, state=state)
-            tok = sample_token(logits, sub, self.temperature)
+            tok = sample_token(logits, sub, self.temperature, self.top_k)
             outs.append(tok)
         return np.stack([np.asarray(t) for t in outs], axis=1)
 
     # ------------------------------------------------------- continuous batching
-    def serve(self, requests: list, slots: int = 4, prompt_len: Optional[int] = None):
-        """Slot-based continuous batching over a request list.
+    def serve(self, requests: list, slots: int = 4,
+              prompt_len: Optional[int] = None, mode: str = "continuous",
+              arrivals=None, rng_seed: int = 0, return_stats: bool = False):
+        """Serve a request list. Returns {request_id: np.ndarray tokens}
+        (plus a per-request stats dict when ``return_stats``).
 
-        Admission wave: up to ``slots`` requests are padded to a common
-        prompt length and prefilled together; decode proceeds batched, and a
-        sequence that reaches its token budget (or EOS) frees its slot. When
-        enough slots are free (or the wave drains), the next wave is admitted.
-        Returns {request_id: np.ndarray tokens}.
+        mode="continuous": per-slot admission (default). mode="wave": the
+        legacy engine — admit up to ``slots`` requests, drain them all, then
+        admit the next wave. ``arrivals`` (ticks, aligned with ``requests``)
+        gates admission; requests are admitted in arrival order. With
+        ``prompt_len`` prompts are left-padded to one static prefill shape
+        (one compile, padding enters the state); without it each request is
+        prefilled at its natural length, which is token-exact vs ``generate``
+        under greedy decoding (sampled requests draw from per-request
+        ``fold_in(id)`` rng streams, which by design differ from
+        ``generate``'s single split chain but are identical across modes).
+
+        Every request must satisfy ``prompt tokens + max_new_tokens <=
+        max_len`` (the attention KV allocation); violations raise at
+        admission rather than silently truncating the cache.
         """
+        if slots < 1:
+            raise ValueError(f"slots must be >= 1 (got {slots})")
+        if mode == "wave":
+            return self._serve_wave(requests, slots, prompt_len,
+                                    arrivals, rng_seed, return_stats)
+        if mode != "continuous":
+            raise ValueError(f"unknown serve mode {mode!r}")
+        return self._serve_continuous(requests, slots, prompt_len,
+                                      arrivals, rng_seed, return_stats)
+
+    def _padded(self, prompt: np.ndarray, prompt_len: Optional[int]):
+        prompt = np.asarray(prompt, np.int32)
+        if prompt_len is None or len(prompt) == prompt_len:
+            return prompt
+        if len(prompt) > prompt_len:
+            raise ValueError(
+                f"prompt of {len(prompt)} tokens exceeds prompt_len={prompt_len}")
+        out = np.zeros(prompt_len, np.int32)
+        out[prompt_len - len(prompt):] = prompt  # left-pad
+        return out
+
+    def _check_fits(self, req: Request, prompt_tokens: int):
+        if self._length_bounded and prompt_tokens + req.max_new_tokens > self.max_len:
+            raise ValueError(
+                f"request {req.id}: {prompt_tokens} prompt tokens + "
+                f"{req.max_new_tokens} new tokens exceeds max_len={self.max_len}")
+
+    def _queue(self, requests, arrivals, prompt_len=None):
+        """Validate the whole request set upfront (ids, budgets, lengths,
+        arrivals) so a bad request fails before ANY decode work is spent,
+        then return (arrival, request) pairs in arrival order."""
+        ids = [r.id for r in requests]
+        if len(set(ids)) != len(ids):
+            raise ValueError(
+                "duplicate request ids (results/stats are keyed by id and "
+                f"rng streams are derived from it): {sorted(ids)}")
+        for r in requests:
+            if r.max_new_tokens < 1:
+                raise ValueError(
+                    f"request {r.id}: max_new_tokens must be >= 1 "
+                    f"(got {r.max_new_tokens})")
+            n_prompt = len(np.asarray(r.prompt))
+            if prompt_len is not None and n_prompt > prompt_len:
+                raise ValueError(
+                    f"request {r.id}: prompt of {n_prompt} tokens exceeds "
+                    f"prompt_len={prompt_len}")
+            self._check_fits(r, prompt_len if prompt_len is not None else n_prompt)
+        arrivals = [0] * len(requests) if arrivals is None else list(arrivals)
+        if len(arrivals) != len(requests):
+            raise ValueError(
+                f"arrivals has {len(arrivals)} entries for {len(requests)} requests")
+        order = sorted(range(len(requests)), key=lambda i: arrivals[i])
+        return [(int(arrivals[i]), requests[i]) for i in order]
+
+    def _serve_continuous(self, requests, slots, prompt_len, arrivals,
+                          rng_seed, return_stats):
+        cfg = self.cfg
+        sched = Scheduler(slots)
+        queue = self._queue(requests, arrivals, prompt_len)
         results: dict[int, list[int]] = {}
-        queue = list(requests)
-        rng = jax.random.key(0)
-        while queue:
-            wave = [queue.pop(0) for _ in range(min(slots, len(queue)))]
-            plen = prompt_len or max(len(r.prompt) for r in wave)
-            prompts = np.zeros((len(wave), plen), np.int32)
-            for i, r in enumerate(wave):
-                prompts[i, plen - len(r.prompt):] = r.prompt  # left-pad
-            budgets = np.array([r.max_new_tokens for r in wave])
-            logits, state = self._prefill(self.params, inputs=jnp.asarray(prompts))
-            tok = sample_token(logits, rng, self.temperature)
-            live = np.ones(len(wave), bool)
-            n_emitted = np.zeros(len(wave), np.int32)
-            for r in wave:
-                results[r.id] = []
-            while live.any():
-                t_np = np.asarray(tok)
-                for i, r in enumerate(wave):
-                    if live[i]:
-                        results[r.id].append(int(t_np[i]))
-                        n_emitted[i] += 1
-                        if n_emitted[i] >= budgets[i] or t_np[i] == self.eos_id:
-                            live[i] = False
-                if not live.any():
+
+        pool = T.init_decode_state(cfg, slots, self.max_len)
+        tok = np.zeros(slots, np.int32)
+        temps = np.full(slots, self.temperature, np.float32)
+        base_key = jax.random.key(rng_seed)
+        keys = jax.random.split(base_key, slots)
+        tick = 0
+
+        while queue or sched.live.any():
+            if not sched.live.any() and queue and queue[0][0] > tick:
+                tick = queue[0][0]  # idle: fast-forward to the next arrival
+
+            # --- admission: splice arrived requests into free slots ---------
+            for s in sched.free_slots():
+                if not queue or queue[0][0] > tick:
                     break
-                rng, sub = jax.random.split(rng)
-                logits, state = self._step(self.params, token_t=tok, state=state)
-                tok = sample_token(logits, sub, self.temperature)
-        return {rid: np.array(toks, np.int32) for rid, toks in results.items()}
+                arrival, req = queue.pop(0)
+                prompt = self._padded(req.prompt, prompt_len)
+                logits1, st1 = self._prefill(
+                    self.params, inputs=jnp.asarray(prompt[None]))
+                rkey = jax.random.fold_in(base_key, req.id)
+                temp = self.temperature if req.temperature is None else req.temperature
+                t0 = int(sample_token(logits1, rkey, temp, self.top_k)[0])
+                pool = self._insert(pool, st1, s)
+                keys = keys.at[s].set(rkey)
+                tok[s] = t0
+                temps[s] = temp
+                sched.bind(s, req, arrival, tick)
+                results[req.id] = [t0]
+                sched.emitted[s] = 1
+                if sched.emitted[s] >= sched.budgets[s] or t0 == self.eos_id:
+                    sched.release(s, tick)       # prefill-only request
+                    pool = self._reset(pool, s)
+
+            if not sched.live.any():
+                continue
+
+            # --- one batched decode step for the whole pool -----------------
+            keys, subs = self._split(keys)
+            logits, pool = self._step(self.params, token_t=jnp.asarray(tok),
+                                      state=pool)
+            nxt = np.array(self._sample(logits, subs, jnp.asarray(temps)))
+            tick += 1
+
+            new_live, new_emitted = advance_slots(
+                nxt, sched.live, sched.emitted, sched.budgets, self.eos_id)
+            for s in np.flatnonzero(sched.live):
+                results[sched.req[s].id].append(int(nxt[s]))
+            sched.emitted = new_emitted
+            for s in np.flatnonzero(sched.live & ~new_live):
+                sched.release(s, tick)
+                pool = self._reset(pool, s)
+            tok = nxt
+
+        out = {rid: np.array(toks, np.int32) for rid, toks in results.items()}
+        return (out, sched.stats) if return_stats else out
+
+    # ------------------------------------------------------------- wave (legacy)
+    def _serve_wave(self, requests, slots, prompt_len, arrivals,
+                    rng_seed, return_stats):
+        """Admission-wave baseline: a whole wave must drain before any queued
+        request is admitted — one long generation stalls every free slot.
+
+        Sampling matches the continuous path per request (same fold_in(id)
+        rng stream and per-request temperature), so for a given request set
+        the two modes differ only in scheduling."""
+        results: dict[int, list[int]] = {}
+        stats: dict[int, dict] = {}
+        queue = self._queue(requests, arrivals, prompt_len)
+        base_key = jax.random.key(rng_seed)
+        tick = 0
+        while queue:
+            if queue[0][0] > tick:
+                tick = queue[0][0]
+            wave = []
+            while queue and queue[0][0] <= tick and len(wave) < slots:
+                # waves are rectangular: everyone is padded to the wave's max
+                # prompt length, so admitting a long prompt inflates every
+                # co-resident's KV footprint. Defer the candidate (FIFO) if
+                # adding it would overflow anyone's prompt+budget bound — a
+                # request alone in a wave always fits (validated upfront).
+                trial = wave + [queue[0]]
+                plen_trial = prompt_len or max(len(r.prompt) for _, r in trial)
+                if wave and self._length_bounded and any(
+                        plen_trial + r.max_new_tokens > self.max_len
+                        for _, r in trial):
+                    break
+                wave.append(queue.pop(0))
+            sched = Scheduler(len(wave))
+            plen = prompt_len or max(len(r.prompt) for _, r in wave)
+            prompts = np.stack([self._padded(r.prompt, plen) for _, r in wave])
+            temps = np.array(
+                [self.temperature if r.temperature is None else r.temperature
+                 for _, r in wave], np.float32)
+            keys = jnp.stack(
+                [jax.random.fold_in(base_key, r.id) for _, r in wave])
+            logits, state = self._prefill(self.params, inputs=jnp.asarray(prompts))
+            tok = np.array(self._sample(logits, keys, jnp.asarray(temps)))
+            for i, (arrival, r) in enumerate(wave):
+                sched.bind(i, r, arrival, tick)
+                results[r.id] = []
+            while sched.live.any():
+                new_live, new_emitted = advance_slots(
+                    tok, sched.live, sched.emitted, sched.budgets, self.eos_id)
+                for i in np.flatnonzero(sched.live):
+                    results[sched.req[i].id].append(int(tok[i]))
+                sched.emitted = new_emitted
+                for i in np.flatnonzero(sched.live & ~new_live):
+                    sched.release(i, tick)
+                if not sched.live.any():
+                    break
+                keys, subs = self._split(keys)
+                logits, state = self._step(self.params, token_t=jnp.asarray(tok),
+                                           state=state)
+                tok = np.array(self._sample(logits, subs, jnp.asarray(temps)))
+                tick += 1
+            stats.update(sched.stats)
+        out = {rid: np.array(toks, np.int32) for rid, toks in results.items()}
+        return (out, stats) if return_stats else out

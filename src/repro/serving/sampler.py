@@ -1,4 +1,8 @@
-"""Token sampling: greedy / temperature / top-k."""
+"""Token sampling: greedy / temperature / top-k, plus the per-slot batched
+variants used by the continuous-batching engine (each decode slot carries its
+own rng stream and temperature, and EOS/budget bookkeeping is a single
+vectorized update over the slot pool).
+"""
 from __future__ import annotations
 
 import jax
@@ -15,3 +19,44 @@ def sample_token(logits: jax.Array, rng: jax.Array, temperature: float = 0.0,
         kth = jax.lax.top_k(logits, top_k)[0][..., -1:]
         logits = jnp.where(logits < kth, -1e30, logits)
     return jax.random.categorical(rng, logits, axis=-1).astype(jnp.int32)
+
+
+def sample_slot_tokens(logits: jax.Array, rngs: jax.Array,
+                       temperatures: jax.Array, top_k: int = 0):
+    """Per-slot sampling: each row has its own rng key and temperature.
+
+    logits [B, V]; rngs: key array [B]; temperatures [B] (<= 0 -> greedy for
+    that slot). Branchless so one jitted program covers mixed greedy/sampled
+    pools.
+    """
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    safe_t = jnp.where(temperatures > 0, temperatures, 1.0)[:, None]
+    scaled = logits.astype(jnp.float32) / safe_t
+    if top_k > 0:
+        kth = jax.lax.top_k(scaled, top_k)[0][..., -1:]
+        scaled = jnp.where(scaled < kth, -1e30, scaled)
+    sampled = jax.vmap(jax.random.categorical)(rngs, scaled).astype(jnp.int32)
+    return jnp.where(temperatures > 0, sampled, greedy)
+
+
+def split_slot_keys(rngs: jax.Array):
+    """Advance every slot's rng stream: key array [B] -> (carry [B], sub [B])."""
+    pairs = jax.vmap(lambda k: jax.random.split(k, 2))(rngs)  # [B, 2]
+    return pairs[:, 0], pairs[:, 1]
+
+
+def advance_slots(tokens, live, n_emitted, budgets, eos_id: int):
+    """Batched EOS/budget masking over the slot pool.
+
+    tokens [B] just emitted; live [B] bool; n_emitted [B] tokens emitted so
+    far (BEFORE this step); budgets [B]. Returns (new_live, new_n_emitted):
+    dead slots are unchanged; a live slot dies when it hits its budget or
+    emits ``eos_id``.
+
+    Namespace-agnostic (operators only): numpy in -> numpy out, so the
+    engine's per-tick host bookkeeping never round-trips through device
+    dispatch; jnp in -> jnp out for jitted use.
+    """
+    n_new = n_emitted + live.astype(n_emitted.dtype)
+    done = (n_new >= budgets) | (tokens == eos_id)
+    return live & ~done, n_new

@@ -158,3 +158,23 @@ def with_sharding_constraint(x, spec):
         return jax.lax.with_sharding_constraint(x, spec)
     except Exception:  # pragma: no cover - no mesh context / unbound axes
         return x
+
+
+def shard_map(f, mesh, in_specs, out_specs, **kwargs):
+    """Version-compatible ``shard_map``.
+
+    Newer jax exposes ``jax.shard_map`` (with a ``check_vma`` kwarg); older
+    releases only have ``jax.experimental.shard_map.shard_map`` (with
+    ``check_rep``). Dispatch to whichever exists and translate the
+    replication-check kwarg to the installed spelling.
+    """
+    fn = getattr(jax, "shard_map", None)
+    if fn is None:
+        from jax.experimental.shard_map import shard_map as fn
+    import inspect
+
+    accepted = inspect.signature(fn).parameters
+    for ours, theirs in (("check_vma", "check_rep"), ("check_rep", "check_vma")):
+        if ours in kwargs and ours not in accepted and theirs in accepted:
+            kwargs[theirs] = kwargs.pop(ours)
+    return fn(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs)
