@@ -311,6 +311,62 @@ def stlt_chunked_fused(
     return z.reshape(orig_shape).astype(in_dtype)
 
 
+def stlt_carry_outputs(h0_re, h0_im, log_mag, theta, u_re, u_im, N: int):
+    """Output contribution of a nonzero initial carry over the next N steps.
+
+    By linearity, resuming the STLT from carry ``h0`` equals the zero-state
+    run plus the free response of the recurrence:
+
+        z_corr[n] = Re(sum_k u_k lambda_k^{n+1} h0_k),   n = 0..N-1
+
+    — how chunked prefill resumes the ``chunked_fused``/``pallas`` engines,
+    which have no native initial-state argument (DESIGN.md §Serving).
+
+    h0_re/h0_im: [B, H, S, dh]; log_mag/theta/u_re/u_im: [H, S].
+    Returns z_corr [B, H, N, dh] float32.
+    """
+    p = jnp.arange(1, N + 1, dtype=jnp.float32)            # powers 1..N
+    mag = jnp.exp(p[:, None, None] * log_mag[None].astype(jnp.float32))
+    ang = p[:, None, None] * theta[None].astype(jnp.float32)
+    pw_re, pw_im = mag * jnp.cos(ang), mag * jnp.sin(ang)  # [N, H, S]
+    c_re = u_re[None] * pw_re - u_im[None] * pw_im         # Re(u lambda^{n+1})
+    c_im = u_re[None] * pw_im + u_im[None] * pw_re
+    h0_re = h0_re.astype(jnp.float32)
+    h0_im = h0_im.astype(jnp.float32)
+    return (jnp.einsum("nhk,bhkd->bhnd", c_re, h0_re)
+            - jnp.einsum("nhk,bhkd->bhnd", c_im, h0_im))
+
+
+def stlt_final_state(v, log_mag, theta, h0_re=None, h0_im=None):
+    """Closed-form final carry after N inputs: h_N = lambda^N h0 + sum_n
+    lambda^(N-1-n) v_n.
+
+    The direct contraction (O(N*S*d), no scan) used where an engine computes
+    outputs but not states — powers decay for |lambda| < 1, so long tails
+    underflow harmlessly to zero.
+
+    v: [B, H, N, dh]; log_mag/theta: [H, S]; h0: [B, H, S, dh] or None.
+    Returns (h_re, h_im) [B, H, S, dh] float32.
+    """
+    N = v.shape[-2]
+    v = v.astype(jnp.float32)
+    lm = log_mag.astype(jnp.float32)
+    th = theta.astype(jnp.float32)
+    e = jnp.arange(N - 1, -1, -1, dtype=jnp.float32)       # exponent N-1-n
+    mag = jnp.exp(e[:, None, None] * lm[None])             # [N, H, S]
+    ang = e[:, None, None] * th[None]
+    h_re = jnp.einsum("nhk,bhnd->bhkd", mag * jnp.cos(ang), v)
+    h_im = jnp.einsum("nhk,bhnd->bhkd", mag * jnp.sin(ang), v)
+    if h0_re is not None:
+        magN = jnp.exp(N * lm)
+        d_re, d_im = magN * jnp.cos(N * th), magN * jnp.sin(N * th)  # [H, S]
+        h0_re = h0_re.astype(jnp.float32)
+        h0_im = h0_im.astype(jnp.float32)
+        h_re = h_re + d_re[None, :, :, None] * h0_re - d_im[None, :, :, None] * h0_im
+        h_im = h_im + d_re[None, :, :, None] * h0_im + d_im[None, :, :, None] * h0_re
+    return h_re, h_im
+
+
 def stlt_transform(
     x: jax.Array,
     log_mag: jax.Array,

@@ -348,10 +348,22 @@ def _relevance_readout(params, cfg, x, v, log_mag, theta, masks):
 # ---------------------------------------------------------------------------
 
 
-def stlt_prefill(params: dict, cfg: STLTConfig, x: jax.Array):
+def stlt_prefill(params: dict, cfg: STLTConfig, x: jax.Array,
+                 state: Optional[dict] = None):
     """Parallel prefill: full-sequence outputs + the O(S*d) streaming state.
 
     x [B, N, d] -> (y [B, N, d], state). Unilateral, factorized mode.
+
+    ``state`` (optional) resumes the prefill from a carried streaming state
+    (the output of a previous ``stlt_prefill``/``init_stlt_state``), making
+    prefill chunkable at ANY token boundary (DESIGN.md §Serving):
+
+    * exponential window: the carry ``h_re/h_im`` either seeds the chunked
+      scan directly (``engine="chunked"``) or is folded in by linearity —
+      zero-state engine pass + ``stlt_carry_outputs`` free response — for the
+      fused/pallas engines, whose kernels have no initial-state argument.
+    * hann window: the ring buffer supplies the W-1 tokens of left context
+      for the finite-support convolution.
     """
     assert not cfg.bidirectional and cfg.mode == "factorized"
     B, N, d = x.shape
@@ -362,26 +374,56 @@ def stlt_prefill(params: dict, cfg: STLTConfig, x: jax.Array):
 
     if cfg.window == "hann":
         g = _hann_filters(params, cfg, None)
-        z = _hann_conv(v, g, reverse=False)
         W = cfg.hann_support
-        # ring buffer holds the last W-1 values, newest first
-        take = min(W, N)
+        if state is None:
+            z = _hann_conv(v, g, reverse=False)
+            ext = v
+            pos = jnp.zeros((B,), jnp.int32)
+        else:
+            # ring buffer (newest first) -> chronological left context; slots
+            # beyond the true depth hold zeros, matching "no input before 0".
+            ctx = state["buf"][:, :, ::-1].astype(v.dtype)  # [B, H, W, dh]
+            ext = jnp.concatenate([ctx, v], axis=2)         # [B, H, W+N, dh]
+            z = _hann_conv(ext, g, reverse=False)[:, :, W:]
+            pos = state["pos"]
+        take = min(W, ext.shape[2])
         buf = jnp.zeros((B, H, W, cfg.head_dim), jnp.float32)
-        buf = buf.at[:, :, :take].set(v[:, :, ::-1][:, :, :take].astype(jnp.float32))
-        state = {"buf": buf, "pos": jnp.full((B,), N, jnp.int32)}
+        buf = buf.at[:, :, :take].set(
+            ext[:, :, ::-1][:, :, :take].astype(jnp.float32))
+        new_state = {"buf": buf, "pos": pos + N}
+    elif cfg.engine in ("chunked_fused", "pallas"):
+        # These engines carry no initial-state argument: run them zero-state
+        # and fold the carry in by linearity (free response + closed-form
+        # final state, repro.core.scan helpers).
+        z = _run_scan(v, log_mag, theta, u_re, u_im, cfg, reverse=False)
+        h0_re = state["h_re"] if state is not None else None
+        h0_im = state["h_im"] if state is not None else None
+        if state is not None:
+            z = z + scan_lib.stlt_carry_outputs(
+                h0_re, h0_im, log_mag, theta, u_re, u_im, N).astype(z.dtype)
+        h_re, h_im = scan_lib.stlt_final_state(v, log_mag, theta, h0_re, h0_im)
+        new_state = {"h_re": h_re, "h_im": h_im}
     else:
         vh = v.transpose(1, 0, 2, 3)  # [H, B, N, dh]
+        if state is None:
+            h0_re = jnp.zeros((H, B, cfg.num_nodes, cfg.head_dim), jnp.float32)
+            h0_im = h0_re
+        else:
+            h0_re = state["h_re"].transpose(1, 0, 2, 3)
+            h0_im = state["h_im"].transpose(1, 0, 2, 3)
 
-        def per_head(vh_, lm_, th_, ur_, ui_):
+        def per_head(vh_, lm_, th_, ur_, ui_, h0r_, h0i_):
             return scan_lib.stlt_chunked(
-                vh_, lm_, th_, ur_, ui_, chunk=cfg.chunk, return_state=True
+                vh_, lm_, th_, ur_, ui_, chunk=cfg.chunk, return_state=True,
+                h0_re=h0r_, h0_im=h0i_,
             )
 
         z, (h_re, h_im) = jax.vmap(per_head)(
-            vh, log_mag, theta, u_re[:, None, :], u_im[:, None, :]
+            vh, log_mag, theta, u_re[:, None, :], u_im[:, None, :],
+            h0_re, h0_im,
         )
         z = z.transpose(1, 0, 2, 3)
-        state = {
+        new_state = {
             "h_re": h_re.transpose(1, 0, 2, 3),  # [B, H, S, dh]
             "h_im": h_im.transpose(1, 0, 2, 3),
         }
@@ -389,7 +431,7 @@ def stlt_prefill(params: dict, cfg: STLTConfig, x: jax.Array):
     z = _merge_heads(z)
     if cfg.gate:
         z = z * jax.nn.silu(x @ params["w_g"])
-    return z @ params["w_o"], state
+    return z @ params["w_o"], new_state
 
 
 def init_stlt_state(cfg: STLTConfig, batch: int, dtype=jnp.float32):

@@ -1,10 +1,15 @@
 """Serving driver: batched requests through the ServeEngine.
 
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --reduced \
-      --requests 8 --prompt-len 32 --max-new 16 --mode continuous
+      --requests 8 --prompt-len 32 --max-new 16 --mode continuous \
+      --prefill-chunk 128 --system-prompt-len 64
 
 ``--mode continuous`` (default) is the slot-level continuous-batching
 scheduler; ``--mode wave`` is the legacy admission-wave baseline.
+``--prefill-chunk N`` admits long prompts incrementally (N tokens per tick,
+interleaved with decode). ``--system-prompt-len K`` prepends a shared
+K-token system prompt to every request and serves it through the prefix
+cache, reporting the prefill FLOPs skipped.
 """
 from __future__ import annotations
 
@@ -17,7 +22,7 @@ import numpy as np
 from repro import configs as configs_lib
 from repro.launch.train import paper_small
 from repro.models import transformer as T
-from repro.serving import ServeEngine
+from repro.serving import PrefixCache, ServeEngine
 from repro.serving.engine import Request
 from repro.utils import cast_params_for_compute, tree_size
 
@@ -34,6 +39,11 @@ def main(argv=None):
     ap.add_argument("--max-len", type=int, default=256)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--mode", default="continuous", choices=["continuous", "wave"])
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunked admission size (0 = monolithic prefill)")
+    ap.add_argument("--system-prompt-len", type=int, default=0,
+                    help="shared system-prompt tokens served via the prefix cache")
+    ap.add_argument("--prefix-cache-capacity", type=int, default=32)
     args = ap.parse_args(argv)
 
     cfg = paper_small() if args.arch is None else configs_lib.get_config(
@@ -46,16 +56,32 @@ def main(argv=None):
     params = cast_params_for_compute(params, cfg.act_dtype)
     print(f"[serve] {cfg.name}: {tree_size(params)/1e6:.1f}M params")
 
+    if args.mode == "wave" and (args.prefill_chunk or args.system_prompt_len):
+        # the wave baseline prefills monolithically and never consults the
+        # cache — warming it would waste a full prefill and report nonsense
+        print("[serve] note: --prefill-chunk/--system-prompt-len apply to "
+              "continuous mode only; ignored for --mode wave")
+    use_cache = args.system_prompt_len and args.mode == "continuous"
+    cache = PrefixCache(args.prefix_cache_capacity) if use_cache else None
     eng = ServeEngine(params, cfg, max_len=args.max_len,
-                      temperature=args.temperature)
+                      temperature=args.temperature,
+                      prefill_chunk=args.prefill_chunk, prefix_cache=cache)
     rng = np.random.default_rng(0)
+    sys_len = args.system_prompt_len if use_cache else 0
+    sys_prompt = rng.integers(3, cfg.vocab, sys_len).astype(np.int32)
     reqs = [
-        Request(rng.integers(3, cfg.vocab, rng.integers(4, args.prompt_len)).astype(np.int32),
+        Request(np.concatenate([
+                    sys_prompt,
+                    rng.integers(3, cfg.vocab, rng.integers(4, args.prompt_len)).astype(np.int32)]),
                 args.max_new, id=i)
         for i in range(args.requests)
     ]
+    if cache is not None:
+        warmed = eng.warm_prefix(sys_prompt, chunk=args.prefill_chunk or None)
+        print(f"[serve] prefix cache warmed: {warmed} tokens")
     t0 = time.time()
-    results, stats = eng.serve(reqs, slots=args.slots, prompt_len=args.prompt_len,
+    results, stats = eng.serve(reqs, slots=args.slots,
+                               prompt_len=None if use_cache else args.prompt_len,
                                mode=args.mode, return_stats=True)
     dt = time.time() - t0
     n_tok = sum(len(v) for v in results.values())
@@ -67,6 +93,12 @@ def main(argv=None):
     print(f"[serve] mode={args.mode}: {len(reqs)} requests, {n_tok} tokens in "
           f"{dt:.2f}s ({n_tok/max(dt,1e-9):.1f} tok/s), "
           f"latency p50={p50} p99={p99} ticks")
+    if cache is not None:
+        prefilled = sum(s["prefilled_tokens"] for s in stats.values())
+        total = sum(s["prompt_tokens"] for s in stats.values())
+        print(f"[serve] prefix cache: {cache.stats()}; prefilled "
+              f"{prefilled}/{total} prompt tokens "
+              f"({100 * (1 - prefilled / max(total, 1)):.1f}% FLOPs skipped)")
 
 
 if __name__ == "__main__":

@@ -231,6 +231,71 @@ def apply_attention_step(params, cfg: AttentionConfig, x_t: jax.Array, cache: di
     return y, {"k": ck, "v": cv, "pos": pos + 1}
 
 
+def prefill_chunk(params, cfg: AttentionConfig, x: jax.Array, cache: dict):
+    """Resumable prefill: append one prompt chunk to an existing KV cache.
+
+    x [B, N, d]; ``cache`` as built by ``init_kv_cache``/``prefill_kv_cache``
+    with per-row depths ``cache["pos"]`` [B] — rows may sit at different
+    offsets (a slot pool mid-admission). RoPE angles, cache write slots, and
+    the causal/window validity masks are all evaluated per row, so chunked
+    prefill is exact vs a monolithic prefill at any split (DESIGN.md
+    §Serving). One softmax runs over [old cache || chunk] keys
+    (O(N * (cache_size + N)) per chunk, Sarathi-style); old-cache scores are
+    taken BEFORE the chunk is written, because a ring write may overwrite
+    slots that early chunk queries still need.
+    """
+    B, N, _ = x.shape
+    pos = cache["pos"]
+    if pos.ndim == 0:
+        pos = jnp.full((B,), pos, jnp.int32)
+    positions = pos[:, None] + jnp.arange(N)[None, :]  # [B, N] absolute
+    q, k, v = _qkv(params, cfg, x, positions)
+    size = cache["k"].shape[1]
+    total = pos + N
+
+    # absolute position held by old slot j: the largest p < pos with
+    # p % size == j (ring; negative -> never written), or j itself (linear)
+    j = jnp.arange(size)[None, :]
+    if cfg.window > 0:
+        p_old = (pos[:, None] - 1) - (pos[:, None] - 1 - j) % size  # [B, size]
+        ok_old = (p_old[:, None, :] >= 0) & (
+            p_old[:, None, :] > positions[:, :, None] - cfg.window)
+    else:
+        ok_old = jnp.broadcast_to(j[:, None, :] < pos[:, None, None], (B, N, size))
+    # within-chunk causal (+ window) mask
+    ti = jnp.arange(N)
+    ok_new = jnp.broadcast_to((ti[None, :] <= ti[:, None])[None], (B, N, N))
+    if cfg.window > 0:
+        ok_new = ok_new & (positions[:, None, :] > positions[:, :, None] - cfg.window)
+    ok = jnp.concatenate([ok_old, ok_new], axis=-1)  # [B, N, size+N]
+
+    G = cfg.num_heads // cfg.num_kv_heads
+    qg = q.reshape(B, N, cfg.num_kv_heads, G, cfg.dh)
+    keys = jnp.concatenate([cache["k"].astype(k.dtype), k], axis=1)
+    vals = jnp.concatenate([cache["v"].astype(v.dtype), v], axis=1)
+    s = jnp.einsum("bnkgd,bmkd->bkgnm", qg, keys) / math.sqrt(cfg.dh)
+    s = jnp.where(ok[:, None, None], s.astype(jnp.float32), NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+    o = jnp.einsum("bkgnm,bmkd->bnkgd", p, vals).reshape(B, N, -1)
+    y = o @ params["wo"]
+
+    # now append the chunk to the cache
+    if cfg.window > 0 and N >= size:
+        # the chunk alone overwrites the whole ring: keep the last ``size``
+        # tokens, rotated so slot (total % size) is the next write position
+        shift = total % size
+        ck = jax.vmap(lambda a, sh: jnp.roll(a, sh, axis=0))(k[:, -size:], shift)
+        cv = jax.vmap(lambda a, sh: jnp.roll(a, sh, axis=0))(v[:, -size:], shift)
+        ck = ck.astype(cache["k"].dtype)
+        cv = cv.astype(cache["v"].dtype)
+    else:
+        slot = positions % size if cfg.window > 0 else positions  # [B, N]
+        bidx = jnp.arange(B)[:, None]
+        ck = cache["k"].at[bidx, slot].set(k.astype(cache["k"].dtype))
+        cv = cache["v"].at[bidx, slot].set(v.astype(cache["v"].dtype))
+    return y, {"k": ck, "v": cv, "pos": total}
+
+
 def prefill_kv_cache(params, cfg: AttentionConfig, x: jax.Array, max_len: int):
     """Run full attention AND build the cache for subsequent decode."""
     B, N, _ = x.shape

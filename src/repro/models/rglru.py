@@ -77,19 +77,35 @@ def apply_rglru_block(params, cfg, x):
     return (gate * h) @ params["w_out"]
 
 
-def rglru_prefill(params, cfg, x):
-    """Parallel prefill: outputs + final recurrent state + conv buffer."""
+def rglru_prefill(params, cfg, x, state=None):
+    """Parallel prefill: outputs + final recurrent state + conv buffer.
+
+    ``state`` (optional) resumes from a carried state: the conv buffer
+    supplies the depthwise-conv left context and the recurrent carry ``h0``
+    enters by linearity — h_n += (prod_{t<=n} a_t) * h0 — on top of the
+    zero-state associative scan (DESIGN.md §Serving).
+    """
     B, N, d = x.shape
     gate = jax.nn.gelu(x @ params["w_gate"])
     xr = x @ params["w_x"]
-    xc = _conv_causal(xr, params["conv"])
+    if state is None:
+        xc = _conv_causal(xr, params["conv"])
+    else:
+        ext = jnp.concatenate([state["conv_buf"].astype(xr.dtype), xr], axis=1)
+        xc = _conv_causal(ext, params["conv"])[:, CONV_W - 1:]
     a, b = _rglru_gates(params, xc)
     h = scan_lib.scan_associative(a, b, axis=-2)
+    if state is not None:
+        h = h + jnp.cumprod(a, axis=-2) * state["h"][:, None, :]
     y = (gate * h.astype(x.dtype)) @ params["w_out"]
     buf = jnp.zeros((B, CONV_W - 1, d), jnp.float32)
     take = min(CONV_W - 1, N)
     if take:
         buf = buf.at[:, CONV_W - 1 - take:].set(xr[:, N - take:].astype(jnp.float32))
+    if state is not None and N < CONV_W - 1:
+        # short chunk: the old buffer still supplies the head of the window
+        keep = CONV_W - 1 - N
+        buf = buf.at[:, :keep].set(state["conv_buf"][:, N:])
     return y, {"h": h[:, -1], "conv_buf": buf}
 
 

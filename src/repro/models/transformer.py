@@ -312,23 +312,9 @@ def _init_block_state(cfg: ModelConfig, btype: str, batch: int, max_len: int):
     raise ValueError(btype)
 
 
-def _block_prefill(params, cfg: ModelConfig, btype: str, x, max_len: int):
-    """Full-sequence forward + cache construction for one block."""
-    h = L.apply_norm(cfg.norm, params["norm1"], x)
-    if btype in ("attn", "local_attn"):
-        window = cfg.local_window if btype == "local_attn" else 0
-        mixed, state = attn_lib.prefill_kv_cache(params["attn"], _attn_cfg(cfg, window), h, max_len)
-    elif btype == "stlt":
-        mixed, state = stlt_lib.stlt_prefill(params["stlt"], cfg.stlt_config(), h)
-    elif btype == "mlstm":
-        mixed, state = xlstm_lib.mlstm_prefill(params["cell"], cfg, h)
-    elif btype == "slstm":
-        mixed, state = xlstm_lib.slstm_prefill(params["cell"], cfg, h)
-    elif btype == "rglru":
-        mixed, state = rglru_lib.rglru_prefill(params["rec"], cfg, h)
-    else:
-        raise ValueError(f"prefill unsupported for block type {btype!r}")
-    x = x + mixed.astype(x.dtype)
+def _block_ffn(params, cfg: ModelConfig, x):
+    """Post-mixer half of a block (norm2 + FFN/MoE residual), aux discarded —
+    shared by the prefill paths, which never train."""
     if "norm2" in params:
         h2 = L.apply_norm(cfg.norm, params["norm2"], x)
         if cfg.is_moe:
@@ -336,7 +322,31 @@ def _block_prefill(params, cfg: ModelConfig, btype: str, x, max_len: int):
         else:
             y = L.ffn(params["ffn"], h2, act=cfg.act)
         x = x + y.astype(x.dtype)
-    return x, state
+    return x
+
+
+def _last_logits(params, cfg: ModelConfig, x):
+    """Final norm + LM head on the last position. x [B, N, d] -> [B, V]."""
+    x_last = L.apply_norm(cfg.norm, params["final_norm"], x[:, -1:, :])[:, 0]
+    if "lm_head" in params:
+        return x_last @ params["lm_head"]["kernel"]
+    return L.unembed(params["embed"], x_last)
+
+
+def _block_prefill(params, cfg: ModelConfig, btype: str, x, max_len: int):
+    """Full-sequence forward + cache construction for one block.
+
+    Attention keeps its own path (``prefill_kv_cache`` uses the blockwise
+    flash attention for long prompts and needs ``max_len`` to size the
+    cache); every other mixer is the state=None case of the resumable
+    chunk prefill."""
+    if btype in ("attn", "local_attn"):
+        h = L.apply_norm(cfg.norm, params["norm1"], x)
+        window = cfg.local_window if btype == "local_attn" else 0
+        mixed, state = attn_lib.prefill_kv_cache(params["attn"], _attn_cfg(cfg, window), h, max_len)
+        x = x + mixed.astype(x.dtype)
+        return _block_ffn(params, cfg, x), state
+    return _block_prefill_chunk(params, cfg, btype, x, None)
 
 
 def prefill(params: dict, cfg: ModelConfig, inputs: jax.Array, max_len: int):
@@ -365,12 +375,77 @@ def prefill(params: dict, cfg: ModelConfig, inputs: jax.Array, max_len: int):
             x, st = _block_prefill(stacked, cfg, btype, x, max_len)
         states.append(st)
 
-    x_last = L.apply_norm(cfg.norm, params["final_norm"], x[:, -1:, :])[:, 0]
-    if "lm_head" in params:
-        logits = x_last @ params["lm_head"]["kernel"]
+    return _last_logits(params, cfg, x), {
+        "layers": states, "pos": jnp.full((B,), N, jnp.int32)}
+
+
+def _block_prefill_chunk(params, cfg: ModelConfig, btype: str, x, state):
+    """Advance one block's streaming state by one prompt chunk (state=None:
+    fresh monolithic prefill — the mixers treat both uniformly)."""
+    h = L.apply_norm(cfg.norm, params["norm1"], x)
+    if btype in ("attn", "local_attn"):
+        window = cfg.local_window if btype == "local_attn" else 0
+        mixed, state = attn_lib.prefill_chunk(params["attn"], _attn_cfg(cfg, window), h, state)
+    elif btype == "stlt":
+        mixed, state = stlt_lib.stlt_prefill(params["stlt"], cfg.stlt_config(), h, state)
+    elif btype == "mlstm":
+        mixed, state = xlstm_lib.mlstm_prefill(params["cell"], cfg, h, state)
+    elif btype == "slstm":
+        mixed, state = xlstm_lib.slstm_prefill(params["cell"], cfg, h, state)
+    elif btype == "rglru":
+        mixed, state = rglru_lib.rglru_prefill(params["rec"], cfg, h, state)
     else:
-        logits = L.unembed(params["embed"], x_last)
-    return logits, {"layers": states, "pos": jnp.full((B,), N, jnp.int32)}
+        raise ValueError(f"prefill unsupported for block type {btype!r}")
+    x = x + mixed.astype(x.dtype)
+    return _block_ffn(params, cfg, x), state
+
+
+def prefill_chunk(params: dict, cfg: ModelConfig, inputs: jax.Array, state: dict):
+    """Resumable chunked prefill: advance EVERY layer's streaming state by one
+    prompt chunk, carrying the state across calls.
+
+    inputs: int tokens [B, N] or embeddings [B, N, d] — the next N prompt
+    tokens for each row. ``state`` is a decode-state pytree from
+    ``init_decode_state`` (fresh prompt) or a previous ``prefill_chunk`` /
+    ``prefill`` call; ``state["pos"]`` is per-sequence [B], so co-resident
+    rows may sit at different prompt depths (positional encodings are
+    evaluated per row). Returns (last-token logits [B, V], new state) —
+    splitting a prompt at ANY chunk boundaries and folding the chunks through
+    this function is exact vs the monolithic ``prefill`` (DESIGN.md
+    §Serving), because every mixer here is an RNN-style recurrence (STLT
+    scan carry, hann ring, KV append, rg-LRU / xLSTM hidden states).
+    """
+    pos = state["pos"]
+    if pos.ndim == 0:  # legacy scalar-pos states
+        pos = jnp.full((inputs.shape[0],), pos, jnp.int32)
+    if jnp.issubdtype(inputs.dtype, jnp.integer):
+        x = L.embed(params["embed"], inputs).astype(cfg.act_dtype)
+    else:
+        x = inputs.astype(cfg.act_dtype)
+    B, N = x.shape[0], x.shape[1]
+    if cfg.mixer != "attention" or cfg.family in ("xlstm",):
+        pe = jax.vmap(
+            lambda p: L.sinusoidal_pe(N, cfg.d_model, offset=p, dtype=x.dtype)
+        )(pos)
+        x = x + pe
+
+    new_states = []
+    for (btype, count), stacked, st in zip(
+        execution_plan(cfg), params["layers"], state["layers"]
+    ):
+        if count > 1:
+
+            def body(x_in, scanned):
+                layer_params, layer_state = scanned
+                x_out, new_s = _block_prefill_chunk(layer_params, cfg, btype, x_in, layer_state)
+                return x_out, new_s
+
+            x, new_s = jax.lax.scan(body, x, (stacked, st))
+        else:
+            x, new_s = _block_prefill_chunk(stacked, cfg, btype, x, st)
+        new_states.append(new_s)
+
+    return _last_logits(params, cfg, x), {"layers": new_states, "pos": pos + N}
 
 
 def _block_step(params, cfg: ModelConfig, btype: str, x_t, state, pos):

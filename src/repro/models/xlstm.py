@@ -68,13 +68,17 @@ def _causal_conv(x, w):
     return out
 
 
-def _mlstm_gates_qkv(params, cfg, x):
+def _mlstm_gates_qkv(params, cfg, x, conv_buf=None):
     B, N, d = x.shape
     di, H = _di(cfg), cfg.num_heads
     dh = di // H
     up = x @ params["w_up"]
     x_m, z = up[..., :di], up[..., di:]
-    x_c = jax.nn.silu(_causal_conv(x_m, params["conv"]))
+    if conv_buf is None:
+        x_c = jax.nn.silu(_causal_conv(x_m, params["conv"]))
+    else:  # resume: the carried buffer supplies the conv left context
+        ext = jnp.concatenate([conv_buf.astype(x_m.dtype), x_m], axis=1)
+        x_c = jax.nn.silu(_causal_conv(ext, params["conv"])[:, CONV_W - 1:])
     q = (x_c @ params["wq"]).reshape(B, N, H, dh)
     k = (x_c @ params["wk"]).reshape(B, N, H, dh) / jnp.sqrt(float(dh))
     v = (x_m @ params["wv"]).reshape(B, N, H, dh)
@@ -83,10 +87,13 @@ def _mlstm_gates_qkv(params, cfg, x):
     return q, k, v, li, lf, z
 
 
-def mlstm_chunked(q, k, v, li, lf, chunk: int = 64, return_state: bool = False):
+def mlstm_chunked(q, k, v, li, lf, chunk: int = 64, return_state: bool = False,
+                  init_state=None):
     """Stabilized chunkwise-parallel mLSTM.
 
     q/k/v: [B, N, H, dh]; li/lf: [B, N, H] (log input gate, log forget gate).
+    ``init_state`` (C0, n0, m0) resumes the recurrence from a carried state
+    (chunked prefill); the math is unchanged — the carry just seeds the scan.
     Returns h [B, N, H, dh].
     """
     B, N, H, dh = q.shape
@@ -105,9 +112,12 @@ def mlstm_chunked(q, k, v, li, lf, chunk: int = 64, return_state: bool = False):
         return jnp.moveaxis(x.reshape((B, nc, chunk) + x.shape[2:]), 1, 0)
 
     qs, ks, vs, lis, lfs = map(resh, (q, k, v, li, lf))
-    C0 = jnp.zeros((B, H, dh, dh), dt)
-    n0 = jnp.zeros((B, H, dh), dt)
-    m0 = jnp.full((B, H), -1e30, dt)
+    if init_state is None:
+        C0 = jnp.zeros((B, H, dh, dh), dt)
+        n0 = jnp.zeros((B, H, dh), dt)
+        m0 = jnp.full((B, H), -1e30, dt)
+    else:
+        C0, n0, m0 = (s.astype(dt) for s in init_state)
 
     def body(carry, inp):
         C_p, n_p, m_p = carry
@@ -159,12 +169,20 @@ def apply_mlstm(params, cfg, x):
     return h @ params["w_down"]
 
 
-def mlstm_prefill(params, cfg, x):
-    """Parallel prefill: outputs + exact streaming state (C, n, m, conv buf)."""
+def mlstm_prefill(params, cfg, x, state=None):
+    """Parallel prefill: outputs + exact streaming state (C, n, m, conv buf).
+
+    ``state`` (optional) resumes from a carried state: (C, n, m) seed the
+    chunkwise scan and the conv buffer supplies the conv left context, so
+    prefill is chunkable at any token boundary (DESIGN.md §Serving).
+    """
     B, N, d = x.shape
     di = _di(cfg)
-    q, k, v, li, lf, z = _mlstm_gates_qkv(params, cfg, x)
-    h, (C, n, m) = mlstm_chunked(q, k, v, li, lf, chunk=min(64, max(8, N)), return_state=True)
+    conv_buf = None if state is None else state["conv_buf"]
+    init = None if state is None else (state["C"], state["n"], state["m"])
+    q, k, v, li, lf, z = _mlstm_gates_qkv(params, cfg, x, conv_buf=conv_buf)
+    h, (C, n, m) = mlstm_chunked(q, k, v, li, lf, chunk=min(64, max(8, N)),
+                                 return_state=True, init_state=init)
     h = h.reshape(B, N, -1).astype(x.dtype)
     h = L.rms_norm(params["norm"], h) * jax.nn.silu(z)
     y = h @ params["w_down"]
@@ -175,6 +193,8 @@ def mlstm_prefill(params, cfg, x):
     take = min(CONV_W - 1, N)
     if take:
         buf = buf.at[:, CONV_W - 1 - take:].set(x_m[:, N - take:])
+    if state is not None and N < CONV_W - 1:
+        buf = buf.at[:, :CONV_W - 1 - N].set(state["conv_buf"][:, N:])
     return y, {"C": C, "n": n, "m": m, "conv_buf": buf}
 
 
@@ -285,11 +305,15 @@ def apply_slstm(params, cfg, x):
     return h @ params["w_out"]
 
 
-def slstm_prefill(params, cfg, x):
-    """Sequential by nature; returns outputs + final recurrent state."""
+def slstm_prefill(params, cfg, x, state=None):
+    """Sequential by nature; returns outputs + final recurrent state.
+
+    ``state`` (optional) resumes the recurrence mid-prompt (chunked prefill);
+    the cell is a true RNN, so seeding the scan is exact by construction.
+    """
     B, N, d = x.shape
     x_proj = x @ params["w_in"] + params["b"]
-    st = init_slstm_state(cfg, B)
+    st = init_slstm_state(cfg, B) if state is None else state
 
     def step(s, xp):
         s = _slstm_step_core(params, cfg, xp, s)

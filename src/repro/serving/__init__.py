@@ -1,4 +1,5 @@
 from repro.serving.engine import ServeEngine
+from repro.serving.prefix_cache import PrefixCache
 from repro.serving.sampler import sample_token
 
-__all__ = ["ServeEngine", "sample_token"]
+__all__ = ["PrefixCache", "ServeEngine", "sample_token"]

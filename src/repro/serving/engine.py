@@ -28,6 +28,17 @@ slot is released and the next queued request is prefilled and spliced in
 while the other slots keep decoding — no wave barrier, so one long
 generation never stalls the short requests behind it.
 
+Long prompts are admitted INCREMENTALLY (``prefill_chunk``): the prompt is
+split into fixed-size chunks folded through the resumable
+``transformer.prefill_chunk``, one chunk per tick, interleaved with the
+pool's batched decode steps (Sarathi-style mixed steps) — a 100k-token
+admission therefore stalls co-resident decodes by at most one chunk of
+prefill work per token, never by the whole prompt. A :class:`PrefixCache`
+(``prefix_cache=``) snapshots the O(S*d) streaming state at chunk
+boundaries keyed by prompt-prefix hash, so requests sharing a system
+prompt skip the shared prefix's prefill FLOPs entirely; ``warm_prefix``
+pre-populates it.
+
 ``ServeEngine.generate`` is the simple API (one batch in, tokens out).
 ``ServeEngine.serve`` runs the scheduler; ``mode="wave"`` keeps the legacy
 admission-wave engine (a whole wave drains before the next is admitted) as a
@@ -39,6 +50,7 @@ decode step == one tick, which is also the unit of the optional per-request
 from __future__ import annotations
 
 import dataclasses
+import time
 from functools import partial
 from typing import Optional
 
@@ -48,6 +60,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import transformer as T
+from repro.serving.prefix_cache import PrefixCache
 from repro.serving.sampler import (
     advance_slots,
     sample_slot_tokens,
@@ -66,26 +79,56 @@ class Request:
 
 class Scheduler:
     """Host-side slot bookkeeping: which request occupies which slot, how
-    many tokens it has emitted, and when it arrived/was admitted."""
+    many tokens it has emitted, and when it arrived/was admitted.
+
+    A slot is either free, ``pending`` (mid chunked-prefill, not yet
+    decoding), or ``live`` (decoding). Per-request stats record the prefill
+    accounting — ``prompt_tokens``, ``prefilled_tokens`` actually computed,
+    and ``cached_tokens`` skipped via a prefix-cache hit — plus ``live``,
+    the tick the first token was emitted."""
 
     def __init__(self, n_slots: int):
         self.n_slots = n_slots
         self.req = [None] * n_slots          # slot -> Request | None
         self.live = np.zeros(n_slots, bool)
+        self.pending = np.zeros(n_slots, bool)
         self.emitted = np.zeros(n_slots, np.int64)
         self.budgets = np.zeros(n_slots, np.int64)
         self.stats: dict[int, dict] = {}
 
     def free_slots(self):
-        return [s for s in range(self.n_slots) if not self.live[s]]
+        return [s for s in range(self.n_slots)
+                if not (self.live[s] or self.pending[s])]
 
-    def bind(self, slot: int, req: Request, arrival: int, tick: int):
+    def hold(self, slot: int, req: Request, arrival: int, tick: int,
+             prompt_tokens: int = 0, cached_tokens: int = 0):
+        """Assign the slot for chunked prefill (occupied but not decoding)."""
         self.req[slot] = req
-        self.live[slot] = True
+        self.pending[slot] = True
         self.emitted[slot] = 0
         self.budgets[slot] = req.max_new_tokens
-        self.stats[req.id] = {"arrival": arrival, "admit": tick,
-                              "finish": None, "n_tokens": 0}
+        self.stats[req.id] = {
+            "arrival": arrival, "admit": tick, "live": None, "finish": None,
+            "n_tokens": 0, "prompt_tokens": prompt_tokens,
+            "prefilled_tokens": prompt_tokens - cached_tokens,
+            "cached_tokens": cached_tokens,
+            # wall-clock stamp of every emitted token: inter-token gaps
+            # expose decode stalls that tick accounting cannot (a monolithic
+            # prefill burns arbitrary wall time inside one tick)
+            "token_walls": [],
+        }
+
+    def activate(self, slot: int, tick: int):
+        """Chunked prefill finished: the slot starts decoding."""
+        self.pending[slot] = False
+        self.live[slot] = True
+        self.stats[self.req[slot].id]["live"] = tick
+
+    def bind(self, slot: int, req: Request, arrival: int, tick: int,
+             prompt_tokens: int = 0, cached_tokens: int = 0):
+        """Single-shot admission: prefill completed within this tick."""
+        self.hold(slot, req, arrival, tick, prompt_tokens, cached_tokens)
+        self.activate(slot, tick)
 
     def release(self, slot: int, tick: int):
         req = self.req[slot]
@@ -93,18 +136,33 @@ class Scheduler:
         self.stats[req.id]["n_tokens"] = int(self.emitted[slot])
         self.req[slot] = None
         self.live[slot] = False
+        self.pending[slot] = False
 
 
 class ServeEngine:
     def __init__(self, params, cfg: ModelConfig, max_len: int = 4096,
-                 temperature: float = 0.0, eos_id: int = -1, top_k: int = 0):
+                 temperature: float = 0.0, eos_id: int = -1, top_k: int = 0,
+                 prefill_chunk: Optional[int] = None,
+                 prefix_cache: Optional[PrefixCache] = None):
+        """``prefill_chunk``: split prompts longer than this into chunks
+        admitted one per tick, interleaved with decode (None/0 -> monolithic
+        admission). ``prefix_cache``: reuse post-prefix streaming states
+        across requests sharing a prompt prefix (full-prompt states are
+        snapshotted after every completed prefill; chunk-boundary states
+        only where they extend an existing cached prefix — warm_prefix
+        seeds first-contact system prompts)."""
         self.params = params
         self.cfg = cfg
         self.max_len = max_len
         self.temperature = temperature
         self.eos_id = eos_id
         self.top_k = top_k
+        self.prefill_chunk = prefill_chunk or 0
+        if self.prefill_chunk < 0:
+            raise ValueError(f"prefill_chunk must be >= 0 (got {prefill_chunk})")
+        self.prefix_cache = prefix_cache
         self._prefill = jax.jit(partial(T.prefill, cfg=cfg, max_len=max_len))
+        self._prefill_chunk = jax.jit(partial(T.prefill_chunk, cfg=cfg))
         self._step = jax.jit(partial(T.decode_step, cfg=cfg))
         self._insert = jax.jit(partial(T.insert_slot, cfg=cfg))
         self._reset = jax.jit(partial(T.reset_slot, cfg=cfg, max_len=max_len))
@@ -133,9 +191,17 @@ class ServeEngine:
     # ------------------------------------------------------- continuous batching
     def serve(self, requests: list, slots: int = 4,
               prompt_len: Optional[int] = None, mode: str = "continuous",
-              arrivals=None, rng_seed: int = 0, return_stats: bool = False):
+              arrivals=None, rng_seed: int = 0, return_stats: bool = False,
+              prefill_chunk: Optional[int] = None):
         """Serve a request list. Returns {request_id: np.ndarray tokens}
         (plus a per-request stats dict when ``return_stats``).
+
+        ``prefill_chunk`` overrides the engine default for this call (0
+        forces monolithic admission; None keeps the engine setting). Chunked
+        admission (continuous mode only) folds long prompts through the
+        resumable ``transformer.prefill_chunk`` one chunk per tick while the
+        resident slots keep decoding, and is token-exact vs monolithic
+        admission at any chunk size.
 
         mode="continuous": per-slot admission (default). mode="wave": the
         legacy engine — admit up to ``slots`` requests, drain them all, then
@@ -159,8 +225,11 @@ class ServeEngine:
                                     arrivals, rng_seed, return_stats)
         if mode != "continuous":
             raise ValueError(f"unknown serve mode {mode!r}")
+        chunk = self.prefill_chunk if prefill_chunk is None else prefill_chunk
+        if chunk < 0:
+            raise ValueError(f"prefill_chunk must be >= 0 (got {chunk})")
         return self._serve_continuous(requests, slots, prompt_len,
-                                      arrivals, rng_seed, return_stats)
+                                      arrivals, rng_seed, return_stats, chunk)
 
     def _padded(self, prompt: np.ndarray, prompt_len: Optional[int]):
         prompt = np.asarray(prompt, np.int32)
@@ -206,65 +275,170 @@ class ServeEngine:
         order = sorted(range(len(requests)), key=lambda i: arrivals[i])
         return [(int(arrivals[i]), requests[i]) for i in order]
 
+    # ----------------------------------------------------------- prefix cache
+    def _lookup_prefix(self, prompt: np.ndarray):
+        """(resume offset, state-or-None, logits-or-None) for ``prompt``."""
+        if self.prefix_cache is None:
+            return 0, None, None
+        entry = self.prefix_cache.lookup(prompt)
+        if entry is None:
+            return 0, None, None
+        return entry.n_tokens, entry.state, entry.logits
+
+    def _cache_insert(self, prompt: np.ndarray, n: int, state, logits,
+                      pinned: bool = False):
+        if self.prefix_cache is not None and n > 0:
+            self.prefix_cache.insert(prompt[:n], state, logits, pinned=pinned)
+
+    def warm_prefix(self, prompt, chunk: Optional[int] = None):
+        """Prefill ``prompt`` (e.g. a shared system prompt) into the prefix
+        cache without serving a request: snapshots the streaming state at
+        every chunk boundary and at the full length, PINNED against LRU
+        eviction by per-request snapshots. Returns the number of tokens
+        actually prefilled (0 on a full cache hit)."""
+        if self.prefix_cache is None:
+            raise ValueError("warm_prefix requires a prefix_cache")
+        prompt = np.asarray(prompt, np.int32)
+        chunk = chunk or self.prefill_chunk or len(prompt)
+        if chunk < 1:
+            raise ValueError(f"warm_prefix needs a non-empty prompt (chunk={chunk})")
+        offset, state, logits = self._lookup_prefix(prompt)
+        if offset == len(prompt):
+            return 0
+        if state is None:
+            state = T.init_decode_state(self.cfg, 1, self.max_len)
+        done = offset
+        while done < len(prompt):
+            n = min(chunk, len(prompt) - done)
+            logits, state = self._prefill_chunk(
+                self.params, inputs=jnp.asarray(prompt[None, done:done + n]),
+                state=state)
+            done += n
+            self._cache_insert(prompt, done, state, logits, pinned=True)
+        return len(prompt) - offset
+
+    # ------------------------------------------------------------- continuous
     def _serve_continuous(self, requests, slots, prompt_len, arrivals,
-                          rng_seed, return_stats):
+                          rng_seed, return_stats, chunk_size):
         cfg = self.cfg
         sched = Scheduler(slots)
         queue = self._queue(requests, arrivals, prompt_len)
         results: dict[int, list[int]] = {}
 
         pool = T.init_decode_state(cfg, slots, self.max_len)
+        # one shared pristine batch-1 state for chunked admissions: jax
+        # pytrees are immutable, so every pending request can seed from the
+        # same template without re-paying the op-by-op init dispatch
+        fresh1 = None
         tok = np.zeros(slots, np.int32)
         temps = np.full(slots, self.temperature, np.float32)
         base_key = jax.random.key(rng_seed)
         keys = jax.random.split(base_key, slots)
+        # slot -> in-flight chunked prefill: prompt, done offset, carried state
+        pending: dict[int, dict] = {}
         tick = 0
 
-        while queue or sched.live.any():
-            if not sched.live.any() and queue and queue[0][0] > tick:
+        def promote(s, ent, logits1, st1, tick):
+            """Prefill complete: sample the first token and go live."""
+            nonlocal pool, keys
+            req = ent["req"]
+            rkey = jax.random.fold_in(base_key, req.id)
+            temp = self.temperature if req.temperature is None else req.temperature
+            t0 = int(sample_token(logits1, rkey, temp, self.top_k)[0])
+            pool = self._insert(pool, st1, s)
+            keys = keys.at[s].set(rkey)
+            tok[s] = t0
+            temps[s] = temp
+            sched.activate(s, tick)
+            results[req.id] = [t0]
+            sched.stats[req.id]["token_walls"].append(time.perf_counter())
+            sched.emitted[s] = 1
+            if sched.emitted[s] >= sched.budgets[s] or t0 == self.eos_id:
+                sched.release(s, tick)       # prefill-only request
+                pool = self._reset(pool, s)
+
+        while queue or pending or sched.live.any():
+            if (not sched.live.any() and not pending
+                    and queue and queue[0][0] > tick):
                 tick = queue[0][0]  # idle: fast-forward to the next arrival
 
-            # --- admission: splice arrived requests into free slots ---------
+            # --- admission: assign arrived requests to free slots -----------
             for s in sched.free_slots():
                 if not queue or queue[0][0] > tick:
                     break
                 arrival, req = queue.pop(0)
                 prompt = self._padded(req.prompt, prompt_len)
-                logits1, st1 = self._prefill(
-                    self.params, inputs=jnp.asarray(prompt[None]))
-                rkey = jax.random.fold_in(base_key, req.id)
-                temp = self.temperature if req.temperature is None else req.temperature
-                t0 = int(sample_token(logits1, rkey, temp, self.top_k)[0])
-                pool = self._insert(pool, st1, s)
-                keys = keys.at[s].set(rkey)
-                tok[s] = t0
-                temps[s] = temp
-                sched.bind(s, req, arrival, tick)
-                results[req.id] = [t0]
-                sched.emitted[s] = 1
-                if sched.emitted[s] >= sched.budgets[s] or t0 == self.eos_id:
-                    sched.release(s, tick)       # prefill-only request
+                offset, pstate, plogits = self._lookup_prefix(prompt)
+                remaining = len(prompt) - offset
+                # per-request boundary snapshots are only worth caching when
+                # they EXTEND a known shared prefix (a unique prompt's
+                # boundaries have ~zero hit probability and would churn the
+                # LRU); warm_prefix covers first-contact system prompts
+                ent = {"req": req, "prompt": prompt, "done": offset,
+                       "state": pstate, "resumed": offset > 0}
+                sched.hold(s, req, arrival, tick,
+                           prompt_tokens=len(prompt), cached_tokens=offset)
+                if remaining == 0:
+                    # full-prompt cache hit: the stored last-token logits
+                    # stand in for the skipped prefill
+                    promote(s, ent, plogits, pstate, tick)
+                elif chunk_size:
+                    # incremental admission (the pending loop below promotes
+                    # a <= one-chunk remainder within this same tick)
+                    if pstate is None:
+                        if fresh1 is None:
+                            fresh1 = T.init_decode_state(cfg, 1, self.max_len)
+                        ent["state"] = fresh1
+                    pending[s] = ent
+                else:  # monolithic admission
+                    if pstate is None:
+                        logits1, st1 = self._prefill(
+                            self.params, inputs=jnp.asarray(prompt[None]))
+                    else:
+                        logits1, st1 = self._prefill_chunk(
+                            self.params,
+                            inputs=jnp.asarray(prompt[None, offset:]),
+                            state=pstate)
+                    self._cache_insert(prompt, len(prompt), st1, logits1)
+                    promote(s, ent, logits1, st1, tick)
+
+            # --- mixed step: one prefill chunk per pending slot... ----------
+            for s in list(pending):
+                ent = pending[s]
+                n = min(chunk_size, len(ent["prompt"]) - ent["done"])
+                logits1, ent["state"] = self._prefill_chunk(
+                    self.params,
+                    inputs=jnp.asarray(ent["prompt"][None, ent["done"]:ent["done"] + n]),
+                    state=ent["state"])
+                ent["done"] += n
+                if ent["resumed"] or ent["done"] == len(ent["prompt"]):
+                    self._cache_insert(ent["prompt"], ent["done"],
+                                       ent["state"], logits1)
+                if ent["done"] == len(ent["prompt"]):
+                    del pending[s]
+                    promote(s, ent, logits1, ent["state"], tick)
+
+            # --- ...plus one batched decode step for the whole pool ---------
+            if sched.live.any():
+                keys, subs = self._split(keys)
+                logits, pool = self._step(self.params, token_t=jnp.asarray(tok),
+                                          state=pool)
+                nxt = np.array(self._sample(logits, subs, jnp.asarray(temps)))
+                tick += 1
+
+                new_live, new_emitted = advance_slots(
+                    nxt, sched.live, sched.emitted, sched.budgets, self.eos_id)
+                now = time.perf_counter()
+                for s in np.flatnonzero(sched.live):
+                    results[sched.req[s].id].append(int(nxt[s]))
+                    sched.stats[sched.req[s].id]["token_walls"].append(now)
+                sched.emitted = new_emitted
+                for s in np.flatnonzero(sched.live & ~new_live):
+                    sched.release(s, tick)
                     pool = self._reset(pool, s)
-
-            if not sched.live.any():
-                continue
-
-            # --- one batched decode step for the whole pool -----------------
-            keys, subs = self._split(keys)
-            logits, pool = self._step(self.params, token_t=jnp.asarray(tok),
-                                      state=pool)
-            nxt = np.array(self._sample(logits, subs, jnp.asarray(temps)))
-            tick += 1
-
-            new_live, new_emitted = advance_slots(
-                nxt, sched.live, sched.emitted, sched.budgets, self.eos_id)
-            for s in np.flatnonzero(sched.live):
-                results[sched.req[s].id].append(int(nxt[s]))
-            sched.emitted = new_emitted
-            for s in np.flatnonzero(sched.live & ~new_live):
-                sched.release(s, tick)
-                pool = self._reset(pool, s)
-            tok = nxt
+                tok = nxt
+            elif pending:
+                tick += 1  # prefill-only tick (nothing decoding yet)
 
         out = {rid: np.array(toks, np.int32) for rid, toks in results.items()}
         return (out, sched.stats) if return_stats else out
@@ -311,7 +485,7 @@ class ServeEngine:
             logits, state = self._prefill(self.params, inputs=jnp.asarray(prompts))
             tok = np.array(self._sample(logits, keys, jnp.asarray(temps)))
             for i, (arrival, r) in enumerate(wave):
-                sched.bind(i, r, arrival, tick)
+                sched.bind(i, r, arrival, tick, prompt_tokens=len(r.prompt))
                 results[r.id] = []
             while sched.live.any():
                 new_live, new_emitted = advance_slots(

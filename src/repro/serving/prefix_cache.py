@@ -1,0 +1,106 @@
+"""Prefix-state cache: O(S*d) post-prefix decode states keyed by
+prompt-prefix hash.
+
+Requests that share a prompt prefix (system prompts, few-shot preambles,
+multi-turn histories) re-run the same prefill over and over. Because every
+mixer in this codebase folds its history into a carried streaming state —
+the STLT ``h_re/h_im`` carry, hann ring, rg-LRU / xLSTM hidden states, or an
+attention KV cache — the engine can snapshot the state right after the
+shared prefix and splice it into a new slot, skipping the prefix's prefill
+FLOPs entirely (DESIGN.md §Serving).
+
+For STLT/SSM layers this is structurally cheaper than vLLM-style KV-prefix
+caching: the cached object is S*d floats per layer REGARDLESS of prefix
+length, so a 100k-token system prompt costs the same bytes as a 10-token
+one. (Attention layers cache their max_len-sized KV buffer; the cache works
+for them too, just without the constant-memory property.)
+
+Entries are immutable jax pytrees (batch-1 decode states), so a hit hands
+out the stored reference — no copy, no invalidation: splicing into a slot
+pool never mutates the source. Eviction is LRU by entry count; token-exact
+reuse is guaranteed by keying on the raw token bytes (SHA-1, no collision
+handling beyond the hash) rather than on any normalized text.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from collections import OrderedDict
+from typing import Any, Optional
+
+import numpy as np
+
+
+def prefix_digest(tokens) -> bytes:
+    """Stable digest of a token prefix (dtype-normalized raw bytes)."""
+    return hashlib.sha1(np.ascontiguousarray(tokens, np.int32).tobytes()).digest()
+
+
+@dataclasses.dataclass
+class PrefixEntry:
+    n_tokens: int            # prefix length the state summarizes
+    state: Any               # batch-1 decode-state pytree (post-prefix)
+    logits: Any = None       # last-token logits (only for full-prompt entries)
+    pinned: bool = False     # exempt from LRU eviction (warmed system prompts)
+
+
+class PrefixCache:
+    """LRU map: prompt-prefix digest -> post-prefix streaming state.
+
+    ``lookup`` returns the LONGEST cached prefix of a prompt, trying the
+    registered entry lengths longest-first — the host-side cost is one hash
+    per distinct cached length, independent of the number of entries.
+    """
+
+    def __init__(self, capacity: int = 32):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1 (got {capacity})")
+        self.capacity = capacity
+        self._entries: OrderedDict[bytes, PrefixEntry] = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def insert(self, tokens, state, logits=None, pinned: bool = False) -> None:
+        """Register the post-prefix state for ``tokens`` (a full prefix).
+
+        ``pinned`` entries (explicitly warmed system prompts) are exempt
+        from LRU eviction, so per-request boundary snapshots can never
+        evict a warm shared prefix. Pinned entries count against capacity
+        but are only dropped when everything is pinned."""
+        tokens = np.asarray(tokens, np.int32)
+        key = prefix_digest(tokens)
+        if key in self._entries:
+            old = self._entries.pop(key)
+            if logits is None:  # keep a richer (logits-bearing) entry
+                logits = old.logits
+            pinned = pinned or old.pinned
+        self._entries[key] = PrefixEntry(int(tokens.size), state, logits, pinned)
+        while len(self._entries) > self.capacity:
+            victim = next((k for k, e in self._entries.items() if not e.pinned),
+                          None)
+            if victim is None:  # all pinned: evict true-LRU rather than grow
+                victim = next(iter(self._entries))
+            del self._entries[victim]
+
+    def lookup(self, prompt) -> Optional[PrefixEntry]:
+        """Longest cached prefix of ``prompt`` (None on miss). LRU-refreshes
+        and counts a hit/miss."""
+        prompt = np.asarray(prompt, np.int32)
+        lengths = sorted({e.n_tokens for e in self._entries.values()
+                          if e.n_tokens <= prompt.size}, reverse=True)
+        for n in lengths:
+            key = prefix_digest(prompt[:n])
+            entry = self._entries.get(key)
+            if entry is not None:
+                self._entries.move_to_end(key)
+                self.hits += 1
+                return entry
+        self.misses += 1
+        return None
+
+    def stats(self) -> dict:
+        return {"entries": len(self._entries), "hits": self.hits,
+                "misses": self.misses}

@@ -1,7 +1,33 @@
 """Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests must see exactly
-one device (the dry-run forces 512 in its own process)."""
+one device (the dry-run forces 512 in its own process).
+
+Markers: ``slow`` tags long-running kernel/scale tests. They are skipped by
+default (the tier-1 suite stays fast) and run with ``--runslow`` — CI splits
+them into their own job (.github/workflows/ci.yml).
+"""
 import numpy as np
 import pytest
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--runslow", action="store_true", default=False,
+        help="run tests marked slow (the CI slow-kernel job)")
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: long-running kernel/scale tests; skipped unless --runslow")
+
+
+def pytest_collection_modifyitems(config, items):
+    if config.getoption("--runslow"):
+        return
+    skip_slow = pytest.mark.skip(reason="slow test: pass --runslow to run")
+    for item in items:
+        if "slow" in item.keywords:
+            item.add_marker(skip_slow)
 
 
 @pytest.fixture

@@ -1,11 +1,18 @@
 """Pallas kernel validation: shape/dtype sweep in interpret mode against the
 pure-jnp oracles (ref.py sequential + core chunked), forward and backward.
+
+Hardening sweep (the CI slow-kernel job, ``--runslow``): forward parity
+against the O(N^2 S) direct-summation definition in ``repro/core/ref.py``
+and custom-VJP gradient parity against ``jax.grad`` of the sequential
+definition oracle, across degenerate/odd chunk sizes {1, 7, 128} and
+lengths that are not chunk multiples.
 """
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core.ref import stlt_direct
 from repro.kernels import ops
 from repro.kernels.ref import ref_sequential
 
@@ -68,6 +75,82 @@ def test_kernel_gradients_match_jnp_path(rng):
         denom = float(jnp.max(jnp.abs(b))) + 1e-9
         rel = float(jnp.max(jnp.abs(a - b))) / denom
         assert rel < 1e-3, (name, rel)
+
+
+# ---------------------------------------------------------------------------
+# hardening sweep: degenerate chunks + non-multiple lengths vs core/ref.py
+# ---------------------------------------------------------------------------
+
+
+def _direct_z(x, lm, th, ur, ui):
+    """z from the O(N^2 S) direct summation (repro/core/ref.py, the paper's
+    literal definition): z[n] = Re(sum_k u_k L[n, k, :])."""
+    out = []
+    for b in range(x.shape[0]):
+        L = stlt_direct(np.asarray(x[b], np.float64),
+                        sigma=-np.asarray(lm[b], np.float64),
+                        omega=-np.asarray(th[b], np.float64),
+                        T=1.0, window="none")
+        u = np.asarray(ur[b], np.float64) + 1j * np.asarray(ui[b], np.float64)
+        out.append(np.einsum("nsd,s->nd", L, u).real)
+    return np.stack(out).astype(np.float32)
+
+
+def _assert_kernel_matches_direct(rng, chunk, N, reverse=False):
+    x, lm, th, ur, ui = _inputs(rng, 2, N, 8, 3, jnp.float32)
+    if reverse:
+        z_ref = np.stack([
+            _direct_z(np.asarray(x)[b:b + 1, ::-1], lm[b:b + 1], th[b:b + 1],
+                      ur[b:b + 1], ui[b:b + 1])[0][::-1]
+            for b in range(x.shape[0])])
+    else:
+        z_ref = _direct_z(np.asarray(x), lm, th, ur, ui)
+    z_ker = ops.stlt_scan(x, lm, th, ur, ui, chunk=chunk, reverse=reverse,
+                          interpret=True, block_d=8)
+    scale = float(np.max(np.abs(z_ref))) + 1e-9
+    np.testing.assert_allclose(np.asarray(z_ker) / scale, z_ref / scale,
+                               atol=2e-5, err_msg=f"chunk={chunk} N={N}")
+
+
+def test_kernel_vs_direct_sum_smoke(rng):
+    """Fast tier-1 anchor of the slow sweep below (one odd case)."""
+    _assert_kernel_matches_direct(rng, chunk=7, N=19)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("chunk", [1, 7, 128])
+@pytest.mark.parametrize("N", [1, 5, 37, 129])
+@pytest.mark.parametrize("reverse", [False, True])
+def test_kernel_vs_direct_sum(rng, chunk, N, reverse):
+    """Interpret-mode forward == the O(N^2 S) definition for chunk sizes that
+    degenerate the Toeplitz tile (C=1), don't divide the length (C=7), and
+    exceed it (C=128 with N < C), causal and anti-causal."""
+    _assert_kernel_matches_direct(rng, chunk, N, reverse)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("chunk", [1, 7, 128])
+@pytest.mark.parametrize("N", [5, 37, 129])
+def test_kernel_vjp_vs_definition_oracle(rng, chunk, N):
+    """Custom-VJP grads (dx via the anti-causal kernel pass, dparams via the
+    jnp recompute path) == jax.grad of the sequential definition oracle,
+    at odd chunk/length combinations."""
+    x, lm, th, ur, ui = _inputs(rng, 2, N, 8, 3, jnp.float32)
+
+    def loss_kernel(x, lm, th, ur, ui):
+        z = ops.stlt_scan(x, lm, th, ur, ui, chunk=chunk, interpret=True,
+                          block_d=8)
+        return (z ** 2).sum()
+
+    def loss_ref(x, lm, th, ur, ui):
+        return (ref_sequential(x, lm, th, ur, ui) ** 2).sum()
+
+    gk = jax.grad(loss_kernel, argnums=(0, 1, 2, 3, 4))(x, lm, th, ur, ui)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2, 3, 4))(x, lm, th, ur, ui)
+    for name, a, b in zip(["dx", "dlm", "dth", "dur", "dui"], gk, gr):
+        denom = float(jnp.max(jnp.abs(b))) + 1e-9
+        rel = float(jnp.max(jnp.abs(a - b))) / denom
+        assert rel < 1e-3, (name, chunk, N, rel)
 
 
 def test_kernel_inside_stlt_layer(rng):

@@ -1,5 +1,6 @@
 """Slot-level continuous batching: state splicing, token-exact parity with
-per-request generate, and no-wave-stall admission."""
+per-request generate, no-wave-stall admission, chunked (Sarathi-style)
+prompt admission, and the prefix-state cache."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -7,7 +8,7 @@ import pytest
 
 from repro.core import stlt as stlt_lib
 from repro.models import transformer as T
-from repro.serving import ServeEngine
+from repro.serving import PrefixCache, ServeEngine
 from repro.serving.engine import Request
 from repro.serving.sampler import advance_slots, sample_slot_tokens
 from conftest import small_cfg
@@ -175,6 +176,109 @@ def test_wave_defers_requests_that_padding_would_overflow():
     for r in reqs:
         assert len(res[r.id]) == r.max_new_tokens
     assert stats[2]["admit"] > stats[1]["admit"]
+
+
+def test_chunked_admission_token_exact():
+    """Chunked (Sarathi-style) admission is token-exact vs per-request
+    generate at every chunk size, including chunk sizes that don't divide
+    the prompt."""
+    cfg = small_cfg(mixer="stlt", stlt_nodes=4, stlt_chunk=8)
+    params = T.init_lm(jax.random.key(0), cfg)
+    rng = np.random.default_rng(0)
+    reqs = [Request(rng.integers(3, cfg.vocab, int(rng.integers(20, 60))).astype(np.int32),
+                    int(3 + i % 4), id=i)
+            for i in range(5)]
+    eng = ServeEngine(params, cfg, max_len=128)
+    for chunk in (7, 16, 64):
+        res = eng.serve(reqs, slots=2, prefill_chunk=chunk)
+        for r in reqs:
+            np.testing.assert_array_equal(
+                res[r.id], eng.generate(r.prompt[None], r.max_new_tokens)[0],
+                err_msg=f"request {r.id} diverged (prefill_chunk={chunk})")
+
+
+def test_32k_admission_never_stalls_coresident_decode():
+    """A 32k-token prompt admitted mid-stream: the co-resident decode slot
+    keeps emitting one token per tick (it is never blocked for more than the
+    single mixed chunk-step), and the long request's output is still
+    token-exact vs its own monolithic generate."""
+    cfg = small_cfg(mixer="stlt", stlt_nodes=4, stlt_chunk=64)
+    params = T.init_lm(jax.random.key(0), cfg)
+    eng = ServeEngine(params, cfg, max_len=256, prefill_chunk=2048)
+    rng = np.random.default_rng(2)
+    long_prompt = rng.integers(3, cfg.vocab, 32_768).astype(np.int32)
+    short = Request(rng.integers(3, cfg.vocab, 8).astype(np.int32), 40, id=0)
+    longr = Request(long_prompt, 4, id=1)
+
+    res, stats = eng.serve([short, longr], slots=2, arrivals=[0, 5],
+                           return_stats=True)
+    # the short request emits exactly one token per tick from the moment it
+    # goes live — the 16 chunk-steps of the 32k admission never stall it
+    assert stats[0]["finish"] - stats[0]["live"] == short.max_new_tokens - 1
+    # the long request was admitted at its arrival and went live one chunked
+    # prefill later (16 chunks, one per mixed tick; the first chunk shares
+    # the admission tick), not after a monolithic stall
+    assert stats[1]["admit"] == 5
+    assert stats[1]["live"] - stats[1]["admit"] == 32_768 // 2048 - 1
+    assert stats[1]["prefilled_tokens"] == 32_768
+    np.testing.assert_array_equal(
+        res[1], eng.generate(long_prompt[None], 4)[0])
+    np.testing.assert_array_equal(
+        res[0], eng.generate(short.prompt[None], 40)[0])
+
+
+def test_prefix_cache_skips_95pct_of_prefill():
+    """Requests sharing a 4k-token system prompt: after warming, a hit
+    skips >= 95% of prefill FLOPs (measured in prompt tokens actually
+    prefilled) and stays token-exact vs monolithic generate."""
+    cfg = small_cfg(mixer="stlt", stlt_nodes=4, stlt_chunk=64)
+    params = T.init_lm(jax.random.key(0), cfg)
+    cache = PrefixCache(capacity=16)
+    eng = ServeEngine(params, cfg, max_len=256, prefill_chunk=512,
+                      prefix_cache=cache)
+    rng = np.random.default_rng(4)
+    sys_prompt = rng.integers(3, cfg.vocab, 4096).astype(np.int32)
+    assert eng.warm_prefix(sys_prompt) == 4096
+    assert eng.warm_prefix(sys_prompt) == 0  # second warm is a full hit
+
+    reqs = [Request(np.concatenate([
+                sys_prompt, rng.integers(3, cfg.vocab, 64).astype(np.int32)]),
+                4, id=i)
+            for i in range(3)]
+    res, stats = eng.serve(reqs, slots=2, return_stats=True)
+    for r in reqs:
+        st = stats[r.id]
+        assert st["cached_tokens"] == 4096
+        frac = st["prefilled_tokens"] / st["prompt_tokens"]
+        assert frac <= 0.05, f"request {r.id} prefilled {frac:.1%} > 5%"
+        np.testing.assert_array_equal(
+            res[r.id], eng.generate(r.prompt[None], r.max_new_tokens)[0],
+            err_msg=f"request {r.id} diverged through the prefix cache")
+
+
+def test_prefix_cache_lru_and_longest_match():
+    """PrefixCache unit behavior: longest-prefix wins, LRU evicts, stats."""
+    c = PrefixCache(capacity=2)
+    c.insert([1, 2], "s2")
+    c.insert([1, 2, 3, 4], "s4")
+    hit = c.lookup([1, 2, 3, 4, 9])
+    assert hit.n_tokens == 4 and hit.state == "s4"     # longest match
+    assert c.lookup([1, 2, 9]).n_tokens == 2           # falls back to shorter
+    assert c.lookup([7, 8]) is None                    # miss
+    c.insert([5, 5, 5], "s5")                          # evicts LRU entry
+    assert len(c) == 2
+    assert c.lookup([5, 5, 5]) is not None
+    assert c.stats()["hits"] == 3 and c.stats()["misses"] == 1
+    with pytest.raises(ValueError):
+        PrefixCache(capacity=0)
+    # pinned (warmed) entries survive eviction pressure from per-request
+    # boundary snapshots
+    cp = PrefixCache(capacity=2)
+    cp.insert([9, 9, 9], "warm", pinned=True)
+    for i in range(5):
+        cp.insert([i, i], f"s{i}")
+    assert cp.lookup([9, 9, 9]).state == "warm"
+    assert len(cp) == 2
 
 
 def test_per_slot_sampler_and_masking():
