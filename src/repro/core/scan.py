@@ -337,7 +337,7 @@ def stlt_carry_outputs(h0_re, h0_im, log_mag, theta, u_re, u_im, N: int):
             - jnp.einsum("nhk,bhkd->bhnd", c_im, h0_im))
 
 
-def stlt_final_state(v, log_mag, theta, h0_re=None, h0_im=None):
+def stlt_final_state(v, log_mag, theta, h0_re=None, h0_im=None, valid=None):
     """Closed-form final carry after N inputs: h_N = lambda^N h0 + sum_n
     lambda^(N-1-n) v_n.
 
@@ -346,24 +346,46 @@ def stlt_final_state(v, log_mag, theta, h0_re=None, h0_im=None):
     underflow harmlessly to zero.
 
     v: [B, H, N, dh]; log_mag/theta: [H, S]; h0: [B, H, S, dh] or None.
+    ``valid`` (optional [B] ints) is the per-row valid length of a padded
+    chunk: row b's carry is the state after exactly ``valid[b]`` tokens —
+    positions n >= valid[b] contribute nothing and the h0 decay is
+    lambda^valid[b] instead of lambda^N (the two-shape serving contract:
+    padded tail chunks must leave the carry exactly where the unpadded
+    chunk would).
     Returns (h_re, h_im) [B, H, S, dh] float32.
     """
     N = v.shape[-2]
     v = v.astype(jnp.float32)
     lm = log_mag.astype(jnp.float32)
     th = theta.astype(jnp.float32)
-    e = jnp.arange(N - 1, -1, -1, dtype=jnp.float32)       # exponent N-1-n
-    mag = jnp.exp(e[:, None, None] * lm[None])             # [N, H, S]
-    ang = e[:, None, None] * th[None]
-    h_re = jnp.einsum("nhk,bhnd->bhkd", mag * jnp.cos(ang), v)
-    h_im = jnp.einsum("nhk,bhnd->bhkd", mag * jnp.sin(ang), v)
+    if valid is None:
+        e = jnp.arange(N - 1, -1, -1, dtype=jnp.float32)   # exponent N-1-n
+        mag = jnp.exp(e[:, None, None] * lm[None])         # [N, H, S]
+        ang = e[:, None, None] * th[None]
+        h_re = jnp.einsum("nhk,bhnd->bhkd", mag * jnp.cos(ang), v)
+        h_im = jnp.einsum("nhk,bhnd->bhkd", mag * jnp.sin(ang), v)
+        decN = jnp.asarray(float(N), jnp.float32)          # [ ] -> lambda^N
+    else:
+        n = jnp.arange(N, dtype=jnp.float32)
+        vf = valid.astype(jnp.float32)                     # [B]
+        e = vf[:, None] - 1.0 - n[None, :]                 # [B, N]
+        live = e >= 0                                      # n < valid[b]
+        e = jnp.maximum(e, 0.0)                            # clamp: dead rows
+        mag = jnp.where(live[..., None, None],
+                        jnp.exp(e[..., None, None] * lm[None, None]), 0.0)
+        ang = e[..., None, None] * th[None, None]          # [B, N, H, S]
+        h_re = jnp.einsum("bnhk,bhnd->bhkd", mag * jnp.cos(ang), v)
+        h_im = jnp.einsum("bnhk,bhnd->bhkd", mag * jnp.sin(ang), v)
+        decN = vf[:, None, None]                           # [B,1,1] -> lambda^valid
     if h0_re is not None:
-        magN = jnp.exp(N * lm)
-        d_re, d_im = magN * jnp.cos(N * th), magN * jnp.sin(N * th)  # [H, S]
+        magN = jnp.exp(decN * lm)
+        d_re, d_im = magN * jnp.cos(decN * th), magN * jnp.sin(decN * th)
+        if d_re.ndim == 2:                                 # static-N: [H, S]
+            d_re, d_im = d_re[None], d_im[None]
         h0_re = h0_re.astype(jnp.float32)
         h0_im = h0_im.astype(jnp.float32)
-        h_re = h_re + d_re[None, :, :, None] * h0_re - d_im[None, :, :, None] * h0_im
-        h_im = h_im + d_re[None, :, :, None] * h0_im + d_im[None, :, :, None] * h0_re
+        h_re = h_re + d_re[..., None] * h0_re - d_im[..., None] * h0_im
+        h_im = h_im + d_re[..., None] * h0_im + d_im[..., None] * h0_re
     return h_re, h_im
 
 

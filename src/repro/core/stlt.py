@@ -349,7 +349,8 @@ def _relevance_readout(params, cfg, x, v, log_mag, theta, masks):
 
 
 def stlt_prefill(params: dict, cfg: STLTConfig, x: jax.Array,
-                 state: Optional[dict] = None):
+                 state: Optional[dict] = None,
+                 valid: Optional[jax.Array] = None):
     """Parallel prefill: full-sequence outputs + the O(S*d) streaming state.
 
     x [B, N, d] -> (y [B, N, d], state). Unilateral, factorized mode.
@@ -364,6 +365,15 @@ def stlt_prefill(params: dict, cfg: STLTConfig, x: jax.Array,
       fused/pallas engines, whose kernels have no initial-state argument.
     * hann window: the ring buffer supplies the W-1 tokens of left context
       for the finite-support convolution.
+
+    ``valid`` (optional [B] ints) marks row b's tokens beyond ``valid[b]``
+    as padding (the serving engine pads every tail chunk to one static
+    shape): padded positions contribute nothing to the carried state —
+    the new state is exactly the state after ``valid[b]`` tokens, computed
+    in closed form (``scan_lib.stlt_final_state``) for the exponential
+    window and by a per-row gather over the extended context for the hann
+    ring. Outputs at positions >= valid[b] are garbage (causality keeps
+    valid positions exact) and must not be read.
     """
     assert not cfg.bidirectional and cfg.mode == "factorized"
     B, N, d = x.shape
@@ -371,6 +381,13 @@ def stlt_prefill(params: dict, cfg: STLTConfig, x: jax.Array,
     log_mag, theta, _, _ = _poles(params, cfg)
     v = _split_heads(x @ params["w_v"], H)  # [B, H, N, dh]
     u_re, u_im = params["nodes"]["u_re"], params["nodes"]["u_im"]
+    if valid is not None:
+        if state is None:
+            state = init_stlt_state(cfg, B)
+        # zero padded inputs: keeps pad garbage out of the scan carries and
+        # bounds the junk that flows into padded residual positions
+        live = jnp.arange(N)[None, :] < valid[:, None]          # [B, N]
+        v = jnp.where(live[:, None, :, None], v, 0.0)
 
     if cfg.window == "hann":
         g = _hann_filters(params, cfg, None)
@@ -386,11 +403,21 @@ def stlt_prefill(params: dict, cfg: STLTConfig, x: jax.Array,
             ext = jnp.concatenate([ctx, v], axis=2)         # [B, H, W+N, dh]
             z = _hann_conv(ext, g, reverse=False)[:, :, W:]
             pos = state["pos"]
-        take = min(W, ext.shape[2])
-        buf = jnp.zeros((B, H, W, cfg.head_dim), jnp.float32)
-        buf = buf.at[:, :, :take].set(
-            ext[:, :, ::-1][:, :, :take].astype(jnp.float32))
-        new_state = {"buf": buf, "pos": pos + N}
+        if valid is not None:
+            # newest-first ring rebuilt by per-row gather: slot w holds the
+            # token at chronological ext index (W + valid - 1 - w) — padded
+            # positions (ext index >= W + valid) are never touched, and a
+            # valid=0 row gathers its own old buffer back unchanged.
+            idx = (W + valid[:, None] - 1) - jnp.arange(W)[None, :]  # [B, W]
+            buf = jnp.take_along_axis(
+                ext.astype(jnp.float32), idx[:, None, :, None], axis=2)
+            new_state = {"buf": buf, "pos": pos + valid.astype(pos.dtype)}
+        else:
+            take = min(W, ext.shape[2])
+            buf = jnp.zeros((B, H, W, cfg.head_dim), jnp.float32)
+            buf = buf.at[:, :, :take].set(
+                ext[:, :, ::-1][:, :, :take].astype(jnp.float32))
+            new_state = {"buf": buf, "pos": pos + N}
     elif cfg.engine in ("chunked_fused", "pallas"):
         # These engines carry no initial-state argument: run them zero-state
         # and fold the carry in by linearity (free response + closed-form
@@ -401,7 +428,8 @@ def stlt_prefill(params: dict, cfg: STLTConfig, x: jax.Array,
         if state is not None:
             z = z + scan_lib.stlt_carry_outputs(
                 h0_re, h0_im, log_mag, theta, u_re, u_im, N).astype(z.dtype)
-        h_re, h_im = scan_lib.stlt_final_state(v, log_mag, theta, h0_re, h0_im)
+        h_re, h_im = scan_lib.stlt_final_state(v, log_mag, theta, h0_re, h0_im,
+                                               valid=valid)
         new_state = {"h_re": h_re, "h_im": h_im}
     else:
         vh = v.transpose(1, 0, 2, 3)  # [H, B, N, dh]
@@ -423,10 +451,20 @@ def stlt_prefill(params: dict, cfg: STLTConfig, x: jax.Array,
             h0_re, h0_im,
         )
         z = z.transpose(1, 0, 2, 3)
-        new_state = {
-            "h_re": h_re.transpose(1, 0, 2, 3),  # [B, H, S, dh]
-            "h_im": h_im.transpose(1, 0, 2, 3),
-        }
+        if valid is not None:
+            # the scan's final carry sits after the padded steps (the carry
+            # keeps decaying through them); the true per-row state at
+            # valid[b] comes from the closed form instead
+            h_re, h_im = scan_lib.stlt_final_state(
+                v, log_mag, theta,
+                None if state is None else state["h_re"],
+                None if state is None else state["h_im"], valid=valid)
+            new_state = {"h_re": h_re, "h_im": h_im}
+        else:
+            new_state = {
+                "h_re": h_re.transpose(1, 0, 2, 3),  # [B, H, S, dh]
+                "h_im": h_im.transpose(1, 0, 2, 3),
+            }
 
     z = _merge_heads(z)
     if cfg.gate:

@@ -7,9 +7,13 @@
 ``--mode continuous`` (default) is the slot-level continuous-batching
 scheduler; ``--mode wave`` is the legacy admission-wave baseline.
 ``--prefill-chunk N`` admits long prompts incrementally (N tokens per tick,
-interleaved with decode). ``--system-prompt-len K`` prepends a shared
-K-token system prompt to every request and serves it through the prefix
-cache, reporting the prefill FLOPs skipped.
+interleaved with decode); all co-pending admissions advance in one batched
+masked dispatch per tick at two static shapes (``--sequential-admission``
+reverts to the one-request-per-tick path with natural-length tails).
+``--system-prompt-len K`` prepends a shared K-token system prompt to every
+request and serves it through the prefix cache, reporting the prefill
+FLOPs skipped; ``--prefix-cache-max-mb`` switches the cache to bytes-aware
+eviction (attention KV entries dwarf O(S*d) STLT entries).
 """
 from __future__ import annotations
 
@@ -41,9 +45,16 @@ def main(argv=None):
     ap.add_argument("--mode", default="continuous", choices=["continuous", "wave"])
     ap.add_argument("--prefill-chunk", type=int, default=0,
                     help="chunked admission size (0 = monolithic prefill)")
+    ap.add_argument("--sequential-admission", action="store_true",
+                    help="legacy one-request-per-tick chunked admission "
+                         "(natural-length tails; recompiles per residue)")
     ap.add_argument("--system-prompt-len", type=int, default=0,
                     help="shared system-prompt tokens served via the prefix cache")
-    ap.add_argument("--prefix-cache-capacity", type=int, default=32)
+    ap.add_argument("--prefix-cache-capacity", type=int, default=None,
+                    help="entry-count cap (default: 32 when no byte cap is "
+                         "set; combine with --prefix-cache-max-mb to co-cap)")
+    ap.add_argument("--prefix-cache-max-mb", type=float, default=0,
+                    help="bytes-aware prefix-cache cap in MiB (0 = entry-count LRU)")
     args = ap.parse_args(argv)
 
     cfg = paper_small() if args.arch is None else configs_lib.get_config(
@@ -62,7 +73,14 @@ def main(argv=None):
         print("[serve] note: --prefill-chunk/--system-prompt-len apply to "
               "continuous mode only; ignored for --mode wave")
     use_cache = args.system_prompt_len and args.mode == "continuous"
-    cache = PrefixCache(args.prefix_cache_capacity) if use_cache else None
+    cache = None
+    if use_cache:
+        # with only a byte cap given, eviction is purely bytes-aware
+        # (capacity=None); PrefixCache defaults to 32 entries when neither
+        # cap is set, and an explicit capacity co-caps alongside max_bytes
+        cache = PrefixCache(
+            capacity=args.prefix_cache_capacity,
+            max_bytes=int(args.prefix_cache_max_mb * 2**20) or None)
     eng = ServeEngine(params, cfg, max_len=args.max_len,
                       temperature=args.temperature,
                       prefill_chunk=args.prefill_chunk, prefix_cache=cache)
@@ -82,7 +100,8 @@ def main(argv=None):
     t0 = time.time()
     results, stats = eng.serve(reqs, slots=args.slots,
                                prompt_len=None if use_cache else args.prompt_len,
-                               mode=args.mode, return_stats=True)
+                               mode=args.mode, return_stats=True,
+                               coalesce=not args.sequential_admission)
     dt = time.time() - t0
     n_tok = sum(len(v) for v in results.values())
     for rid in sorted(results):

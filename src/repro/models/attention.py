@@ -231,7 +231,8 @@ def apply_attention_step(params, cfg: AttentionConfig, x_t: jax.Array, cache: di
     return y, {"k": ck, "v": cv, "pos": pos + 1}
 
 
-def prefill_chunk(params, cfg: AttentionConfig, x: jax.Array, cache: dict):
+def prefill_chunk(params, cfg: AttentionConfig, x: jax.Array, cache: dict,
+                  valid=None):
     """Resumable prefill: append one prompt chunk to an existing KV cache.
 
     x [B, N, d]; ``cache`` as built by ``init_kv_cache``/``prefill_kv_cache``
@@ -243,6 +244,13 @@ def prefill_chunk(params, cfg: AttentionConfig, x: jax.Array, cache: dict):
     (O(N * (cache_size + N)) per chunk, Sarathi-style); old-cache scores are
     taken BEFORE the chunk is written, because a ring write may overwrite
     slots that early chunk queries still need.
+
+    ``valid`` (optional [B] ints): positions >= valid[b] of row b are
+    padding (static-shape tail chunks). Pad keys are never written into the
+    cache (masked scatter) and ``pos`` advances by valid[b]; pad QUERIES
+    need no extra masking — the causal mask already restricts a valid query
+    to keys at valid positions, so only the (unread) pad outputs see pad
+    keys.
     """
     B, N, _ = x.shape
     pos = cache["pos"]
@@ -251,7 +259,7 @@ def prefill_chunk(params, cfg: AttentionConfig, x: jax.Array, cache: dict):
     positions = pos[:, None] + jnp.arange(N)[None, :]  # [B, N] absolute
     q, k, v = _qkv(params, cfg, x, positions)
     size = cache["k"].shape[1]
-    total = pos + N
+    total = pos + (N if valid is None else valid.astype(pos.dtype))
 
     # absolute position held by old slot j: the largest p < pos with
     # p % size == j (ring; negative -> never written), or j itself (linear)
@@ -280,7 +288,25 @@ def prefill_chunk(params, cfg: AttentionConfig, x: jax.Array, cache: dict):
     y = o @ params["wo"]
 
     # now append the chunk to the cache
-    if cfg.window > 0 and N >= size:
+    if valid is not None:
+        # masked scatter: only positions n < valid[b] are written — and for a
+        # ring only the last ``size`` of them (one writer per slot, so the
+        # scatter is duplicate-free at any N). Masked writes are redirected
+        # to the out-of-bounds slot ``size`` and dropped.
+        n_idx = jnp.arange(N)[None, :]                     # [1, N]
+        write = n_idx < valid[:, None]
+        if cfg.window > 0:
+            write &= n_idx >= valid[:, None] - size
+            slot = positions % size
+        else:
+            slot = positions
+        slot = jnp.where(write, slot, size)
+        bidx = jnp.arange(B)[:, None]
+        ck = cache["k"].at[bidx, slot].set(k.astype(cache["k"].dtype),
+                                           mode="drop")
+        cv = cache["v"].at[bidx, slot].set(v.astype(cache["v"].dtype),
+                                           mode="drop")
+    elif cfg.window > 0 and N >= size:
         # the chunk alone overwrites the whole ring: keep the last ``size``
         # tokens, rotated so slot (total % size) is the next write position
         shift = total % size

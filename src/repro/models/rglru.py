@@ -77,15 +77,23 @@ def apply_rglru_block(params, cfg, x):
     return (gate * h) @ params["w_out"]
 
 
-def rglru_prefill(params, cfg, x, state=None):
+def rglru_prefill(params, cfg, x, state=None, valid=None):
     """Parallel prefill: outputs + final recurrent state + conv buffer.
 
     ``state`` (optional) resumes from a carried state: the conv buffer
     supplies the depthwise-conv left context and the recurrent carry ``h0``
     enters by linearity — h_n += (prod_{t<=n} a_t) * h0 — on top of the
     zero-state associative scan (DESIGN.md §Serving).
+
+    ``valid`` (optional [B] ints): positions >= valid[b] are padding
+    (static-shape tail chunks). The carried ``h`` is gathered at position
+    valid[b]-1 instead of N-1 and the conv buffer is rebuilt by a per-row
+    gather over [old buffer || chunk], so padded steps never enter the
+    state.
     """
     B, N, d = x.shape
+    if valid is not None and state is None:
+        state = init_rglru_state(cfg, B)
     gate = jax.nn.gelu(x @ params["w_gate"])
     xr = x @ params["w_x"]
     if state is None:
@@ -98,6 +106,17 @@ def rglru_prefill(params, cfg, x, state=None):
     if state is not None:
         h = h + jnp.cumprod(a, axis=-2) * state["h"][:, None, :]
     y = (gate * h.astype(x.dtype)) @ params["w_out"]
+    if valid is not None:
+        idx = jnp.maximum(valid - 1, 0).astype(jnp.int32)       # valid=0: row
+        h_last = jnp.take_along_axis(h, idx[:, None, None], axis=1)[:, 0]
+        # conv buffer slot j (oldest first) holds the token at chunk offset
+        # valid - (CONV_W-1) + j == extended index valid + j; offsets < 0
+        # resolve into the carried old buffer, exactly as "no input yet".
+        extb = jnp.concatenate([state["conv_buf"],
+                                xr.astype(jnp.float32)], axis=1)
+        bidx = valid[:, None] + jnp.arange(CONV_W - 1)[None, :]  # [B, W-1]
+        buf = jnp.take_along_axis(extb, bidx[..., None], axis=1)
+        return y, {"h": h_last, "conv_buf": buf}
     buf = jnp.zeros((B, CONV_W - 1, d), jnp.float32)
     take = min(CONV_W - 1, N)
     if take:

@@ -325,12 +325,24 @@ def _block_ffn(params, cfg: ModelConfig, x):
     return x
 
 
-def _last_logits(params, cfg: ModelConfig, x):
-    """Final norm + LM head on the last position. x [B, N, d] -> [B, V]."""
-    x_last = L.apply_norm(cfg.norm, params["final_norm"], x[:, -1:, :])[:, 0]
+def _head_logits(params, cfg: ModelConfig, x_sel):
+    """Final norm + LM head on one selected position. x_sel [B, 1, d] -> [B, V]."""
+    x_sel = L.apply_norm(cfg.norm, params["final_norm"], x_sel)[:, 0]
     if "lm_head" in params:
-        return x_last @ params["lm_head"]["kernel"]
-    return L.unembed(params["embed"], x_last)
+        return x_sel @ params["lm_head"]["kernel"]
+    return L.unembed(params["embed"], x_sel)
+
+
+def _last_logits(params, cfg: ModelConfig, x):
+    """Logits at the last position. x [B, N, d] -> [B, V]."""
+    return _head_logits(params, cfg, x[:, -1:, :])
+
+
+def _logits_at(params, cfg: ModelConfig, x, idx):
+    """Logits at per-row position ``idx`` [B] — the masked-prefill variant
+    of ``_last_logits`` (the last VALID position of a padded tail chunk
+    differs per row)."""
+    return _head_logits(params, cfg, jnp.take_along_axis(x, idx[:, None, None], axis=1))
 
 
 def _block_prefill(params, cfg: ModelConfig, btype: str, x, max_len: int):
@@ -379,28 +391,51 @@ def prefill(params: dict, cfg: ModelConfig, inputs: jax.Array, max_len: int):
         "layers": states, "pos": jnp.full((B,), N, jnp.int32)}
 
 
-def _block_prefill_chunk(params, cfg: ModelConfig, btype: str, x, state):
+def _block_prefill_chunk(params, cfg: ModelConfig, btype: str, x, state,
+                         valid=None):
     """Advance one block's streaming state by one prompt chunk (state=None:
-    fresh monolithic prefill — the mixers treat both uniformly)."""
+    fresh monolithic prefill — the mixers treat both uniformly).
+
+    ``valid`` (optional [B] ints) is the per-row valid length of a padded
+    chunk (two-shape serving, DESIGN.md §Serving). Every mixer masks its
+    state update so the carry stops at valid[b]; on top of that, rows with
+    valid == 0 keep their old state BIT-exactly via a final per-row select —
+    load-bearing, not just insurance: e.g. a fresh mLSTM row (stabilizer
+    m = -1e30) degenerates under the gate-neutralization trick when it sees
+    only pad steps, and the engine's coalesced dispatch runs every slot of
+    the prefill pool, pending or not."""
     h = L.apply_norm(cfg.norm, params["norm1"], x)
+    old_state = state
     if btype in ("attn", "local_attn"):
         window = cfg.local_window if btype == "local_attn" else 0
-        mixed, state = attn_lib.prefill_chunk(params["attn"], _attn_cfg(cfg, window), h, state)
+        mixed, state = attn_lib.prefill_chunk(
+            params["attn"], _attn_cfg(cfg, window), h, state, valid=valid)
     elif btype == "stlt":
-        mixed, state = stlt_lib.stlt_prefill(params["stlt"], cfg.stlt_config(), h, state)
+        mixed, state = stlt_lib.stlt_prefill(
+            params["stlt"], cfg.stlt_config(), h, state, valid=valid)
     elif btype == "mlstm":
-        mixed, state = xlstm_lib.mlstm_prefill(params["cell"], cfg, h, state)
+        mixed, state = xlstm_lib.mlstm_prefill(params["cell"], cfg, h, state,
+                                               valid=valid)
     elif btype == "slstm":
-        mixed, state = xlstm_lib.slstm_prefill(params["cell"], cfg, h, state)
+        mixed, state = xlstm_lib.slstm_prefill(params["cell"], cfg, h, state,
+                                               valid=valid)
     elif btype == "rglru":
-        mixed, state = rglru_lib.rglru_prefill(params["rec"], cfg, h, state)
+        mixed, state = rglru_lib.rglru_prefill(params["rec"], cfg, h, state,
+                                               valid=valid)
     else:
         raise ValueError(f"prefill unsupported for block type {btype!r}")
+    if valid is not None and old_state is not None:
+        keep = valid > 0
+        state = jax.tree_util.tree_map(
+            lambda n, o: jnp.where(
+                keep.reshape((-1,) + (1,) * (n.ndim - 1)), n, o),
+            state, old_state)
     x = x + mixed.astype(x.dtype)
     return _block_ffn(params, cfg, x), state
 
 
-def prefill_chunk(params: dict, cfg: ModelConfig, inputs: jax.Array, state: dict):
+def prefill_chunk(params: dict, cfg: ModelConfig, inputs: jax.Array, state: dict,
+                  valid_len: Optional[jax.Array] = None):
     """Resumable chunked prefill: advance EVERY layer's streaming state by one
     prompt chunk, carrying the state across calls.
 
@@ -414,6 +449,16 @@ def prefill_chunk(params: dict, cfg: ModelConfig, inputs: jax.Array, state: dict
     this function is exact vs the monolithic ``prefill`` (DESIGN.md
     §Serving), because every mixer here is an RNN-style recurrence (STLT
     scan carry, hann ring, KV append, rg-LRU / xLSTM hidden states).
+
+    ``valid_len`` (optional [B] ints, 0 <= valid_len[b] <= N) makes this a
+    TWO-SHAPE program (DESIGN.md §Serving): every tail chunk is padded to
+    one static N and row b treats positions >= valid_len[b] as padding.
+    Each mixer masks its state update so the carry stops exactly at
+    valid_len[b]; logits are read at the last VALID position per row;
+    ``pos`` advances by valid_len. Rows with valid_len == 0 are bit-exact
+    no-ops (their state and pos pass through unchanged), which is what lets
+    the serving engine dispatch one batched chunk over the WHOLE slot pool
+    regardless of how many slots are actually mid-prefill.
     """
     pos = state["pos"]
     if pos.ndim == 0:  # legacy scalar-pos states
@@ -423,6 +468,9 @@ def prefill_chunk(params: dict, cfg: ModelConfig, inputs: jax.Array, state: dict
     else:
         x = inputs.astype(cfg.act_dtype)
     B, N = x.shape[0], x.shape[1]
+    valid = None
+    if valid_len is not None:
+        valid = jnp.asarray(valid_len, jnp.int32)
     if cfg.mixer != "attention" or cfg.family in ("xlstm",):
         pe = jax.vmap(
             lambda p: L.sinusoidal_pe(N, cfg.d_model, offset=p, dtype=x.dtype)
@@ -437,15 +485,20 @@ def prefill_chunk(params: dict, cfg: ModelConfig, inputs: jax.Array, state: dict
 
             def body(x_in, scanned):
                 layer_params, layer_state = scanned
-                x_out, new_s = _block_prefill_chunk(layer_params, cfg, btype, x_in, layer_state)
+                x_out, new_s = _block_prefill_chunk(
+                    layer_params, cfg, btype, x_in, layer_state, valid=valid)
                 return x_out, new_s
 
             x, new_s = jax.lax.scan(body, x, (stacked, st))
         else:
-            x, new_s = _block_prefill_chunk(stacked, cfg, btype, x, st)
+            x, new_s = _block_prefill_chunk(stacked, cfg, btype, x, st,
+                                            valid=valid)
         new_states.append(new_s)
 
-    return _last_logits(params, cfg, x), {"layers": new_states, "pos": pos + N}
+    if valid is None:
+        return _last_logits(params, cfg, x), {"layers": new_states, "pos": pos + N}
+    logits = _logits_at(params, cfg, x, jnp.maximum(valid - 1, 0))
+    return logits, {"layers": new_states, "pos": pos + valid}
 
 
 def _block_step(params, cfg: ModelConfig, btype: str, x_t, state, pos):

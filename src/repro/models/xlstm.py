@@ -169,18 +169,31 @@ def apply_mlstm(params, cfg, x):
     return h @ params["w_down"]
 
 
-def mlstm_prefill(params, cfg, x, state=None):
+def mlstm_prefill(params, cfg, x, state=None, valid=None):
     """Parallel prefill: outputs + exact streaming state (C, n, m, conv buf).
 
     ``state`` (optional) resumes from a carried state: (C, n, m) seed the
     chunkwise scan and the conv buffer supplies the conv left context, so
     prefill is chunkable at any token boundary (DESIGN.md §Serving).
+
+    ``valid`` (optional [B] ints): positions >= valid[b] are padding
+    (static-shape tail chunks). Pad steps are neutralized through the gates
+    — log-forget 0 (f=1) and log-input -inf (i=0) make the recurrence carry
+    straight through them, the exact trick ``mlstm_chunked`` already uses
+    for its internal chunk padding — and the conv buffer is rebuilt by a
+    per-row gather.
     """
     B, N, d = x.shape
     di = _di(cfg)
+    if valid is not None and state is None:
+        state = init_mlstm_state(cfg, B)
     conv_buf = None if state is None else state["conv_buf"]
     init = None if state is None else (state["C"], state["n"], state["m"])
     q, k, v, li, lf, z = _mlstm_gates_qkv(params, cfg, x, conv_buf=conv_buf)
+    if valid is not None:
+        live = jnp.arange(N)[None, :, None] < valid[:, None, None]  # [B,N,1]
+        li = jnp.where(live, li, -1e30)
+        lf = jnp.where(live, lf, 0.0)
     h, (C, n, m) = mlstm_chunked(q, k, v, li, lf, chunk=min(64, max(8, N)),
                                  return_state=True, init_state=init)
     h = h.reshape(B, N, -1).astype(x.dtype)
@@ -189,6 +202,11 @@ def mlstm_prefill(params, cfg, x, state=None):
     # conv buffer: last CONV_W-1 pre-conv activations
     up = x @ params["w_up"]
     x_m = up[..., :di].astype(jnp.float32)
+    if valid is not None:
+        extb = jnp.concatenate([state["conv_buf"], x_m], axis=1)
+        bidx = valid[:, None] + jnp.arange(CONV_W - 1)[None, :]  # [B, W-1]
+        buf = jnp.take_along_axis(extb, bidx[..., None], axis=1)
+        return y, {"C": C, "n": n, "m": m, "conv_buf": buf}
     buf = jnp.zeros((B, CONV_W - 1, di), jnp.float32)
     take = min(CONV_W - 1, N)
     if take:
@@ -305,21 +323,38 @@ def apply_slstm(params, cfg, x):
     return h @ params["w_out"]
 
 
-def slstm_prefill(params, cfg, x, state=None):
+def slstm_prefill(params, cfg, x, state=None, valid=None):
     """Sequential by nature; returns outputs + final recurrent state.
 
     ``state`` (optional) resumes the recurrence mid-prompt (chunked prefill);
     the cell is a true RNN, so seeding the scan is exact by construction.
+
+    ``valid`` (optional [B] ints): positions >= valid[b] are padding
+    (static-shape tail chunks) — each pad step is a per-row no-op
+    (``where`` keeps the previous cell state), so the final state is
+    bit-exactly the state after valid[b] real tokens.
     """
     B, N, d = x.shape
     x_proj = x @ params["w_in"] + params["b"]
     st = init_slstm_state(cfg, B) if state is None else state
 
-    def step(s, xp):
-        s = _slstm_step_core(params, cfg, xp, s)
-        return s, s["h"]
+    if valid is None:
 
-    st_f, hs = jax.lax.scan(step, st, jnp.moveaxis(x_proj, 1, 0))
+        def step(s, xp):
+            s = _slstm_step_core(params, cfg, xp, s)
+            return s, s["h"]
+
+        st_f, hs = jax.lax.scan(step, st, jnp.moveaxis(x_proj, 1, 0))
+    else:
+        live = jnp.arange(N)[:, None] < valid[None, :]  # [N, B]
+
+        def step(s, inp):
+            xp, msk = inp
+            new = _slstm_step_core(params, cfg, xp, s)
+            s = {k_: jnp.where(msk[:, None], new[k_], s[k_]) for k_ in s}
+            return s, s["h"]
+
+        st_f, hs = jax.lax.scan(step, st, (jnp.moveaxis(x_proj, 1, 0), live))
     h = jnp.moveaxis(hs, 0, 1).astype(x.dtype)
     h = L.rms_norm(params["norm"], h)
     return h @ params["w_out"], st_f

@@ -33,11 +33,24 @@ split into fixed-size chunks folded through the resumable
 ``transformer.prefill_chunk``, one chunk per tick, interleaved with the
 pool's batched decode steps (Sarathi-style mixed steps) — a 100k-token
 admission therefore stalls co-resident decodes by at most one chunk of
-prefill work per token, never by the whole prompt. A :class:`PrefixCache`
-(``prefix_cache=``) snapshots the O(S*d) streaming state at chunk
-boundaries keyed by prompt-prefix hash, so requests sharing a system
-prompt skip the shared prefix's prefill FLOPs entirely; ``warm_prefix``
-pre-populates it.
+prefill work per token, never by the whole prompt.
+
+Chunked admission is a TWO-SHAPE program (DESIGN.md §Serving): every chunk
+— tail chunks included — is padded to ``prefill_chunk`` and carries a
+per-row ``valid_len`` mask, and ALL co-pending admissions advance in ONE
+masked dispatch per tick. Pending prefills live in a second slot-shaped
+pool (``prefill pool``); the dispatch is bucketed to exactly two static
+shapes — ``[1, prefill_chunk]`` when one slot is pending (also the
+``warm_prefix`` shape) and ``[slots, prefill_chunk]`` when several co-pend
+— so a serve trace over prompts of arbitrary lengths compiles exactly two
+prefill programs, ever. (The PR-2 engine compiled one program per distinct
+``prompt_len % chunk`` and advanced one request per jitted call; that path
+is kept as ``coalesce=False`` for parity tests and benchmarks.)
+
+A :class:`PrefixCache` (``prefix_cache=``) snapshots the O(S*d) streaming
+state at chunk boundaries keyed by prompt-prefix hash, so requests sharing
+a system prompt skip the shared prefix's prefill FLOPs entirely;
+``warm_prefix`` pre-populates it.
 
 ``ServeEngine.generate`` is the simple API (one batch in, tokens out).
 ``ServeEngine.serve`` runs the scheduler; ``mode="wave"`` keeps the legacy
@@ -165,6 +178,7 @@ class ServeEngine:
         self._prefill_chunk = jax.jit(partial(T.prefill_chunk, cfg=cfg))
         self._step = jax.jit(partial(T.decode_step, cfg=cfg))
         self._insert = jax.jit(partial(T.insert_slot, cfg=cfg))
+        self._extract = jax.jit(partial(T.extract_slot, cfg=cfg))
         self._reset = jax.jit(partial(T.reset_slot, cfg=cfg, max_len=max_len))
         self._sample = jax.jit(partial(sample_slot_tokens, top_k=top_k))
         self._split = jax.jit(split_slot_keys)
@@ -192,7 +206,7 @@ class ServeEngine:
     def serve(self, requests: list, slots: int = 4,
               prompt_len: Optional[int] = None, mode: str = "continuous",
               arrivals=None, rng_seed: int = 0, return_stats: bool = False,
-              prefill_chunk: Optional[int] = None):
+              prefill_chunk: Optional[int] = None, coalesce: bool = True):
         """Serve a request list. Returns {request_id: np.ndarray tokens}
         (plus a per-request stats dict when ``return_stats``).
 
@@ -202,6 +216,16 @@ class ServeEngine:
         resumable ``transformer.prefill_chunk`` one chunk per tick while the
         resident slots keep decoding, and is token-exact vs monolithic
         admission at any chunk size.
+
+        ``coalesce`` (default True) advances ALL co-pending admissions with
+        one batched masked ``prefill_chunk`` dispatch per tick — tail
+        chunks padded to ``prefill_chunk`` with per-row ``valid_len``,
+        bucketed to the two static shapes [1, chunk] / [slots, chunk] — so
+        chunked admission compiles exactly two prefill programs regardless
+        of prompt lengths. ``coalesce=False`` keeps the legacy
+        one-request-per-tick path (one batch-1 dispatch per pending slot,
+        tail chunks jitted at their natural length); both paths are
+        token-exact vs each other and vs monolithic admission.
 
         mode="continuous": per-slot admission (default). mode="wave": the
         legacy engine — admit up to ``slots`` requests, drain them all, then
@@ -228,8 +252,8 @@ class ServeEngine:
         chunk = self.prefill_chunk if prefill_chunk is None else prefill_chunk
         if chunk < 0:
             raise ValueError(f"prefill_chunk must be >= 0 (got {chunk})")
-        return self._serve_continuous(requests, slots, prompt_len,
-                                      arrivals, rng_seed, return_stats, chunk)
+        return self._serve_continuous(requests, slots, prompt_len, arrivals,
+                                      rng_seed, return_stats, chunk, coalesce)
 
     def _padded(self, prompt: np.ndarray, prompt_len: Optional[int]):
         prompt = np.asarray(prompt, np.int32)
@@ -295,7 +319,13 @@ class ServeEngine:
         cache without serving a request: snapshots the streaming state at
         every chunk boundary and at the full length, PINNED against LRU
         eviction by per-request snapshots. Returns the number of tokens
-        actually prefilled (0 on a full cache hit)."""
+        actually prefilled (0 on a full cache hit).
+
+        Two-shape contract: the tail remainder is masked-prefilled at the
+        padded [1, chunk] shape (per-row ``valid_len``), so warming never
+        truncates a non-boundary prefix to the last chunk boundary and never
+        compiles a per-residue tail program — the EXACT-length entry always
+        exists (regression-locked by tests/test_masked_prefill.py)."""
         if self.prefix_cache is None:
             raise ValueError("warm_prefix requires a prefix_cache")
         prompt = np.asarray(prompt, np.int32)
@@ -310,25 +340,34 @@ class ServeEngine:
         done = offset
         while done < len(prompt):
             n = min(chunk, len(prompt) - done)
+            buf = np.zeros((1, chunk), np.int32)
+            buf[0, :n] = prompt[done:done + n]
             logits, state = self._prefill_chunk(
-                self.params, inputs=jnp.asarray(prompt[None, done:done + n]),
-                state=state)
+                self.params, inputs=jnp.asarray(buf), state=state,
+                valid_len=jnp.asarray([n], np.int32))
             done += n
             self._cache_insert(prompt, done, state, logits, pinned=True)
         return len(prompt) - offset
 
     # ------------------------------------------------------------- continuous
     def _serve_continuous(self, requests, slots, prompt_len, arrivals,
-                          rng_seed, return_stats, chunk_size):
+                          rng_seed, return_stats, chunk_size, coalesce=True):
         cfg = self.cfg
         sched = Scheduler(slots)
         queue = self._queue(requests, arrivals, prompt_len)
         results: dict[int, list[int]] = {}
 
         pool = T.init_decode_state(cfg, slots, self.max_len)
-        # one shared pristine batch-1 state for chunked admissions: jax
-        # pytrees are immutable, so every pending request can seed from the
-        # same template without re-paying the op-by-op init dispatch
+        # coalesced chunked admission: pending prefills live in a SECOND
+        # slot-shaped pool so one batched masked prefill_chunk dispatch
+        # ([slots, chunk] + per-row valid_len) advances every co-pending
+        # admission per tick; non-pending rows ride along with valid_len=0
+        # (bit-exact no-ops). Lazily built on the first chunked admission.
+        prefill_pool = None
+        # one shared pristine batch-1 state for legacy (coalesce=False)
+        # chunked admissions: jax pytrees are immutable, so every pending
+        # request can seed from the same template without re-paying the
+        # op-by-op init dispatch
         fresh1 = None
         tok = np.zeros(slots, np.int32)
         temps = np.full(slots, self.temperature, np.float32)
@@ -382,9 +421,20 @@ class ServeEngine:
                     # full-prompt cache hit: the stored last-token logits
                     # stand in for the skipped prefill
                     promote(s, ent, plogits, pstate, tick)
+                elif chunk_size and coalesce:
+                    # incremental admission via the batched dispatch below
+                    # (which promotes a <= one-chunk remainder within this
+                    # same tick): seed the slot's prefill-pool row
+                    if prefill_pool is None:
+                        prefill_pool = T.init_decode_state(cfg, slots, self.max_len)
+                    if pstate is None:
+                        prefill_pool = self._reset(prefill_pool, s)
+                    else:
+                        prefill_pool = self._insert(prefill_pool, pstate, s)
+                    del ent["state"]  # lives in the prefill pool
+                    pending[s] = ent
                 elif chunk_size:
-                    # incremental admission (the pending loop below promotes
-                    # a <= one-chunk remainder within this same tick)
+                    # legacy one-request-per-tick admission (batch-1 states)
                     if pstate is None:
                         if fresh1 is None:
                             fresh1 = T.init_decode_state(cfg, 1, self.max_len)
@@ -402,21 +452,73 @@ class ServeEngine:
                     self._cache_insert(prompt, len(prompt), st1, logits1)
                     promote(s, ent, logits1, st1, tick)
 
-            # --- mixed step: one prefill chunk per pending slot... ----------
-            for s in list(pending):
+            # --- mixed step: ONE masked chunk dispatch advances every pending
+            # admission (coalesce=True). Two static shapes only: a lone
+            # pending slot advances at [1, chunk] (the warm_prefix shape —
+            # no point paying slots-x the FLOPs for one row), co-pending
+            # slots coalesce into the full [slots, chunk] pool dispatch.
+            if pending and coalesce and len(pending) == 1 and slots > 1:
+                s, = pending
                 ent = pending[s]
                 n = min(chunk_size, len(ent["prompt"]) - ent["done"])
-                logits1, ent["state"] = self._prefill_chunk(
-                    self.params,
-                    inputs=jnp.asarray(ent["prompt"][None, ent["done"]:ent["done"] + n]),
-                    state=ent["state"])
+                buf = np.zeros((1, chunk_size), np.int32)
+                buf[0, :n] = ent["prompt"][ent["done"]:ent["done"] + n]
+                st1 = self._extract(prefill_pool, s)
+                logits1, st1 = self._prefill_chunk(
+                    self.params, inputs=jnp.asarray(buf), state=st1,
+                    valid_len=jnp.asarray([n], np.int32))
                 ent["done"] += n
-                if ent["resumed"] or ent["done"] == len(ent["prompt"]):
-                    self._cache_insert(ent["prompt"], ent["done"],
-                                       ent["state"], logits1)
-                if ent["done"] == len(ent["prompt"]):
+                finished = ent["done"] == len(ent["prompt"])
+                if ent["resumed"] or finished:
+                    self._cache_insert(ent["prompt"], ent["done"], st1, logits1)
+                if finished:
                     del pending[s]
-                    promote(s, ent, logits1, ent["state"], tick)
+                    promote(s, ent, logits1, st1, tick)
+                else:
+                    prefill_pool = self._insert(prefill_pool, st1, s)
+            elif pending and coalesce:
+                chunk_tok = np.zeros((slots, chunk_size), np.int32)
+                valid = np.zeros((slots,), np.int32)
+                for s, ent in pending.items():
+                    n = min(chunk_size, len(ent["prompt"]) - ent["done"])
+                    chunk_tok[s, :n] = ent["prompt"][ent["done"]:ent["done"] + n]
+                    valid[s] = n
+                logits_all, prefill_pool = self._prefill_chunk(
+                    self.params, inputs=jnp.asarray(chunk_tok),
+                    state=prefill_pool, valid_len=jnp.asarray(valid))
+                for s in list(pending):
+                    ent = pending[s]
+                    ent["done"] += int(valid[s])
+                    finished = ent["done"] == len(ent["prompt"])
+                    if ent["resumed"] or finished:
+                        st1 = self._extract(prefill_pool, s)
+                        self._cache_insert(ent["prompt"], ent["done"], st1,
+                                           logits_all[s:s + 1])
+                    if finished:
+                        del pending[s]
+                        promote(s, ent, logits_all[s:s + 1], st1, tick)
+            # --- ...or one batch-1 chunk per pending slot (legacy path) -----
+            elif pending:
+                for s in list(pending):
+                    ent = pending[s]
+                    n = min(chunk_size, len(ent["prompt"]) - ent["done"])
+                    logits1, ent["state"] = self._prefill_chunk(
+                        self.params,
+                        inputs=jnp.asarray(ent["prompt"][None, ent["done"]:ent["done"] + n]),
+                        state=ent["state"])
+                    ent["done"] += n
+                    if ent["resumed"] or ent["done"] == len(ent["prompt"]):
+                        self._cache_insert(ent["prompt"], ent["done"],
+                                           ent["state"], logits1)
+                    if ent["done"] == len(ent["prompt"]):
+                        del pending[s]
+                        promote(s, ent, logits1, ent["state"], tick)
+
+            # release the prefill pool once every admission has drained (it
+            # doubles resident state — a full second KV pool for attention
+            # archs); the next chunked admission lazily rebuilds it
+            if prefill_pool is not None and not pending:
+                prefill_pool = None
 
             # --- ...plus one batched decode step for the whole pool ---------
             if sched.live.any():

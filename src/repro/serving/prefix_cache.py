@@ -17,8 +17,14 @@ for them too, just without the constant-memory property.)
 
 Entries are immutable jax pytrees (batch-1 decode states), so a hit hands
 out the stored reference — no copy, no invalidation: splicing into a slot
-pool never mutates the source. Eviction is LRU by entry count; token-exact
-reuse is guaranteed by keying on the raw token bytes (SHA-1, no collision
+pool never mutates the source. Eviction is LRU and BYTES-aware: each entry
+is sized by the actual nbytes of its state pytree (+ logits), so one
+attention-KV entry — which dwarfs an O(S*d) STLT entry by orders of
+magnitude — counts for what it actually holds, and ``max_bytes`` caps the
+resident total instead of a blind entry count (``capacity`` remains as an
+optional secondary entry-count cap). Pinned entries (warmed system prompts)
+are skipped by eviction while any unpinned victim exists. Token-exact reuse
+is guaranteed by keying on the raw token bytes (SHA-1, no collision
 handling beyond the hash) rather than on any normalized text.
 """
 from __future__ import annotations
@@ -36,54 +42,97 @@ def prefix_digest(tokens) -> bytes:
     return hashlib.sha1(np.ascontiguousarray(tokens, np.int32).tobytes()).digest()
 
 
+def pytree_nbytes(tree) -> int:
+    """Total resident bytes of a pytree's array leaves (non-array leaves —
+    e.g. unit-test sentinels — count 0)."""
+    import jax
+
+    return sum(int(getattr(leaf, "nbytes", 0))
+               for leaf in jax.tree_util.tree_leaves(tree))
+
+
 @dataclasses.dataclass
 class PrefixEntry:
     n_tokens: int            # prefix length the state summarizes
     state: Any               # batch-1 decode-state pytree (post-prefix)
     logits: Any = None       # last-token logits (only for full-prompt entries)
     pinned: bool = False     # exempt from LRU eviction (warmed system prompts)
+    nbytes: int = 0          # actual resident bytes (state + logits)
 
 
 class PrefixCache:
-    """LRU map: prompt-prefix digest -> post-prefix streaming state.
+    """Bytes-aware LRU map: prompt-prefix digest -> post-prefix streaming
+    state.
+
+    ``max_bytes`` caps the total resident bytes across entries (the primary
+    cap: an attention-KV entry is sized by its real max_len buffer, an STLT
+    entry by its S*d carry). ``capacity`` is an optional entry-count cap
+    kept for callers that want bounded host-side bookkeeping regardless of
+    entry size; with neither given, capacity defaults to 32.
 
     ``lookup`` returns the LONGEST cached prefix of a prompt, trying the
     registered entry lengths longest-first — the host-side cost is one hash
     per distinct cached length, independent of the number of entries.
     """
 
-    def __init__(self, capacity: int = 32):
-        if capacity < 1:
+    def __init__(self, capacity: Optional[int] = None,
+                 max_bytes: Optional[int] = None):
+        if capacity is None and max_bytes is None:
+            capacity = 32  # legacy default: bounded entry count
+        if capacity is not None and capacity < 1:
             raise ValueError(f"capacity must be >= 1 (got {capacity})")
+        if max_bytes is not None and max_bytes < 1:
+            raise ValueError(f"max_bytes must be >= 1 (got {max_bytes})")
         self.capacity = capacity
+        self.max_bytes = max_bytes
         self._entries: OrderedDict[bytes, PrefixEntry] = OrderedDict()
+        self._bytes = 0
         self.hits = 0
         self.misses = 0
 
     def __len__(self) -> int:
         return len(self._entries)
 
+    @property
+    def nbytes(self) -> int:
+        """Total resident bytes across entries."""
+        return self._bytes
+
+    def _over_cap(self) -> bool:
+        if self.capacity is not None and len(self._entries) > self.capacity:
+            return True
+        return self.max_bytes is not None and self._bytes > self.max_bytes
+
+    def _drop(self, key: bytes) -> None:
+        self._bytes -= self._entries.pop(key).nbytes
+
     def insert(self, tokens, state, logits=None, pinned: bool = False) -> None:
         """Register the post-prefix state for ``tokens`` (a full prefix).
 
         ``pinned`` entries (explicitly warmed system prompts) are exempt
-        from LRU eviction, so per-request boundary snapshots can never
-        evict a warm shared prefix. Pinned entries count against capacity
-        but are only dropped when everything is pinned."""
+        from eviction, so per-request boundary snapshots can never evict a
+        warm shared prefix. Pinned entries count against both caps but are
+        only dropped when everything is pinned. A single entry larger than
+        ``max_bytes`` is still admitted (evicting everything else cannot
+        make it fit); it simply becomes the sole resident until displaced."""
         tokens = np.asarray(tokens, np.int32)
         key = prefix_digest(tokens)
         if key in self._entries:
             old = self._entries.pop(key)
+            self._bytes -= old.nbytes
             if logits is None:  # keep a richer (logits-bearing) entry
                 logits = old.logits
             pinned = pinned or old.pinned
-        self._entries[key] = PrefixEntry(int(tokens.size), state, logits, pinned)
-        while len(self._entries) > self.capacity:
-            victim = next((k for k, e in self._entries.items() if not e.pinned),
-                          None)
+        nbytes = pytree_nbytes(state) + pytree_nbytes(logits)
+        self._entries[key] = PrefixEntry(int(tokens.size), state, logits,
+                                         pinned, nbytes)
+        self._bytes += nbytes
+        while self._over_cap() and len(self._entries) > 1:
+            victim = next((k for k, e in self._entries.items()
+                           if not e.pinned and k != key), None)
             if victim is None:  # all pinned: evict true-LRU rather than grow
-                victim = next(iter(self._entries))
-            del self._entries[victim]
+                victim = next(k for k in self._entries if k != key)
+            self._drop(victim)
 
     def lookup(self, prompt) -> Optional[PrefixEntry]:
         """Longest cached prefix of ``prompt`` (None on miss). LRU-refreshes
@@ -102,5 +151,5 @@ class PrefixCache:
         return None
 
     def stats(self) -> dict:
-        return {"entries": len(self._entries), "hits": self.hits,
-                "misses": self.misses}
+        return {"entries": len(self._entries), "bytes": self._bytes,
+                "hits": self.hits, "misses": self.misses}

@@ -160,6 +160,32 @@ def with_sharding_constraint(x, spec):
         return x
 
 
+def trace_probe(fn: Callable, log: list, name: str | None = None) -> Callable:
+    """Wrap ``fn`` so every TRACE of it is recorded in ``log``.
+
+    ``jax.jit`` re-traces (and re-compiles) the wrapped Python callable once
+    per distinct input shape/dtype signature, so wrapping a function BEFORE
+    it is jitted turns ``log`` into a compilation counter: each entry is
+    ``(name, shape)`` where shape is taken from the ``inputs`` kwarg (or the
+    first array argument). The serving compile-count regression tests and
+    benchmarks/serving.py use this to prove chunked admission is a
+    two-shape program.
+    """
+    import functools
+
+    label = name or getattr(fn, "__name__", "fn")
+
+    @functools.wraps(fn)
+    def probed(*args, **kwargs):
+        arr = kwargs.get("inputs")
+        if arr is None:
+            arr = next((a for a in args if hasattr(a, "shape")), None)
+        log.append((label, None if arr is None else tuple(arr.shape)))
+        return fn(*args, **kwargs)
+
+    return probed
+
+
 def shard_map(f, mesh, in_specs, out_specs, **kwargs):
     """Version-compatible ``shard_map``.
 

@@ -35,6 +35,23 @@ def rng():
     return np.random.default_rng(0)
 
 
+@pytest.fixture
+def jit_trace_log(monkeypatch):
+    """Counting jit hook: patches the transformer prefill entry points with
+    ``repro.utils.trace_probe`` BEFORE they are jitted, so every jit trace
+    (= XLA compilation) of a prefill program appends ``(name, inputs.shape)``
+    to the returned list. Engines must be constructed inside the test (after
+    the patch) for their ``jax.jit`` wrappers to pick up the probe — used by
+    the two-shape compile-count regression in test_masked_prefill.py."""
+    from repro.models import transformer as T
+    from repro.utils import trace_probe
+
+    log: list = []
+    for name in ("prefill", "prefill_chunk"):
+        monkeypatch.setattr(T, name, trace_probe(getattr(T, name), log, name))
+    return log
+
+
 def small_cfg(**kw):
     from repro.configs.base import ModelConfig
 

@@ -281,6 +281,56 @@ def test_prefix_cache_lru_and_longest_match():
     assert len(cp) == 2
 
 
+def test_prefix_cache_bytes_aware_eviction():
+    """Eviction is by actual pytree nbytes under ``max_bytes``: LRU order
+    respects refreshes, pinned entries survive byte pressure, and an
+    oversized entry is admitted alone rather than looping forever."""
+    a = {"h": np.zeros(10, np.float32)}  # 40 bytes
+    c = PrefixCache(max_bytes=100)
+    c.insert([1], a)
+    c.insert([2, 2], a)
+    assert c.nbytes == 80 and len(c) == 2
+    assert c.lookup([1]) is not None          # LRU-refresh [1]
+    c.insert([3, 3, 3], a)                    # 120 > 100: evict LRU = [2,2]
+    assert len(c) == 2 and c.nbytes == 80
+    assert c.lookup([1]) is not None and c.lookup([2, 2]) is None
+    # an entry bigger than max_bytes displaces everything but is kept
+    c.insert([4, 4, 4, 4], {"h": np.zeros(100, np.float32)})  # 400 bytes
+    assert len(c) == 1 and c.lookup([4, 4, 4, 4]) is not None
+    assert c.stats()["bytes"] == 400
+    # pinned (warmed) entries survive byte pressure from request snapshots
+    cp = PrefixCache(max_bytes=100)
+    cp.insert([9], a, pinned=True)
+    for i in range(5):
+        cp.insert([i, i], a)
+    assert cp.lookup([9]).pinned and len(cp) == 2
+    with pytest.raises(ValueError):
+        PrefixCache(max_bytes=0)
+
+
+def test_prefix_cache_sizes_attention_kv_above_stlt_state():
+    """The byte accounting reflects reality: an attention KV entry (O(max_len)
+    per layer) dwarfs the O(S*d) STLT entry for the same model shape, so a
+    byte cap holds MANY more STLT prefixes than KV prefixes."""
+    max_len = 128
+    cfg_a = small_cfg(mixer="attention")
+    cfg_s = small_cfg(mixer="stlt", stlt_nodes=4, stlt_chunk=8)
+    st_a = T.init_decode_state(cfg_a, 1, max_len)
+    st_s = T.init_decode_state(cfg_s, 1, max_len)
+    c = PrefixCache(max_bytes=1 << 30)
+    c.insert([1], st_a)
+    kv_bytes = c.nbytes
+    c.insert([2, 2], st_s)
+    stlt_bytes = c.nbytes - kv_bytes
+    assert stlt_bytes * 4 < kv_bytes, (stlt_bytes, kv_bytes)
+    # a cap sized for a few KV entries holds many STLT entries
+    c2 = PrefixCache(max_bytes=2 * kv_bytes + 8 * stlt_bytes)
+    c2.insert([1], st_a, pinned=True)
+    for i in range(8):
+        c2.insert([i, i], st_s)
+    assert len(c2) == 9  # nothing evicted: the STLT states are cheap
+
+
 def test_per_slot_sampler_and_masking():
     """sample_slot_tokens honours per-slot temperature; advance_slots applies
     budget and EOS cuts batched."""
