@@ -1,8 +1,8 @@
 """Serving §Perf — slot-level continuous batching vs the wave engine,
-chunked prefill admission, the prefix-state cache, and the two-shape
-BATCHED admission path.
+chunked prefill admission, the prefix-state cache, the two-shape BATCHED
+admission path, and multi-host sharded serving.
 
-Four traces are replayed through the same ``ServeEngine``:
+Five traces are replayed; the first four through the same ``ServeEngine``:
 
 1. mixed short/long BUDGETS (Poisson arrivals): continuous vs wave — the
    wave engine drains whole admission waves, so one long generation stalls
@@ -25,6 +25,17 @@ Four traces are replayed through the same ``ServeEngine``:
    inter-token p99 gap — the compile stalls the legacy path takes
    mid-trace land exactly on those gaps.
 
+5. MULTI-HOST sharded serving (``ShardedServeEngine``): the same mixed
+   trace — short shared-system-prompt decodes plus concurrent long-prompt
+   admissions — replayed at 1/2/4 hosts x 2 slots (as the forced device
+   count allows; the CI multi-host job forces 8). Reports per-host
+   admission throughput, ADMISSION TOKENS PER TICK (the deterministic
+   scaling metric: with more hosts, more rows co-advance per coalesced
+   dispatch, so the same admission burst drains in fewer ticks —
+   wall-clock on forced host devices just oversubscribes one CPU), decode
+   p99 wall gaps, and the replicated prefix-cache residency (every shard
+   must hold the warmed entries: ``replicated_pinned > 0``).
+
 Time is measured in ticks (one mixed scheduler step == one tick), so the
 comparisons are deterministic and hardware-independent; wall tokens/sec is
 reported alongside. ``main`` writes the full row dict to
@@ -41,9 +52,20 @@ import numpy as np
 
 from benchmarks.common import bench_cfg, emit
 from repro.models import transformer as T
-from repro.serving import PrefixCache, ServeEngine
+from repro.serving import (
+    PrefixCache,
+    ReplicatedPrefixCache,
+    ServeEngine,
+    ShardedServeEngine,
+)
 from repro.serving.engine import Request
 from repro.utils import trace_probe
+
+
+def _admission_chunk(fast: bool) -> int:
+    """The prefill chunk shared by traces 4 and 5 (and the multihost-only
+    CI entry point): both artifacts must report the same configuration."""
+    return 64 if fast else 256
 
 
 def _poisson_arrivals(n: int, rate: float, rng) -> np.ndarray:
@@ -219,6 +241,102 @@ def run_prefix_cache(params, cfg, max_len, sys_len, chunk, n_requests,
     return out
 
 
+def multihost_trace(sys_prompt, n_short: int, n_long: int, long_base: int,
+                    chunk: int, seed: int = 9, vocab: int = 256):
+    """Short decode requests sharing a warmed system prompt (every host must
+    hit its cache replica) plus near-simultaneous long-prompt admissions
+    with distinct tail residues (the admission burst whose drain time the
+    host count divides). Returns (reqs, arrivals, short_ids)."""
+    rng = np.random.default_rng(seed)
+    reqs, arrivals, short_ids = [], [], []
+    for i in range(n_short):
+        reqs.append(Request(np.concatenate([
+            sys_prompt,
+            rng.integers(3, vocab, int(rng.integers(5, 12))).astype(np.int32)]),
+            int(rng.integers(16, 33)), id=i))
+        arrivals.append(0)
+        short_ids.append(i)
+    for j in range(n_long):
+        length = long_base + j * chunk // 4 + 1 + j  # distinct residues
+        reqs.append(Request(rng.integers(3, vocab, length).astype(np.int32),
+                            4, id=n_short + j))
+        arrivals.append(j)
+    return reqs, arrivals, short_ids
+
+
+def run_multihost(params, cfg, max_len, chunk, fast: bool):
+    """Replay the multi-host trace at every host count the device count
+    allows, holding slots_per_host fixed — so host count is the ONLY thing
+    that grows the fleet."""
+    host_counts = [h for h in (1, 2, 4) if h <= jax.device_count()]
+    K = 2
+    rng = np.random.default_rng(9)
+    sys_len = 2 * chunk + chunk // 2  # non-boundary length: masked warm tail
+    sys_prompt = rng.integers(3, cfg.vocab, sys_len).astype(np.int32)
+    reqs, arrivals, short_ids = multihost_trace(
+        sys_prompt, n_short=4 if fast else 8, n_long=8,
+        long_base=512 if fast else 2048, chunk=chunk, vocab=cfg.vocab)
+    out = {"device_count": jax.device_count(), "slots_per_host": K,
+           "hosts": {}}
+    for H in host_counts:
+        eng = ShardedServeEngine(
+            params, cfg, n_hosts=H, slots_per_host=K, max_len=max_len,
+            prefill_chunk=chunk,
+            prefix_cache=ReplicatedPrefixCache(H, capacity=64))
+        eng.warm_prefix(sys_prompt)
+        eng.serve(reqs, arrivals=arrivals)  # untimed: pay compiles
+        # fresh warmed cache: the untimed pass cached the full prompts,
+        # which would overstate the steady-state hit rate
+        cache = ReplicatedPrefixCache(H, capacity=64)
+        eng.prefix_cache = cache
+        eng.warm_prefix(sys_prompt)
+        t0 = time.perf_counter()
+        results, stats = eng.serve(reqs, arrivals=arrivals, return_stats=True)
+        wall = time.perf_counter() - t0
+        n_tok = sum(len(v) for v in results.values())
+        prefilled = sum(s["prefilled_tokens"] for s in stats.values())
+        # deterministic scaling metric: the admission burst's prefilled
+        # tokens over the ticks it took to drain (first admit -> last live)
+        admit_ticks = (max(s["live"] for s in stats.values())
+                       - min(s["admit"] for s in stats.values()) + 1)
+        per_host_prefill = {}
+        for s in stats.values():
+            per_host_prefill[s["host"]] = (
+                per_host_prefill.get(s["host"], 0) + s["prefilled_tokens"])
+        cstats = cache.stats()
+        row = {
+            "wall_s": wall, "tok_s": n_tok / max(wall, 1e-9),
+            "prefill_tokens": prefilled, "admission_ticks": int(admit_ticks),
+            "prefill_tok_per_tick": prefilled / max(admit_ticks, 1),
+            "prefill_tok_s": prefilled / max(wall, 1e-9),
+            "per_host_prefill_tokens": {str(k): int(v) for k, v
+                                        in sorted(per_host_prefill.items())},
+            "cached_tokens": sum(s["cached_tokens"] for s in stats.values()),
+            "replicated_pinned": cstats["replicated_pinned"],
+            "replication_ok": cstats["replication_ok"],
+            "per_shard_hits": [s["hits"] for s in cstats["shards"]],
+            **_decode_gap_stats(stats, short_ids),
+        }
+        out["hosts"][str(H)] = row
+        emit(f"serving/multihost_h{H}", wall * 1e6,
+             f"prefill_tok_per_tick={row['prefill_tok_per_tick']:.0f};"
+             f"admission_ticks={row['admission_ticks']};"
+             f"gap_p99_ms={row['gap_p99_ms']:.1f};"
+             f"replicated_pinned={row['replicated_pinned']}")
+        if not cstats["replication_ok"] or cstats["replicated_pinned"] < 1:
+            print("# WARNING: prefix-cache replication did not happen")
+    lo, hi = str(host_counts[0]), str(host_counts[-1])
+    scale = (out["hosts"][hi]["prefill_tok_per_tick"]
+             / max(out["hosts"][lo]["prefill_tok_per_tick"], 1e-9))
+    out["admission_scaling"] = {"from_hosts": int(lo), "to_hosts": int(hi),
+                                "tok_per_tick_ratio": scale}
+    emit("serving/multihost_admission_scaling", 0.0,
+         f"ratio={scale:.2f};hosts={lo}->{hi}")
+    if len(host_counts) > 1 and scale < 1.2:
+        print("# WARNING: admission throughput did not scale with host count")
+    return out
+
+
 def main(fast: bool = False):
     cfg = bench_cfg(mixer="stlt")
     params = T.init_lm(jax.random.key(0), cfg)
@@ -270,7 +388,7 @@ def main(fast: bool = False):
          f"sys_len={sys_len}")
 
     # --- two-shape batched admission vs the PR-2 one-request-per-tick path
-    bchunk = 64 if fast else 256
+    bchunk = _admission_chunk(fast)
     blong = 512 if fast else 4096
     breqs, barrivals, bshort = concurrent_long_prompt_trace(
         n_long=8, n_short=4 if fast else 8, long_base=blong, chunk=bchunk,
@@ -296,12 +414,50 @@ def main(fast: bool = False):
             > rows["admission_one_per_tick"]["gap_p99_ms"]):
         print("# WARNING: batched admission worsened decode p99 gap")
 
+    # --- multi-host sharded serving (scales with forced host devices) ------
+    rows["multihost"] = run_multihost(params, cfg, max_len=256, chunk=bchunk,
+                                      fast=fast)
+
     out = {"profile": "fast" if fast else "full", "rows": rows}
-    path = pathlib.Path(__file__).resolve().parent.parent / "BENCH_serving.json"
+    path = _bench_path()
     path.write_text(json.dumps(out, indent=2) + "\n")
     print(f"# wrote {path}")
     return rows
 
 
+def _bench_path() -> pathlib.Path:
+    return pathlib.Path(__file__).resolve().parent.parent / "BENCH_serving.json"
+
+
+def main_multihost(fast: bool = False):
+    """Trace 5 only — for the forced-device CI job, which would otherwise
+    duplicate the four single-host traces the tier-1 job already ran. The
+    multihost row is merged into an existing BENCH_serving.json when one is
+    present (so the uploaded artifact stays complete)."""
+    cfg = bench_cfg(mixer="stlt")
+    params = T.init_lm(jax.random.key(0), cfg)
+    mh = run_multihost(params, cfg, max_len=256, chunk=_admission_chunk(fast),
+                       fast=fast)
+    path = _bench_path()
+    out = {"profile": "fast" if fast else "full", "rows": {}}
+    if path.exists():
+        out = json.loads(path.read_text())
+    out.setdefault("rows", {})["multihost"] = mh
+    path.write_text(json.dumps(out, indent=2) + "\n")
+    print(f"# wrote {path}")
+    return mh
+
+
 if __name__ == "__main__":
-    main(fast=True)
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--multihost-only", action="store_true",
+                    help="run only the multi-host trace and merge it into "
+                         "an existing BENCH_serving.json")
+    args = ap.parse_args()
+    if args.multihost_only:
+        main_multihost(fast=not args.full)
+    else:
+        main(fast=not args.full)

@@ -182,6 +182,25 @@ def opt_state_specs(opt_state_shapes, params_shapes, pspecs, cfg: ModelConfig, m
     return jax.tree_util.tree_unflatten(treedef, specs)
 
 
+def decode_state_specs(state, plan, axis: str = "data"):
+    """PartitionSpec tree laying a decode-state POOL's slot axis over ``axis``.
+
+    ``state`` is a (possibly abstract — ``jax.eval_shape``) pytree from
+    ``transformer.init_decode_state``; ``plan`` is ``execution_plan(cfg)``,
+    which determines where the slot axis lives per layer group: axis 0
+    normally, axis 1 for scan-over-layers stacks (leaves ``[count, B, ...]``).
+    Everything but the slot axis is replicated — decode/prefill are
+    row-independent, so sharding the slot axis needs no cross-row
+    communication (the multi-host serving layout, DESIGN.md §Serving)."""
+    groups = []
+    for (btype, count), st in zip(plan, state["layers"]):
+        ax = 1 if count > 1 else 0
+        groups.append(jax.tree_util.tree_map(
+            lambda leaf, ax=ax: P(*([None] * ax + [axis]
+                                    + [None] * (leaf.ndim - ax - 1))), st))
+    return {"layers": groups, "pos": P(axis)}
+
+
 def to_named(tree_of_specs, mesh: Mesh):
     return jax.tree_util.tree_map(
         lambda sp: NamedSharding(mesh, sp),

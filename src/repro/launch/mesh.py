@@ -23,3 +23,13 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_host_mesh(data: int = 2, model: int = 2):
     """Small mesh over host devices (tests; requires forced device count)."""
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_serve_mesh(data: int):
+    """Serving mesh: 1-D ``("data",)`` over ``data`` devices — the
+    ShardedServeEngine lays the slot pool's batch axis over it (per-host
+    row ranges; params replicated). Delegates to the serving subsystem so
+    the validation (device count, axis name) lives in one place."""
+    from repro.serving.multihost import make_serve_mesh as _make
+
+    return _make(data)

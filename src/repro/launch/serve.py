@@ -13,7 +13,20 @@ reverts to the one-request-per-tick path with natural-length tails).
 ``--system-prompt-len K`` prepends a shared K-token system prompt to every
 request and serves it through the prefix cache, reporting the prefill
 FLOPs skipped; ``--prefix-cache-max-mb`` switches the cache to bytes-aware
-eviction (attention KV entries dwarf O(S*d) STLT entries).
+eviction (attention KV entries dwarf O(S*d) STLT entries);
+``--prefix-cache-ttl`` expires unpinned snapshots after that many idle
+ticks.
+
+``--mesh-data H`` serves through the multi-host ShardedServeEngine: the
+slot pool's batch axis is laid over a 1-D ("data",) mesh of H shards
+(``--slots-per-host`` rows each, per-host admission queues, replicated
+prefix cache). Needs H devices — force host devices with
+``XLA_FLAGS=--xla_force_host_platform_device_count=H`` on one box:
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m \
+      --reduced --mesh-data 4 --slots-per-host 2 --prefill-chunk 128 \
+      --requests 16 --system-prompt-len 64
 """
 from __future__ import annotations
 
@@ -26,7 +39,12 @@ import numpy as np
 from repro import configs as configs_lib
 from repro.launch.train import paper_small
 from repro.models import transformer as T
-from repro.serving import PrefixCache, ServeEngine
+from repro.serving import (
+    PrefixCache,
+    ReplicatedPrefixCache,
+    ServeEngine,
+    ShardedServeEngine,
+)
 from repro.serving.engine import Request
 from repro.utils import cast_params_for_compute, tree_size
 
@@ -55,6 +73,14 @@ def main(argv=None):
                          "set; combine with --prefix-cache-max-mb to co-cap)")
     ap.add_argument("--prefix-cache-max-mb", type=float, default=0,
                     help="bytes-aware prefix-cache cap in MiB (0 = entry-count LRU)")
+    ap.add_argument("--prefix-cache-ttl", type=int, default=0,
+                    help="expire unpinned cache snapshots idle for this many "
+                         "ticks (0 = no TTL)")
+    ap.add_argument("--mesh-data", type=int, default=0,
+                    help="shard the slot pool over this many hosts "
+                         "(ShardedServeEngine; 0 = single-host engine)")
+    ap.add_argument("--slots-per-host", type=int, default=0,
+                    help="decode slots per host shard (default: --slots)")
     args = ap.parse_args(argv)
 
     cfg = paper_small() if args.arch is None else configs_lib.get_config(
@@ -74,16 +100,45 @@ def main(argv=None):
               "continuous mode only; ignored for --mode wave")
     use_cache = args.system_prompt_len and args.mode == "continuous"
     cache = None
-    if use_cache:
+    cache_kw = dict(
         # with only a byte cap given, eviction is purely bytes-aware
         # (capacity=None); PrefixCache defaults to 32 entries when neither
         # cap is set, and an explicit capacity co-caps alongside max_bytes
-        cache = PrefixCache(
-            capacity=args.prefix_cache_capacity,
-            max_bytes=int(args.prefix_cache_max_mb * 2**20) or None)
-    eng = ServeEngine(params, cfg, max_len=args.max_len,
-                      temperature=args.temperature,
-                      prefill_chunk=args.prefill_chunk, prefix_cache=cache)
+        capacity=args.prefix_cache_capacity,
+        max_bytes=int(args.prefix_cache_max_mb * 2**20) or None,
+        ttl_ticks=args.prefix_cache_ttl or None,
+        # content dedup digests every inserted state (a host readback of
+        # the leaves) — the right trade for O(S*d) STLT entries, not for
+        # KV-buffer entries (unbounded or windowed attention)
+        dedup=not any(bt in ("attn", "local_attn")
+                      for bt, _ in T.execution_plan(cfg)))
+    if args.mesh_data:
+        if args.mode == "wave":
+            raise SystemExit("--mesh-data shards the continuous engine only")
+        if args.sequential_admission:
+            raise SystemExit(
+                "--sequential-admission is the single-host legacy path; "
+                "sharded admission is always the coalesced two-shape dispatch")
+        if not args.prefill_chunk:
+            raise SystemExit(
+                "--mesh-data serves through the chunked two-shape admission "
+                "path only: pass --prefill-chunk N (monolithic admission "
+                "does not shard)")
+        if use_cache:
+            cache = ReplicatedPrefixCache(args.mesh_data, **cache_kw)
+        eng = ShardedServeEngine(
+            params, cfg, n_hosts=args.mesh_data,
+            slots_per_host=args.slots_per_host or args.slots,
+            max_len=args.max_len, temperature=args.temperature,
+            prefill_chunk=args.prefill_chunk, prefix_cache=cache)
+        print(f"[serve] sharded: {eng.n_hosts} hosts x "
+              f"{eng.slots_per_host} slots over mesh {dict(eng.mesh.shape)}")
+    else:
+        if use_cache:
+            cache = PrefixCache(**cache_kw)
+        eng = ServeEngine(params, cfg, max_len=args.max_len,
+                          temperature=args.temperature,
+                          prefill_chunk=args.prefill_chunk, prefix_cache=cache)
     rng = np.random.default_rng(0)
     sys_len = args.system_prompt_len if use_cache else 0
     sys_prompt = rng.integers(3, cfg.vocab, sys_len).astype(np.int32)
@@ -98,10 +153,16 @@ def main(argv=None):
         warmed = eng.warm_prefix(sys_prompt, chunk=args.prefill_chunk or None)
         print(f"[serve] prefix cache warmed: {warmed} tokens")
     t0 = time.time()
-    results, stats = eng.serve(reqs, slots=args.slots,
-                               prompt_len=None if use_cache else args.prompt_len,
-                               mode=args.mode, return_stats=True,
-                               coalesce=not args.sequential_admission)
+    if args.mesh_data:
+        results, stats = eng.serve(
+            reqs, prompt_len=None if use_cache else args.prompt_len,
+            return_stats=True)
+    else:
+        results, stats = eng.serve(
+            reqs, slots=args.slots,
+            prompt_len=None if use_cache else args.prompt_len,
+            mode=args.mode, return_stats=True,
+            coalesce=not args.sequential_admission)
     dt = time.time() - t0
     n_tok = sum(len(v) for v in results.values())
     for rid in sorted(results):
@@ -112,6 +173,11 @@ def main(argv=None):
     print(f"[serve] mode={args.mode}: {len(reqs)} requests, {n_tok} tokens in "
           f"{dt:.2f}s ({n_tok/max(dt,1e-9):.1f} tok/s), "
           f"latency p50={p50} p99={p99} ticks")
+    if args.mesh_data:
+        per_host = {h: 0 for h in range(eng.n_hosts)}
+        for s in stats.values():
+            per_host[s["host"]] += 1
+        print(f"[serve] per-host requests: {per_host}")
     if cache is not None:
         prefilled = sum(s["prefilled_tokens"] for s in stats.values())
         total = sum(s["prompt_tokens"] for s in stats.values())

@@ -1,5 +1,7 @@
 from repro.serving.engine import ServeEngine
-from repro.serving.prefix_cache import PrefixCache
+from repro.serving.multihost import ShardedServeEngine, make_serve_mesh
+from repro.serving.prefix_cache import PrefixCache, ReplicatedPrefixCache
 from repro.serving.sampler import sample_token
 
-__all__ = ["PrefixCache", "ServeEngine", "sample_token"]
+__all__ = ["PrefixCache", "ReplicatedPrefixCache", "ServeEngine",
+           "ShardedServeEngine", "make_serve_mesh", "sample_token"]

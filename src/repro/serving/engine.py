@@ -397,9 +397,16 @@ class ServeEngine:
                 pool = self._reset(pool, s)
 
         while queue or pending or sched.live.any():
+            tick_was = tick
             if (not sched.live.any() and not pending
                     and queue and queue[0][0] > tick):
                 tick = queue[0][0]  # idle: fast-forward to the next arrival
+                # sweep the TTL clock across the jump BEFORE this tick's
+                # admission lookups: an entry idle past its TTL expires
+                # honestly, instead of being hit and then evicted by a
+                # stale-clock sweep at the end of the loop body
+                self._cache_tick(tick - tick_was)
+                tick_was = tick
 
             # --- admission: assign arrived requests to free slots -----------
             for s in sched.free_slots():
@@ -542,8 +549,15 @@ class ServeEngine:
             elif pending:
                 tick += 1  # prefill-only tick (nothing decoding yet)
 
+            self._cache_tick(tick - tick_was)
+
         out = {rid: np.array(toks, np.int32) for rid, toks in results.items()}
         return (out, sched.stats) if return_stats else out
+
+    def _cache_tick(self, n: int):
+        """Advance the prefix cache's TTL clock by ``n`` scheduler ticks."""
+        if self.prefix_cache is not None and n > 0:
+            self.prefix_cache.tick(n)
 
     # ------------------------------------------------------------- wave (legacy)
     def _serve_wave(self, requests, slots, prompt_len, arrivals,

@@ -1,0 +1,365 @@
+"""Multi-host sharded serving: the slot pool laid over a ``data`` mesh axis.
+
+PR 3 made the engine shardable by construction: coalesced admission is ONE
+jitted ``[slots, chunk]`` masked ``prefill_chunk`` dispatch with per-row
+``valid_len`` (rows that are not mid-prefill ride along as bit-exact
+``valid == 0`` no-ops), and decode is ONE batched ``decode_step`` — both
+row-independent. So splitting the slot axis across a device mesh needs no
+new program shapes and no cross-row communication: :class:`ShardedServeEngine`
+``shard_map``s the same two dispatches over a 1-D ``("data",)`` mesh, giving
+each of the ``n_hosts`` shards a contiguous ``slots_per_host`` row range of
+the global pool.
+
+Layout (H hosts x K slots each; global slot g = h*K + local):
+
+    decode pool   [ host0: rows 0..K-1 | host1: rows K..2K-1 | ... ]  P("data")
+    prefill pool  [ same layout, second slot-shaped pool              P("data")
+    params        replicated                                          P()
+
+Host-local pieces stay host-local, mirroring a real multi-process
+deployment even when the "hosts" are forced host-platform devices in one
+process:
+
+* **Admission queues** — arrivals are dealt to the least-loaded host's
+  queue (deterministic: queued + occupied, lowest host id wins ties); each
+  host admits from its own queue into its own row range only.
+* **Scheduler bookkeeping** — one PR-1 :class:`Scheduler` per host tracks
+  its K rows; per-request stats gain a ``host`` field.
+* **Prefix cache** — a :class:`ReplicatedPrefixCache` keeps one cache per
+  shard: pinned warmed entries (``warm_prefix``) replicate to every shard
+  so any host serves a system-prompt hit locally; per-request boundary
+  snapshots route to the owning host's shard only.
+
+Slot splicing crosses the shard boundary through three more ``shard_map``'d
+ops: ``insert``/``reset`` compute the owning shard from the global slot id
+and select the update locally (non-owners pass their rows through
+untouched — no communication), and ``extract`` masks non-owner rows to zero
+and ``psum``s over ``data`` to hand every host the owner's batch-1 state.
+
+The TWO-SHAPE invariant survives sharding (DESIGN.md §Serving): every
+prefill tick is the full ``[H*K, chunk]`` masked dispatch — ``[K, chunk]``
+per shard, ONE program — and ``warm_prefix`` keeps its host-local
+``[1, chunk]`` shape, so a sharded serve trace over arbitrarily many
+``prompt_len % chunk`` residues still compiles exactly two prefill
+programs (``tests/test_multihost_serving.py`` locks this, and token-exact
+parity vs the single-host engine, under forced host devices).
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import decode_state_specs
+from repro.models import transformer as T
+from repro.serving.engine import Scheduler, ServeEngine
+from repro.serving.prefix_cache import PrefixCache, ReplicatedPrefixCache
+from repro.serving.sampler import advance_slots, sample_token
+from repro.utils import shard_map
+
+
+class _Host:
+    """One host's local serving state: its admission queue, its Scheduler
+    over the K local rows, and its in-flight chunked prefills."""
+
+    def __init__(self, n_slots: int):
+        self.sched = Scheduler(n_slots)
+        self.queue: list = []            # (arrival, Request), FIFO
+        self.pending: dict[int, dict] = {}  # local slot -> in-flight prefill
+
+
+def make_serve_mesh(n_hosts: int):
+    """The serving mesh: 1-D ``("data",)`` over ``n_hosts`` devices (the
+    slot pool's batch axis lives on ``data``; params are replicated)."""
+    if n_hosts < 1:
+        raise ValueError(f"n_hosts must be >= 1 (got {n_hosts})")
+    if n_hosts > jax.device_count():
+        raise ValueError(
+            f"n_hosts={n_hosts} exceeds {jax.device_count()} available "
+            "devices (force host devices via XLA_FLAGS="
+            "--xla_force_host_platform_device_count=N)")
+    return jax.make_mesh((n_hosts,), ("data",))
+
+
+class ShardedServeEngine(ServeEngine):
+    """Slot-level continuous batching with the slot pool sharded over a
+    ``("data",)`` mesh: per-host admission queues and Schedulers feed
+    per-host row ranges of the single batched prefill/decode dispatches.
+
+    Construction fixes the fleet shape (``n_hosts x slots_per_host`` slots);
+    ``serve`` therefore takes no ``slots``/``mode``/``coalesce`` arguments —
+    admission is always the coalesced two-shape path, which is what makes
+    the slot axis shardable in the first place. Token outputs are exact vs
+    the single-host :class:`ServeEngine` on the same trace (greedy; sampled
+    requests share the same per-request ``fold_in(id)`` streams but key
+    evolution depends on scheduling)."""
+
+    def __init__(self, params, cfg: ModelConfig, *, mesh=None,
+                 n_hosts: Optional[int] = None, slots_per_host: int = 4,
+                 max_len: int = 4096, temperature: float = 0.0,
+                 eos_id: int = -1, top_k: int = 0, prefill_chunk: int = 256,
+                 prefix_cache: Optional[ReplicatedPrefixCache] = None):
+        if prefill_chunk < 1:
+            raise ValueError(
+                "ShardedServeEngine admits through the chunked two-shape "
+                f"path only: prefill_chunk must be >= 1 (got {prefill_chunk})")
+        if slots_per_host < 1:
+            raise ValueError(f"slots_per_host must be >= 1 (got {slots_per_host})")
+        if isinstance(prefix_cache, PrefixCache):
+            raise TypeError(
+                "ShardedServeEngine routes cache traffic per shard: pass a "
+                "ReplicatedPrefixCache (or None), not a bare PrefixCache")
+        super().__init__(params, cfg, max_len=max_len, temperature=temperature,
+                         eos_id=eos_id, top_k=top_k, prefill_chunk=prefill_chunk,
+                         prefix_cache=prefix_cache)
+        self.mesh = mesh if mesh is not None else make_serve_mesh(
+            n_hosts if n_hosts is not None else jax.device_count())
+        if "data" not in self.mesh.axis_names:
+            raise ValueError(
+                f"serving mesh needs a 'data' axis (got {self.mesh.axis_names})")
+        self.n_hosts = int(self.mesh.shape["data"])
+        self.slots_per_host = slots_per_host
+        self.n_slots = self.n_hosts * slots_per_host
+        if prefix_cache is not None and prefix_cache.n_shards != self.n_hosts:
+            raise ValueError(
+                f"prefix cache has {prefix_cache.n_shards} shards for "
+                f"{self.n_hosts} hosts")
+
+        plan = T.execution_plan(cfg)
+        state_abs = jax.eval_shape(
+            lambda: T.init_decode_state(cfg, self.n_slots, max_len))
+        spec = decode_state_specs(state_abs, plan)
+        K = slots_per_host
+        mesh_, rep = self.mesh, P()
+
+        # the same two row-independent dispatches as the single-host engine,
+        # shard_map'd so each host runs its own K-row range; params replicated
+        def _step_body(params, tok, state):
+            return T.decode_step(params, cfg=cfg, token_t=tok, state=state)
+
+        def _prefill_body(params, toks, state, valid):
+            return T.prefill_chunk(params, cfg=cfg, inputs=toks, state=state,
+                                   valid_len=valid)
+
+        # slot splicing by global id: the owner shard selects the update in,
+        # everyone else passes their rows through — no communication
+        def _owner(slot):
+            local = slot - jax.lax.axis_index("data") * K
+            return (local >= 0) & (local < K), jnp.clip(local, 0, K - 1)
+
+        def _insert_body(pool, state1, slot):
+            owns, idx = _owner(slot)
+            upd = T.insert_slot(pool, state1, idx, cfg)
+            return jax.tree_util.tree_map(
+                lambda n, o: jnp.where(owns, n, o), upd, pool)
+
+        def _extract_body(pool, slot):
+            owns, idx = _owner(slot)
+            row = T.extract_slot(pool, idx, cfg)
+            # non-owners contribute zeros; the psum replicates the owner's row
+            return jax.tree_util.tree_map(
+                lambda x: jax.lax.psum(
+                    jnp.where(owns, x, jnp.zeros_like(x)), "data"), row)
+
+        self._step_sh = jax.jit(shard_map(
+            _step_body, mesh_, in_specs=(rep, P("data"), spec),
+            out_specs=(P("data"), spec)))
+        self._prefill_sh = jax.jit(shard_map(
+            _prefill_body, mesh_,
+            in_specs=(rep, P("data"), spec, P("data")),
+            out_specs=(P("data"), spec)))
+        self._insert_sh = jax.jit(shard_map(
+            _insert_body, mesh_, in_specs=(spec, rep, rep), out_specs=spec))
+        self._extract_sh = jax.jit(shard_map(
+            _extract_body, mesh_, in_specs=(spec, rep), out_specs=rep))
+        # pristine batch-1 template: seeds fresh prefills and resets rows
+        self._fresh1 = T.init_decode_state(cfg, 1, max_len)
+
+    # ----------------------------------------------------- per-shard cache
+    def _lookup_shard(self, prompt: np.ndarray, shard: int):
+        if self.prefix_cache is None:
+            return 0, None, None
+        entry = self.prefix_cache.lookup(prompt, shard=shard)
+        if entry is None:
+            return 0, None, None
+        return entry.n_tokens, entry.state, entry.logits
+
+    def _cache_insert_shard(self, prompt, n: int, state, logits, shard: int):
+        if self.prefix_cache is not None and n > 0:
+            self.prefix_cache.insert(prompt[:n], state, logits, shard=shard)
+
+    # -------------------------------------------------------------- serve
+    def serve(self, requests: list, arrivals=None, rng_seed: int = 0,
+              return_stats: bool = False, prompt_len: Optional[int] = None):
+        """Serve a request list across the sharded slot pool. Returns
+        ``{request_id: tokens}`` (plus per-request stats — each carrying the
+        ``host`` that served it — when ``return_stats``).
+
+        Scheduling: arrivals are dealt to the least-loaded host's queue;
+        each host admits from its own queue into its own rows; every tick
+        runs at most ONE ``[n_slots, chunk]`` masked prefill dispatch (all
+        hosts' pending admissions advance together) and ONE ``[n_slots]``
+        decode step. Under greedy decoding token outputs are exact vs the
+        single-host engine regardless of the routing."""
+        cfg = self.cfg
+        H, K, B = self.n_hosts, self.slots_per_host, self.n_slots
+        chunk_size = self.prefill_chunk
+        queue = self._queue(requests, arrivals, prompt_len)
+        hosts = [_Host(K) for _ in range(H)]
+        results: dict[int, list[int]] = {}
+
+        pool = T.init_decode_state(cfg, B, self.max_len)
+        prefill_pool = None
+        tok = np.zeros(B, np.int32)
+        temps = np.full(B, self.temperature, np.float32)
+        base_key = jax.random.key(rng_seed)
+        keys = jax.random.split(base_key, B)
+        tick = 0
+
+        def any_live():
+            return any(h.sched.live.any() for h in hosts)
+
+        def any_pending():
+            return any(h.pending for h in hosts)
+
+        def any_queued():
+            return any(h.queue for h in hosts)
+
+        def promote(h, local, ent, logits1, st1):
+            """Prefill complete on host h: sample the first token, go live."""
+            nonlocal pool, keys
+            g = h * K + local
+            sched = hosts[h].sched
+            req = ent["req"]
+            rkey = jax.random.fold_in(base_key, req.id)
+            temp = self.temperature if req.temperature is None else req.temperature
+            t0 = int(sample_token(logits1, rkey, temp, self.top_k)[0])
+            pool = self._insert_sh(pool, st1, g)
+            keys = keys.at[g].set(rkey)
+            tok[g] = t0
+            temps[g] = temp
+            sched.activate(local, tick)
+            results[req.id] = [t0]
+            sched.stats[req.id]["token_walls"].append(time.perf_counter())
+            sched.emitted[local] = 1
+            if sched.emitted[local] >= sched.budgets[local] or t0 == self.eos_id:
+                sched.release(local, tick)   # prefill-only request
+                pool = self._insert_sh(pool, self._fresh1, g)
+
+        while queue or any_queued() or any_pending() or any_live():
+            tick_was = tick
+            if (not any_live() and not any_pending() and not any_queued()
+                    and queue and queue[0][0] > tick):
+                tick = queue[0][0]  # idle: fast-forward to the next arrival
+                # sweep the TTL clock across the jump BEFORE admission
+                # lookups (see ServeEngine._serve_continuous)
+                self._cache_tick(tick - tick_was)
+                tick_was = tick
+
+            # --- route arrivals to the least-loaded host's queue ------------
+            while queue and queue[0][0] <= tick:
+                arrival, req = queue.pop(0)
+                load = [len(h_.queue) + int(h_.sched.live.sum())
+                        + int(h_.sched.pending.sum()) for h_ in hosts]
+                hosts[int(np.argmin(load))].queue.append((arrival, req))
+
+            # --- per-host admission into free local rows --------------------
+            for h, host in enumerate(hosts):
+                for local in host.sched.free_slots():
+                    if not host.queue:
+                        break
+                    arrival, req = host.queue.pop(0)
+                    g = h * K + local
+                    prompt = self._padded(req.prompt, prompt_len)
+                    offset, pstate, plogits = self._lookup_shard(prompt, h)
+                    host.sched.hold(local, req, arrival, tick,
+                                    prompt_tokens=len(prompt),
+                                    cached_tokens=offset)
+                    host.sched.stats[req.id]["host"] = h
+                    ent = {"req": req, "prompt": prompt, "done": offset,
+                           "resumed": offset > 0}
+                    if offset == len(prompt):
+                        # full-prompt hit on this host's replica
+                        promote(h, local, ent, plogits, pstate)
+                        continue
+                    if prefill_pool is None:
+                        prefill_pool = T.init_decode_state(cfg, B, self.max_len)
+                    prefill_pool = self._insert_sh(
+                        prefill_pool,
+                        pstate if pstate is not None else self._fresh1, g)
+                    host.pending[local] = ent
+
+            # --- ONE sharded masked prefill dispatch for every host's pending
+            # rows ([n_slots, chunk] global = [K, chunk] per shard; rows that
+            # are not mid-prefill ride along as valid_len=0 bit-exact no-ops)
+            if any_pending():
+                chunk_tok = np.zeros((B, chunk_size), np.int32)
+                valid = np.zeros((B,), np.int32)
+                for h, host in enumerate(hosts):
+                    for local, ent in host.pending.items():
+                        g = h * K + local
+                        n = min(chunk_size, len(ent["prompt"]) - ent["done"])
+                        chunk_tok[g, :n] = ent["prompt"][ent["done"]:ent["done"] + n]
+                        valid[g] = n
+                logits_all, prefill_pool = self._prefill_sh(
+                    self.params, jnp.asarray(chunk_tok), prefill_pool,
+                    jnp.asarray(valid))
+                for h, host in enumerate(hosts):
+                    for local in list(host.pending):
+                        ent = host.pending[local]
+                        g = h * K + local
+                        ent["done"] += int(valid[g])
+                        finished = ent["done"] == len(ent["prompt"])
+                        if ent["resumed"] or finished:
+                            # boundary snapshot -> the owning host's shard
+                            st1 = self._extract_sh(prefill_pool, g)
+                            self._cache_insert_shard(
+                                ent["prompt"], ent["done"], st1,
+                                logits_all[g:g + 1], h)
+                        if finished:
+                            del host.pending[local]
+                            promote(h, local, ent, logits_all[g:g + 1], st1)
+
+            # release the prefill pool once every host's admissions drained
+            if prefill_pool is not None and not any_pending():
+                prefill_pool = None
+
+            # --- ...plus one sharded decode step for the whole pool ---------
+            if any_live():
+                keys, subs = self._split(keys)
+                logits, pool = self._step_sh(self.params, jnp.asarray(tok), pool)
+                nxt = np.array(self._sample(logits, subs, jnp.asarray(temps)))
+                tick += 1
+                now = time.perf_counter()
+                for h, host in enumerate(hosts):
+                    sched = host.sched
+                    row = nxt[h * K:(h + 1) * K]
+                    new_live, new_emitted = advance_slots(
+                        row, sched.live, sched.emitted, sched.budgets,
+                        self.eos_id)
+                    for local in np.flatnonzero(sched.live):
+                        rid = sched.req[local].id
+                        results[rid].append(int(row[local]))
+                        sched.stats[rid]["token_walls"].append(now)
+                    sched.emitted = new_emitted
+                    for local in np.flatnonzero(sched.live & ~new_live):
+                        sched.release(local, tick)
+                        pool = self._insert_sh(pool, self._fresh1, h * K + local)
+                tok = nxt
+            elif any_pending():
+                tick += 1  # prefill-only tick (nothing decoding yet)
+
+            self._cache_tick(tick - tick_was)
+
+        out = {rid: np.array(toks, np.int32) for rid, toks in results.items()}
+        if not return_stats:
+            return out
+        stats: dict[int, dict] = {}
+        for host in hosts:
+            stats.update(host.sched.stats)
+        return out, stats

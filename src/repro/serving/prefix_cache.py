@@ -26,6 +26,26 @@ optional secondary entry-count cap). Pinned entries (warmed system prompts)
 are skipped by eviction while any unpinned victim exists. Token-exact reuse
 is guaranteed by keying on the raw token bytes (SHA-1, no collision
 handling beyond the hash) rather than on any normalized text.
+
+Two further policies on top of LRU:
+
+* **Content-hash dedup.** State pytrees are stored in a content-addressed
+  side table (one resident pytree per SHA-1 digest of the leaf bytes, with
+  refcounts), so IDENTICAL boundary snapshots registered under different
+  prefix keys cost their bytes once — the dup entry holds a reference to
+  the canonical pytree and charges only its logits. ``stats()`` reports
+  ``dedup_hits`` / ``bytes_saved`` / ``unique_states``.
+* **TTL eviction.** With ``ttl_ticks`` set, ``tick()`` (called once per
+  scheduler tick by the engines) expires unpinned entries that have not
+  been hit for more than ``ttl_ticks`` ticks — stale per-request boundary
+  snapshots age out even when byte pressure alone would keep them resident.
+  Pinned (warmed) entries never TTL out.
+
+:class:`ReplicatedPrefixCache` is the multi-host layer (DESIGN.md
+§Serving/multi-host): one :class:`PrefixCache` per shard, with PINNED
+inserts (warmed shared prompts) replicated to every shard — each host
+serves a system-prompt hit locally, no cross-host traffic — while unpinned
+per-request boundary snapshots route to the owning shard only.
 """
 from __future__ import annotations
 
@@ -51,13 +71,37 @@ def pytree_nbytes(tree) -> int:
                for leaf in jax.tree_util.tree_leaves(tree))
 
 
+def state_digest(tree) -> bytes:
+    """Content digest of a pytree: SHA-1 over every leaf's shape, dtype, and
+    raw bytes (leaf order is the pytree flatten order, so two structurally
+    identical trees with equal leaves collide — which is the point).
+
+    NB this reads every leaf back to host memory — cheap for O(S*d) STLT
+    states, a real cost for attention-KV buffers (construct the cache with
+    ``dedup=False`` there, or pass a precomputed digest to ``insert``)."""
+    import jax
+
+    h = hashlib.sha1()
+    for leaf in jax.tree_util.tree_leaves(tree):
+        try:
+            arr = np.asarray(leaf)
+            h.update(repr((arr.shape, str(arr.dtype))).encode())
+            h.update(np.ascontiguousarray(arr).tobytes())
+        except (TypeError, ValueError):  # non-array sentinel leaves
+            h.update(repr(leaf).encode())
+    return h.digest()
+
+
 @dataclasses.dataclass
 class PrefixEntry:
     n_tokens: int            # prefix length the state summarizes
     state: Any               # batch-1 decode-state pytree (post-prefix)
     logits: Any = None       # last-token logits (only for full-prompt entries)
-    pinned: bool = False     # exempt from LRU eviction (warmed system prompts)
-    nbytes: int = 0          # actual resident bytes (state + logits)
+    pinned: bool = False     # exempt from LRU/TTL eviction (warmed prompts)
+    nbytes: int = 0          # bytes charged at insert (0 state bytes if dup)
+    digest: Optional[bytes] = None  # content digest of ``state``
+    logits_nbytes: int = 0   # the logits' share of ``nbytes``
+    last_used: int = 0       # cache clock at insert / last hit (TTL)
 
 
 class PrefixCache:
@@ -68,7 +112,12 @@ class PrefixCache:
     cap: an attention-KV entry is sized by its real max_len buffer, an STLT
     entry by its S*d carry). ``capacity`` is an optional entry-count cap
     kept for callers that want bounded host-side bookkeeping regardless of
-    entry size; with neither given, capacity defaults to 32.
+    entry size; with neither given, capacity defaults to 32. ``ttl_ticks``
+    (optional) expires unpinned entries not hit for that many ``tick()``s.
+
+    States are content-deduped: entries whose state pytrees are
+    byte-identical share ONE resident pytree (refcounted), and resident
+    bytes count each unique state once.
 
     ``lookup`` returns the LONGEST cached prefix of a prompt, trying the
     registered entry lengths longest-first — the host-side cost is one hash
@@ -76,37 +125,94 @@ class PrefixCache:
     """
 
     def __init__(self, capacity: Optional[int] = None,
-                 max_bytes: Optional[int] = None):
+                 max_bytes: Optional[int] = None,
+                 ttl_ticks: Optional[int] = None, dedup: bool = True):
         if capacity is None and max_bytes is None:
             capacity = 32  # legacy default: bounded entry count
         if capacity is not None and capacity < 1:
             raise ValueError(f"capacity must be >= 1 (got {capacity})")
         if max_bytes is not None and max_bytes < 1:
             raise ValueError(f"max_bytes must be >= 1 (got {max_bytes})")
+        if ttl_ticks is not None and ttl_ticks < 1:
+            raise ValueError(f"ttl_ticks must be >= 1 (got {ttl_ticks})")
         self.capacity = capacity
         self.max_bytes = max_bytes
+        self.ttl_ticks = ttl_ticks
+        # dedup digests every inserted state (a host readback of the leaves):
+        # the right default for O(S*d) STLT states; pass dedup=False to keep
+        # inserts readback-free when entries are big attention-KV buffers
+        self.dedup = dedup
         self._entries: OrderedDict[bytes, PrefixEntry] = OrderedDict()
+        # content-addressed state store: digest -> [state, nbytes, refcount]
+        self._states: dict[bytes, list] = {}
         self._bytes = 0
+        self._clock = 0
         self.hits = 0
         self.misses = 0
+        self.dedup_hits = 0
+        self.bytes_saved = 0
+        self.ttl_evictions = 0
 
     def __len__(self) -> int:
         return len(self._entries)
 
     @property
     def nbytes(self) -> int:
-        """Total resident bytes across entries."""
+        """Total resident bytes: each unique state pytree counts once
+        (however many entries reference it), plus per-entry logits."""
         return self._bytes
 
+    @property
+    def clock(self) -> int:
+        return self._clock
+
+    # ------------------------------------------------------- state store
+    def _state_ref(self, state, digest: Optional[bytes]):
+        """(digest, canonical state, charged bytes): register ``state`` in
+        the content-addressed store, or take a reference to the resident
+        pytree when an identical one is already stored. With dedup off the
+        state is stored per-entry (digest None, full bytes charged)."""
+        if not self.dedup:
+            return None, state, pytree_nbytes(state)
+        if digest is None:
+            digest = state_digest(state)
+        rec = self._states.get(digest)
+        if rec is None:
+            nbytes = pytree_nbytes(state)
+            self._states[digest] = [state, nbytes, 1]
+            return digest, state, nbytes
+        rec[2] += 1
+        self.dedup_hits += 1
+        self.bytes_saved += rec[1]
+        return digest, rec[0], 0
+
+    def _state_unref(self, digest: Optional[bytes]) -> int:
+        """Drop one reference; returns the bytes freed (0 while refs remain)."""
+        if digest is None:
+            return 0
+        rec = self._states[digest]
+        rec[2] -= 1
+        if rec[2] == 0:
+            del self._states[digest]
+            return rec[1]
+        return 0
+
+    # ---------------------------------------------------------- core ops
     def _over_cap(self) -> bool:
         if self.capacity is not None and len(self._entries) > self.capacity:
             return True
         return self.max_bytes is not None and self._bytes > self.max_bytes
 
     def _drop(self, key: bytes) -> None:
-        self._bytes -= self._entries.pop(key).nbytes
+        entry = self._entries.pop(key)
+        if entry.digest is None:  # dedup off: the entry owns its state bytes
+            self._bytes -= entry.nbytes
+            return
+        self._bytes -= entry.logits_nbytes
+        self._bytes -= self._state_unref(entry.digest)
 
-    def insert(self, tokens, state, logits=None, pinned: bool = False) -> None:
+    def insert(self, tokens, state, logits=None, pinned: bool = False,
+               digest: Optional[bytes] = None) -> None:
         """Register the post-prefix state for ``tokens`` (a full prefix).
 
         ``pinned`` entries (explicitly warmed system prompts) are exempt
@@ -114,19 +220,26 @@ class PrefixCache:
         warm shared prefix. Pinned entries count against both caps but are
         only dropped when everything is pinned. A single entry larger than
         ``max_bytes`` is still admitted (evicting everything else cannot
-        make it fit); it simply becomes the sole resident until displaced."""
+        make it fit); it simply becomes the sole resident until displaced.
+
+        ``digest`` optionally passes a precomputed ``state_digest`` so a
+        caller inserting ONE snapshot into many caches (the replicated
+        pinned broadcast) pays the leaf readback once, not per cache."""
         tokens = np.asarray(tokens, np.int32)
         key = prefix_digest(tokens)
         if key in self._entries:
-            old = self._entries.pop(key)
-            self._bytes -= old.nbytes
+            old = self._entries[key]
             if logits is None:  # keep a richer (logits-bearing) entry
                 logits = old.logits
             pinned = pinned or old.pinned
-        nbytes = pytree_nbytes(state) + pytree_nbytes(logits)
-        self._entries[key] = PrefixEntry(int(tokens.size), state, logits,
-                                         pinned, nbytes)
-        self._bytes += nbytes
+            self._drop(key)
+        digest, state, state_bytes = self._state_ref(state, digest)
+        logits_bytes = pytree_nbytes(logits)
+        self._entries[key] = PrefixEntry(
+            int(tokens.size), state, logits, pinned,
+            nbytes=state_bytes + logits_bytes, digest=digest,
+            logits_nbytes=logits_bytes, last_used=self._clock)
+        self._bytes += state_bytes + logits_bytes
         while self._over_cap() and len(self._entries) > 1:
             victim = next((k for k, e in self._entries.items()
                            if not e.pinned and k != key), None)
@@ -135,8 +248,8 @@ class PrefixCache:
             self._drop(victim)
 
     def lookup(self, prompt) -> Optional[PrefixEntry]:
-        """Longest cached prefix of ``prompt`` (None on miss). LRU-refreshes
-        and counts a hit/miss."""
+        """Longest cached prefix of ``prompt`` (None on miss). LRU-refreshes,
+        restamps the TTL clock, and counts a hit/miss."""
         prompt = np.asarray(prompt, np.int32)
         lengths = sorted({e.n_tokens for e in self._entries.values()
                           if e.n_tokens <= prompt.size}, reverse=True)
@@ -145,11 +258,101 @@ class PrefixCache:
             entry = self._entries.get(key)
             if entry is not None:
                 self._entries.move_to_end(key)
+                entry.last_used = self._clock
                 self.hits += 1
                 return entry
         self.misses += 1
         return None
 
+    def tick(self, n: int = 1) -> int:
+        """Advance the TTL clock by ``n`` scheduler ticks and expire unpinned
+        entries idle for more than ``ttl_ticks``. Returns how many expired
+        (always 0 when TTL is disabled — the clock still advances)."""
+        self._clock += n
+        if self.ttl_ticks is None:
+            return 0
+        expired = [k for k, e in self._entries.items()
+                   if not e.pinned and self._clock - e.last_used > self.ttl_ticks]
+        for k in expired:
+            self._drop(k)
+        self.ttl_evictions += len(expired)
+        return len(expired)
+
     def stats(self) -> dict:
         return {"entries": len(self._entries), "bytes": self._bytes,
-                "hits": self.hits, "misses": self.misses}
+                "hits": self.hits, "misses": self.misses,
+                "pinned": sum(e.pinned for e in self._entries.values()),
+                "unique_states": len(self._states),
+                "dedup_hits": self.dedup_hits,
+                "bytes_saved": self.bytes_saved,
+                "ttl_evictions": self.ttl_evictions,
+                "clock": self._clock}
+
+
+class ReplicatedPrefixCache:
+    """Per-shard prefix caches with the multi-host replication contract
+    (DESIGN.md §Serving): PINNED inserts — explicitly warmed shared prompts
+    — go to EVERY shard, so any host admits a system-prompt hit from its own
+    replica without cross-host traffic; unpinned per-request boundary
+    snapshots go only to the owning shard (``shard=``), whose host is the
+    only one that can ever resume them.
+
+    Each shard's cache does its own bytes/LRU/TTL accounting: in a real
+    deployment every host holds its own replica of the warmed entries, so
+    replication costs real bytes per host and the per-shard numbers reflect
+    that honestly. ``lookup``/``insert`` default to shard 0 when no shard is
+    given, which makes this a drop-in for the single-cache API that
+    ``ServeEngine.warm_prefix`` drives (pinned warm inserts broadcast)."""
+
+    def __init__(self, n_shards: int, capacity: Optional[int] = None,
+                 max_bytes: Optional[int] = None,
+                 ttl_ticks: Optional[int] = None, dedup: bool = True):
+        if n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1 (got {n_shards})")
+        self.shards = [PrefixCache(capacity, max_bytes, ttl_ticks, dedup)
+                       for _ in range(n_shards)]
+        self.dedup = dedup
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.shards)
+
+    def __len__(self) -> int:
+        return sum(len(c) for c in self.shards)
+
+    @property
+    def nbytes(self) -> int:
+        return sum(c.nbytes for c in self.shards)
+
+    def insert(self, tokens, state, logits=None, pinned: bool = False,
+               shard: Optional[int] = None) -> None:
+        """Pinned inserts replicate to every shard; unpinned inserts go to
+        ``shard`` (default shard 0)."""
+        if pinned:
+            # digest once: the broadcast inserts ONE snapshot n_shards times
+            digest = state_digest(state) if self.dedup else None
+            for c in self.shards:
+                c.insert(tokens, state, logits, pinned=True, digest=digest)
+        else:
+            self.shards[shard or 0].insert(tokens, state, logits)
+
+    def lookup(self, prompt, shard: Optional[int] = None):
+        return self.shards[shard or 0].lookup(prompt)
+
+    def tick(self, n: int = 1) -> int:
+        return sum(c.tick(n) for c in self.shards)
+
+    def stats(self) -> dict:
+        """Per-shard residency plus the replication invariant: every shard
+        holds the same pinned (warmed) entry count — the multi-host
+        benchmark asserts ``replicated_pinned > 0`` to prove replication
+        actually happened."""
+        per = [c.stats() for c in self.shards]
+        pinned = [s["pinned"] for s in per]
+        return {"shards": per,
+                "entries": sum(s["entries"] for s in per),
+                "bytes": sum(s["bytes"] for s in per),
+                "hits": sum(s["hits"] for s in per),
+                "misses": sum(s["misses"] for s in per),
+                "replicated_pinned": min(pinned) if pinned else 0,
+                "replication_ok": len(set(pinned)) <= 1}

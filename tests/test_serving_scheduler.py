@@ -281,17 +281,21 @@ def test_prefix_cache_lru_and_longest_match():
     assert len(cp) == 2
 
 
+def _state(fill, n=10):
+    """Distinct-content 40-byte state (content dedup must not kick in)."""
+    return {"h": np.full(n, float(fill), np.float32)}
+
+
 def test_prefix_cache_bytes_aware_eviction():
     """Eviction is by actual pytree nbytes under ``max_bytes``: LRU order
     respects refreshes, pinned entries survive byte pressure, and an
     oversized entry is admitted alone rather than looping forever."""
-    a = {"h": np.zeros(10, np.float32)}  # 40 bytes
     c = PrefixCache(max_bytes=100)
-    c.insert([1], a)
-    c.insert([2, 2], a)
+    c.insert([1], _state(1))
+    c.insert([2, 2], _state(2))
     assert c.nbytes == 80 and len(c) == 2
     assert c.lookup([1]) is not None          # LRU-refresh [1]
-    c.insert([3, 3, 3], a)                    # 120 > 100: evict LRU = [2,2]
+    c.insert([3, 3, 3], _state(3))            # 120 > 100: evict LRU = [2,2]
     assert len(c) == 2 and c.nbytes == 80
     assert c.lookup([1]) is not None and c.lookup([2, 2]) is None
     # an entry bigger than max_bytes displaces everything but is kept
@@ -300,12 +304,77 @@ def test_prefix_cache_bytes_aware_eviction():
     assert c.stats()["bytes"] == 400
     # pinned (warmed) entries survive byte pressure from request snapshots
     cp = PrefixCache(max_bytes=100)
-    cp.insert([9], a, pinned=True)
+    cp.insert([9], _state(9), pinned=True)
     for i in range(5):
-        cp.insert([i, i], a)
+        cp.insert([i, i], _state(i + 10))
     assert cp.lookup([9]).pinned and len(cp) == 2
     with pytest.raises(ValueError):
         PrefixCache(max_bytes=0)
+
+
+def test_prefix_cache_content_dedup():
+    """Byte-identical state pytrees under different prefix keys are stored
+    ONCE (content-addressed, refcounted): resident bytes count the unique
+    state, stats report the savings, and the canonical pytree survives until
+    the last referencing entry is dropped."""
+    c = PrefixCache(max_bytes=1000)
+    same = _state(7)
+    c.insert([1], same)
+    c.insert([2, 2], {"h": same["h"].copy()})     # equal bytes, new object
+    c.insert([3, 3, 3], _state(8))                # distinct content
+    st = c.stats()
+    assert len(c) == 3
+    assert c.nbytes == 80                          # 2 unique 40-byte states
+    assert st["unique_states"] == 2
+    assert st["dedup_hits"] == 1 and st["bytes_saved"] == 40
+    # both dedup'd entries hand out the SAME resident pytree
+    assert c.lookup([1]).state is c.lookup([2, 2]).state
+    # dropping one reference keeps the canonical state for the other
+    c.insert([1], _state(9))                       # replace: unref old digest
+    assert c.lookup([2, 2]) is not None and c.nbytes == 120
+    # dedup makes replication cheap: N identical snapshots cost one state
+    cn = PrefixCache(capacity=16)
+    for i in range(8):
+        cn.insert([i], {"h": same["h"].copy()})
+    assert cn.nbytes == 40 and cn.stats()["bytes_saved"] == 7 * 40
+
+
+def test_prefix_cache_dedup_opt_out():
+    """dedup=False keeps inserts readback-free (no content digesting — the
+    attention-KV configuration): identical states are charged per entry and
+    eviction frees their full bytes."""
+    c = PrefixCache(max_bytes=100, dedup=False)
+    same = _state(7)
+    c.insert([1], same)
+    c.insert([2, 2], {"h": same["h"].copy()})   # identical content
+    assert c.nbytes == 80 and len(c) == 2       # NOT deduped
+    st = c.stats()
+    assert st["unique_states"] == 0 and st["dedup_hits"] == 0
+    c.insert([3, 3, 3], _state(1))              # 120 > 100: evict LRU
+    assert len(c) == 2 and c.nbytes == 80       # evicted bytes fully freed
+
+
+def test_prefix_cache_ttl_eviction():
+    """With ``ttl_ticks`` set, unpinned entries idle for more than the TTL
+    expire on ``tick()``; a lookup hit restamps the clock and pinned
+    (warmed) entries never TTL out. Without TTL, tick() only advances the
+    clock."""
+    c = PrefixCache(capacity=8, ttl_ticks=3)
+    c.insert([1], _state(1))
+    c.insert([9, 9], _state(9), pinned=True)
+    assert c.tick(3) == 0                  # idle == ttl: still resident
+    assert c.lookup([1]) is not None       # hit restamps last_used
+    assert c.tick(3) == 0 and len(c) == 2
+    assert c.tick(1) == 1                  # idle > ttl: [1] expires
+    assert c.lookup([1]) is None and c.lookup([9, 9]).pinned
+    assert c.stats()["ttl_evictions"] == 1
+    assert c.stats()["clock"] == 7
+    # TTL disabled: the clock advances but nothing ever expires
+    c2 = PrefixCache(capacity=8)
+    c2.insert([1], _state(1))
+    assert c2.tick(1000) == 0 and len(c2) == 1
+    with pytest.raises(ValueError):
+        PrefixCache(ttl_ticks=0)
 
 
 def test_prefix_cache_sizes_attention_kv_above_stlt_state():
@@ -329,6 +398,27 @@ def test_prefix_cache_sizes_attention_kv_above_stlt_state():
     for i in range(8):
         c2.insert([i, i], st_s)
     assert len(c2) == 9  # nothing evicted: the STLT states are cheap
+
+
+def test_prefix_cache_ttl_expires_before_idle_arrival_lookup():
+    """TTL across an idle fast-forward is consistent: an unpinned entry idle
+    past its TTL is swept BEFORE the arriving request's lookup (honest miss
+    + re-prefill) — never hit-then-immediately-evicted by a stale-clock
+    sweep — and a quick follow-up request reuses the fresh entry."""
+    cfg = small_cfg(mixer="stlt", stlt_nodes=4, stlt_chunk=8)
+    params = T.init_lm(jax.random.key(0), cfg)
+    cache = PrefixCache(capacity=8, ttl_ticks=10)
+    eng = ServeEngine(params, cfg, max_len=64, prefill_chunk=8,
+                      prefix_cache=cache)
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(3, cfg.vocab, 12).astype(np.int32)
+    reqs = [Request(prompt, 2, id=i) for i in range(3)]
+    _, stats = eng.serve(reqs, slots=1, arrivals=[0, 40, 41],
+                         return_stats=True)
+    assert stats[0]["cached_tokens"] == 0
+    assert stats[1]["cached_tokens"] == 0, "idle-expired entry must MISS"
+    assert cache.ttl_evictions >= 1
+    assert stats[2]["cached_tokens"] == len(prompt), "fresh entry must hit"
 
 
 def test_per_slot_sampler_and_masking():
