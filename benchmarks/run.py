@@ -21,7 +21,8 @@ def main() -> None:
     fast = not args.full
     only = set(args.only.split(",")) if args.only else None
 
-    from benchmarks import ablations, lm_ppl, longqa, roofline, scaling, serving, translation
+    from benchmarks import (ablations, kernels, lm_ppl, longqa, roofline,
+                            scaling, serving, translation)
 
     suites = {
         "scaling": lambda: scaling.main(fast=fast),          # §4.6
@@ -31,6 +32,7 @@ def main() -> None:
         "ablations": lambda: ablations.main(fast=fast),      # Table 4
         "roofline": lambda: roofline.main(fast=fast),        # §Roofline
         "serving": lambda: serving.main(fast=fast),          # §Perf continuous batching
+        "kernels": lambda: kernels.main(fast=fast),          # §Perf kernel layer
     }
     print("name,us_per_call,derived")
     t0 = time.time()

@@ -112,6 +112,83 @@ def _chunk_powers(log_mag: jax.Array, theta: jax.Array, length: int):
     return mag * jnp.cos(ang), mag * jnp.sin(ang)
 
 
+def stlt_snapshot_operators(log_mag, theta, q, chunk: int):
+    """Per-row in-chunk snapshot operators for a carry snapshot at token
+    index ``q[b]`` (DESIGN.md §3) — the ONE shared builder behind the jnp
+    engines' ``stlt_carry_snapshot`` and the Pallas kernel's gated in-kernel
+    snapshot (``kernels/ops._snapshot_ops``).
+
+    With c* = (q-1)//C the chunk containing token q-1 and r = q - c*·C the
+    in-chunk offset (r = 0 for q = 0):
+
+        w[b, j, k] = lambda_k^(r_b-1-j)  for j < r_b, else 0
+        d[b, k]    = lambda_k^(r_b)
+
+    log_mag/theta: [S] shared or [B, S] per-row; q: [B] ints in [0, N].
+    Returns (cstar [B] int32, w_re, w_im [B, C, S], d_re, d_im [B, S]).
+    """
+    C = chunk
+    q = q.astype(jnp.int32)
+    cstar = jnp.maximum(q - 1, 0) // C                      # [B]
+    r = (q - cstar * C).astype(jnp.float32)                 # 0 or in [1, C]
+    lm = log_mag if log_mag.ndim == 2 else log_mag[None, :]
+    th = theta if theta.ndim == 2 else theta[None, :]
+    j = jnp.arange(C, dtype=jnp.float32)
+    e = r[:, None] - 1.0 - j[None, :]                       # [B, C]
+    live = e >= 0.0
+    e = jnp.where(live, e, 0.0)                             # clamp dead cols
+    mag = jnp.where(live[..., None],
+                    jnp.exp(e[..., None] * lm[:, None, :]), 0.0)
+    ang = e[..., None] * th[:, None, :]                     # [B, C, S]
+    dmag = jnp.exp(r[:, None] * lm)                         # [B, S]
+    return (cstar, mag * jnp.cos(ang), mag * jnp.sin(ang),
+            dmag * jnp.cos(r[:, None] * th), dmag * jnp.sin(r[:, None] * th))
+
+
+def stlt_carry_snapshot(x_star, h_start_re, h_start_im, log_mag, theta, q,
+                        chunk: int):
+    """Closed-form per-row carry at token index ``q[b]`` from the chunk
+    containing token q-1 and the carry at that chunk's START (DESIGN.md §3):
+
+        h_q = sum_{j<r} lambda^(r-1-j) x_star[j]  +  lambda^r h_start
+
+    — an O(C·S·d) per-row correction, never a second full-sequence pass.
+    ``q == 0`` rows reduce to ``h_q = h_start`` (r = 0: empty sum,
+    lambda^0 = 1; callers select h_start = h0 and any x chunk).
+
+    x_star: [batch, C, d]; h_start_re/im: [batch, S, d];
+    log_mag/theta: [S] shared or [batch, S]; q: [batch].
+    Returns (h_re, h_im) [batch, S, d] float32.
+    """
+    _, w_re, w_im, d_re, d_im = stlt_snapshot_operators(log_mag, theta, q,
+                                                        chunk)
+    s_re = jnp.einsum("bcs,bcd->bsd", w_re, x_star)
+    s_im = jnp.einsum("bcs,bcd->bsd", w_im, x_star)
+    h_re = s_re + d_re[..., None] * h_start_re - d_im[..., None] * h_start_im
+    h_im = s_im + d_re[..., None] * h_start_im + d_im[..., None] * h_start_re
+    return h_re, h_im
+
+
+def _snapshot_from_select(xc, sel_re, sel_im, log_mag, theta, q, cstar,
+                          chunk: int):
+    """Shared epilogue of the jnp engines' gated in-scan select: gather row
+    b's chunk c* out of ``xc [batch, nc, C, d]`` and apply the closed-form
+    snapshot to the selected chunk-START carry."""
+    x_star = jnp.take_along_axis(xc, cstar[:, None, None, None],
+                                 axis=1)[:, 0]  # [batch, C, d]
+    return stlt_carry_snapshot(x_star, sel_re, sel_im, log_mag, theta, q,
+                               chunk)
+
+
+def _expand_u(u, batch: int, S: int):
+    """Tile node mixers to the flattened batch: per-call-shared [S] or
+    trailing-batch [..., S] (e.g. per-head mixers with heads as the
+    innermost batch dim) -> [batch, S] float32."""
+    u = u.astype(jnp.float32).reshape(-1, S)
+    reps = batch // u.shape[0]
+    return jnp.tile(u, (reps, 1)) if reps > 1 else u
+
+
 def stlt_chunked(
     x: jax.Array,
     log_mag: jax.Array,
@@ -123,6 +200,7 @@ def stlt_chunked(
     return_state: bool = False,
     h0_re: Optional[jax.Array] = None,
     h0_im: Optional[jax.Array] = None,
+    valid: Optional[jax.Array] = None,
 ):
     """Fused factorized STLT: ``Z = Re(sum_k u_k * scan(lambda_k, x))``.
 
@@ -134,9 +212,15 @@ def stlt_chunked(
         masks already folded in.
       chunk: in-chunk Toeplitz size C (128 = MXU tile).
       reverse: anti-causal direction (bilateral backward pass).
-      return_state: additionally return the final carry h_N of shape
+      return_state: additionally return the carry state of shape
         [..., S, d] (real, imag) — used by the serving cache.
       h0_re/h0_im: optional initial carry [..., S, d].
+      valid: optional per-row valid lengths [batch] (batch = the flattened
+        leading dims of x): the returned state is the carry after exactly
+        ``valid[b]`` tokens, via the closed-form per-chunk snapshot
+        (``stlt_carry_snapshot``) — positions >= valid[b] never enter the
+        carry, and a valid == 0 row returns h0. Forward-only; requires
+        ``return_state=True``.
 
     Returns:
       z real [..., N, d]  (and optionally (h_re, h_im)).
@@ -151,15 +235,8 @@ def stlt_chunked(
     # Scan internals in float32 for stability (bf16 inputs are upcast here and
     # the output is cast back).
     x = x.reshape(batch, N, d).astype(jnp.float32)
-    # Node mixers may be per-call-shared [S] or trailing-batch [..., S]
-    # (e.g. per-head mixers with heads as the innermost batch dim).
-    def _expand_u(u):
-        u = u.astype(jnp.float32).reshape(-1, S)
-        reps = batch // u.shape[0]
-        return jnp.tile(u, (reps, 1)) if reps > 1 else u
-
-    u_re = _expand_u(u_re)
-    u_im = _expand_u(u_im)
+    u_re = _expand_u(u_re, batch, S)
+    u_im = _expand_u(u_im, batch, S)
     log_mag = log_mag.astype(jnp.float32)
     theta = theta.astype(jnp.float32)
     if reverse:
@@ -196,9 +273,25 @@ def stlt_chunked(
     # true final state must be snapshotted there, not after the zero padding
     # (the carry keeps decaying through padded steps).
     last_valid = (N - 1) % chunk
+    # per-row valid states: a gated in-scan select keeps the chunk-START
+    # carry of row b's chunk c* (O(batch*S*d), mirroring the kernel's gate —
+    # never a stacked [nc, ...] carry history), then the closed-form
+    # snapshot corrects it to h_{valid[b]}
+    assert valid is None or return_state, \
+        "valid requires return_state=True (it only shapes the carry)"
+    per_row_snap = return_state and valid is not None
+    if per_row_snap:
+        assert not reverse, "per-row valid snapshots are forward-only"
+        q = valid.astype(jnp.int32).reshape(batch)
+        cstar = jnp.maximum(q - 1, 0) // chunk  # [batch]
 
-    def step(carry, x_chunk):
-        h_re, h_im = carry  # [B, S, d]
+    def step(carry, inp):
+        if per_row_snap:
+            c_idx, x_chunk = inp
+            h_re, h_im, sel_re, sel_im = carry  # [B, S, d]
+        else:
+            x_chunk = inp
+            h_re, h_im = carry
         # L[i,k,:] = sum_{j<=i} lambda^(i-j) x[j,:]  (+ carry injection)
         l_re = jnp.einsum("ijk,bjd->bikd", tri_re, x_chunk)
         l_im = jnp.einsum("ijk,bjd->bikd", tri_im, x_chunk)
@@ -210,13 +303,28 @@ def stlt_chunked(
         # the carry contribution, so h' = L[C-1].
         h_re_new = l_re[:, -1]
         h_im_new = l_im[:, -1]
-        snap = (l_re[:, last_valid], l_im[:, last_valid]) if return_state else None
+        if per_row_snap:
+            keep = (cstar == c_idx)[:, None, None]
+            sel_re = jnp.where(keep, h_re, sel_re)
+            sel_im = jnp.where(keep, h_im, sel_im)
+            return (h_re_new, h_im_new, sel_re, sel_im), (z, None)
+        snap = ((l_re[:, last_valid], l_im[:, last_valid]) if return_state
+                else None)
         return (h_re_new, h_im_new), (z, snap)
 
-    (_, _), (zs, snaps) = jax.lax.scan(
-        step, (h0_re, h0_im), jnp.moveaxis(xc, 1, 0), unroll=_scan_unroll(n_chunks)
-    )
-    if return_state:
+    if per_row_snap:
+        (_, _, sel_re, sel_im), (zs, snaps) = jax.lax.scan(
+            step, (h0_re, h0_im, h0_re, h0_im),
+            (jnp.arange(n_chunks), jnp.moveaxis(xc, 1, 0)),
+            unroll=_scan_unroll(n_chunks))
+    else:
+        (_, _), (zs, snaps) = jax.lax.scan(
+            step, (h0_re, h0_im), jnp.moveaxis(xc, 1, 0),
+            unroll=_scan_unroll(n_chunks))
+    if per_row_snap:
+        hN_re, hN_im = _snapshot_from_select(xc, sel_re, sel_im, log_mag,
+                                             theta, q, cstar, chunk)
+    elif return_state:
         # position N-1 lives in the final chunk (pad < chunk)
         hN_re, hN_im = snaps[0][-1], snaps[1][-1]
     z = jnp.moveaxis(zs, 0, 1).reshape(batch, n_chunks * chunk, d)
@@ -239,6 +347,10 @@ def stlt_chunked_fused(
     u_im: jax.Array,
     chunk: int = 128,
     reverse: bool = False,
+    return_state: bool = False,
+    h0_re: Optional[jax.Array] = None,
+    h0_im: Optional[jax.Array] = None,
+    valid: Optional[jax.Array] = None,
 ):
     """Fused-operator chunked STLT (§Perf): the node sum is folded into the
     in-chunk operator BEFORE the matmul, so the per-chunk work is
@@ -248,9 +360,15 @@ def stlt_chunked_fused(
 
     — O(C*d + S*d) per token instead of the per-node engine's O(C*S*d)
     (S-fold fewer FLOPs; this is the same algebra the Pallas kernel uses).
-    ``u`` must be per-call ([S]); adaptive masks fold into u upstream.
-    Training-forward path; use ``stlt_chunked`` when the streaming state is
-    needed (prefill).
+
+    ``u_re/u_im`` may be per-call ([S]) or batched ([..., S], tiled to the
+    flattened batch like ``stlt_chunked``): adaptive per-batch mixers fold
+    into PER-ROW operators M/A/B (Pre/Pim/dec are u-independent) instead of
+    falling back to the per-node engine.
+
+    Carry I/O: ``h0_re/h0_im`` seed the scan; ``return_state=True`` returns
+    the carry after ``valid[b]`` tokens (default: the true N) via the
+    closed-form ``stlt_carry_snapshot`` — ONE pass, no linearity folding.
     """
     orig_shape = x.shape
     in_dtype = x.dtype
@@ -261,7 +379,11 @@ def stlt_chunked_fused(
     for s in orig_shape[:-2]:
         batch *= s
     x = x.reshape(batch, N, d).astype(jnp.float32)
+    assert valid is None or return_state, \
+        "valid requires return_state=True (it only shapes the carry)"
     if reverse:
+        assert valid is None and h0_re is None, \
+            "carry resume / valid snapshots are forward-only"
         x = x[:, ::-1, :]
     pad = (-N) % C
     if pad:
@@ -271,44 +393,91 @@ def stlt_chunked_fused(
 
     lm = log_mag.astype(jnp.float32)
     th = theta.astype(jnp.float32)
-    ur = u_re.astype(jnp.float32).reshape(S)
-    ui = u_im.astype(jnp.float32).reshape(S)
+    per_row = u_re.ndim > 1
     p = jnp.arange(C + 1, dtype=jnp.float32)
     mag = jnp.exp(p[:, None] * lm[None, :])          # [C+1, S]
     ang = p[:, None] * th[None, :]
     pw_re, pw_im = mag * jnp.cos(ang), mag * jnp.sin(ang)
-    # combined causal filter g[t] = Re(sum_k u_k lambda^t)
-    g = pw_re[:C] @ ur - pw_im[:C] @ ui              # [C]
     idx = jnp.arange(C)
     diff = idx[:, None] - idx[None, :]
-    M = jnp.where(diff >= 0, g[jnp.clip(diff, 0, C - 1)], 0.0)   # [C, C]
     a_re, a_im = pw_re[1:], pw_im[1:]                # lambda^(i+1)
-    A = ur[None, :] * a_re - ui[None, :] * a_im      # [C, S]
-    Bc = -(ur[None, :] * a_im + ui[None, :] * a_re)
+    if per_row:
+        # adaptive/batched mixers -> per-row operators (leading batch dim)
+        ur = _expand_u(u_re, batch, S)               # [batch, S]
+        ui = _expand_u(u_im, batch, S)
+        g = ur @ pw_re[:C].T - ui @ pw_im[:C].T      # [batch, C]
+        M = jnp.where(diff[None] >= 0, g[:, jnp.clip(diff, 0, C - 1)], 0.0)
+        A = ur[:, None, :] * a_re[None] - ui[:, None, :] * a_im[None]
+        Bc = -(ur[:, None, :] * a_im[None] + ui[:, None, :] * a_re[None])
+        z_chunk = lambda x_chunk: jnp.einsum("bij,bjd->bid", M, x_chunk)
+        z_carry = lambda h_re, h_im: (jnp.einsum("bis,bsd->bid", A, h_re)
+                                      + jnp.einsum("bis,bsd->bid", Bc, h_im))
+    else:
+        ur = u_re.astype(jnp.float32).reshape(S)
+        ui = u_im.astype(jnp.float32).reshape(S)
+        # combined causal filter g[t] = Re(sum_k u_k lambda^t)
+        g = pw_re[:C] @ ur - pw_im[:C] @ ui          # [C]
+        M = jnp.where(diff >= 0, g[jnp.clip(diff, 0, C - 1)], 0.0)  # [C, C]
+        A = ur[None, :] * a_re - ui[None, :] * a_im  # [C, S]
+        Bc = -(ur[None, :] * a_im + ui[None, :] * a_re)
+        z_chunk = lambda x_chunk: jnp.einsum("ij,bjd->bid", M, x_chunk)
+        z_carry = lambda h_re, h_im: (jnp.einsum("is,bsd->bid", A, h_re)
+                                      + jnp.einsum("is,bsd->bid", Bc, h_im))
     rev = C - 1 - idx
     Pre, Pim = pw_re[rev].T, pw_im[rev].T            # [S, C]
     dec_re, dec_im = pw_re[C], pw_im[C]              # [S]
 
-    def step(carry, x_chunk):
-        h_re, h_im = carry                            # [B, S, d]
-        z = jnp.einsum("ij,bjd->bid", M, x_chunk)
-        z += jnp.einsum("is,bsd->bid", A, h_re)
-        z += jnp.einsum("is,bsd->bid", Bc, h_im)
+    if return_state:
+        # gated in-scan select of the chunk-START carry of row b's chunk c*
+        # (the kernel's gate, in jnp) feeding the closed-form snapshot
+        q = (jnp.full((batch,), N, jnp.int32) if valid is None
+             else valid.astype(jnp.int32).reshape(batch))
+        cstar = jnp.maximum(q - 1, 0) // C  # [batch]
+
+    def step(carry, inp):
+        if return_state:
+            c_idx, x_chunk = inp
+            h_re, h_im, sel_re, sel_im = carry        # [B, S, d]
+        else:
+            x_chunk = inp
+            h_re, h_im = carry
+        z = z_chunk(x_chunk) + z_carry(h_re, h_im)
         px = jnp.einsum("sj,bjd->bsd", Pre, x_chunk)
         qx = jnp.einsum("sj,bjd->bsd", Pim, x_chunk)
         h_re_new = px + dec_re[None, :, None] * h_re - dec_im[None, :, None] * h_im
         h_im_new = qx + dec_re[None, :, None] * h_im + dec_im[None, :, None] * h_re
+        if return_state:
+            keep = (cstar == c_idx)[:, None, None]
+            sel_re = jnp.where(keep, h_re, sel_re)
+            sel_im = jnp.where(keep, h_im, sel_im)
+            return (h_re_new, h_im_new, sel_re, sel_im), z
         return (h_re_new, h_im_new), z
 
-    h0 = jnp.zeros((batch, S, d), jnp.float32)
-    _, zs = jax.lax.scan(step, (h0, h0), jnp.moveaxis(xc, 1, 0),
-                         unroll=_scan_unroll(nc))
+    if h0_re is None:
+        h0_re = jnp.zeros((batch, S, d), jnp.float32)
+        h0_im = jnp.zeros((batch, S, d), jnp.float32)
+    else:
+        h0_re = h0_re.reshape(batch, S, d).astype(jnp.float32)
+        h0_im = h0_im.reshape(batch, S, d).astype(jnp.float32)
+    if return_state:
+        (_, _, sel_re, sel_im), zs = jax.lax.scan(
+            step, (h0_re, h0_im, h0_re, h0_im),
+            (jnp.arange(nc), jnp.moveaxis(xc, 1, 0)), unroll=_scan_unroll(nc))
+    else:
+        _, zs = jax.lax.scan(step, (h0_re, h0_im), jnp.moveaxis(xc, 1, 0),
+                             unroll=_scan_unroll(nc))
     z = jnp.moveaxis(zs, 0, 1).reshape(batch, nc * C, d)
     if pad:
         z = z[:, :N]
     if reverse:
         z = z[:, ::-1, :]
-    return z.reshape(orig_shape).astype(in_dtype)
+    z = z.reshape(orig_shape).astype(in_dtype)
+    if return_state:
+        hN_re, hN_im = _snapshot_from_select(xc, sel_re, sel_im, lm, th,
+                                             q, cstar, C)
+        state_shape = orig_shape[:-2] + (S, d)
+        return z, (hN_re.reshape(state_shape), hN_im.reshape(state_shape))
+    return z
 
 
 def stlt_carry_outputs(h0_re, h0_im, log_mag, theta, u_re, u_im, N: int):
@@ -319,8 +488,11 @@ def stlt_carry_outputs(h0_re, h0_im, log_mag, theta, u_re, u_im, N: int):
 
         z_corr[n] = Re(sum_k u_k lambda_k^{n+1} h0_k),   n = 0..N-1
 
-    — how chunked prefill resumes the ``chunked_fused``/``pallas`` engines,
-    which have no native initial-state argument (DESIGN.md §Serving).
+    LEGACY (PR 2-4): this full-sequence correction pass was how chunked
+    prefill resumed the ``chunked_fused``/``pallas`` engines before they
+    became carry-native (every engine now takes ``h0`` directly and resumes
+    in ONE pass, DESIGN.md §3). Kept as the linearity-folded baseline for
+    ``benchmarks/kernels.py``.
 
     h0_re/h0_im: [B, H, S, dh]; log_mag/theta/u_re/u_im: [H, S].
     Returns z_corr [B, H, N, dh] float32.
@@ -341,9 +513,12 @@ def stlt_final_state(v, log_mag, theta, h0_re=None, h0_im=None, valid=None):
     """Closed-form final carry after N inputs: h_N = lambda^N h0 + sum_n
     lambda^(N-1-n) v_n.
 
-    The direct contraction (O(N*S*d), no scan) used where an engine computes
-    outputs but not states — powers decay for |lambda| < 1, so long tails
-    underflow harmlessly to zero.
+    LEGACY (PR 2-4): the direct contraction (O(N*S*d), no scan) formerly
+    used where an engine computed outputs but not states; every scan engine
+    is now carry-native and snapshots the state in its one pass
+    (``stlt_carry_snapshot``). Kept as an oracle for tests and as the
+    linearity-folded baseline for ``benchmarks/kernels.py`` — powers decay
+    for |lambda| < 1, so long tails underflow harmlessly to zero.
 
     v: [B, H, N, dh]; log_mag/theta: [H, S]; h0: [B, H, S, dh] or None.
     ``valid`` (optional [B] ints) is the per-row valid length of a padded

@@ -148,20 +148,26 @@ def _run_scan(v, log_mag, theta, u_re, u_im, cfg: STLTConfig, reverse: bool):
             ur, ui = u_re.reshape(B * H, S), u_im.reshape(B * H, S)
         z = kernel_ops.stlt_scan(vb, lm, th, ur, ui, chunk=cfg.chunk, reverse=reverse)
         return z.reshape(B, H, N, dh)
-    if cfg.engine == "chunked_fused" and u_re.ndim == 2:
+    if cfg.engine == "chunked_fused":
         # §Perf engine: node sum folded into one real Toeplitz operator —
         # O(C*d + S*d)/token vs the per-node engine's O(C*S*d)/token.
-        # (Adaptive masks make the operator batch-dependent -> fall through.)
+        # Adaptive masks make the operator batch-dependent: they fold into
+        # PER-ROW operators ([B] leading dim on M/A/B) inside
+        # stlt_chunked_fused — no fall-through to the per-node engine.
         vh = v.transpose(1, 0, 2, 3)  # [H, B, N, dh]
+        if u_re.ndim == 2:  # [H, S] static mixers -> shared operators
+            ur, ui = u_re, u_im
+        else:  # [B, H, S] adaptive -> per-row [H, B, S]
+            ur, ui = u_re.transpose(1, 0, 2), u_im.transpose(1, 0, 2)
 
         def per_head_fused(vh_, lm_, th_, ur_, ui_):
             return scan_lib.stlt_chunked_fused(
                 vh_, lm_, th_, ur_, ui_, chunk=cfg.chunk, reverse=reverse
             )
 
-        z = jax.vmap(per_head_fused)(vh, log_mag, theta, u_re, u_im)
+        z = jax.vmap(per_head_fused)(vh, log_mag, theta, ur, ui)
         return z.transpose(1, 0, 2, 3)
-    if cfg.engine in ("chunked", "chunked_fused"):
+    if cfg.engine == "chunked":
         vh = v.transpose(1, 0, 2, 3)  # [H, B, N, dh]
         if u_re.ndim == 2:  # [H, S]
             ur, ui = u_re[:, None, :], u_im[:, None, :]
@@ -225,14 +231,38 @@ def _hann_filters(params, cfg: STLTConfig, masks=None):
     return g.transpose(0, 2, 1)  # [B, H, W]
 
 
+def _next_fast_len(n: int) -> int:
+    """Smallest 5-smooth (2^a 3^b 5^c) integer >= n — rfft on a fast
+    composite length is measurably faster than on an arbitrary one (e.g.
+    4224 -> 4608)."""
+    if n <= 1:
+        return 1
+    best = 1 << (n - 1).bit_length()  # pure power of two upper bound
+    f5 = 1
+    while f5 < best:
+        f35 = f5
+        while f35 < best:
+            x = f35
+            while x < n:
+                x *= 2
+            best = min(best, x)
+            f35 *= 3
+        f5 *= 5
+    return best
+
+
 def _hann_conv(v: jax.Array, g: jax.Array, reverse: bool) -> jax.Array:
     """Causal (or anti-causal) depthwise FFT convolution.
 
-    v: [B, H, N, dh]; g: [H, W] or [B, H, W].
+    v: [B, H, N, dh]; g: [H, W] or [B, H, W]. Anti-causal
+    (``reverse=True``) conjugates the real filter's spectrum — circular
+    correlation — whose first N samples align with no shift as long as the
+    FFT length covers N + W (rounding it UP to a fast composite keeps that
+    true and only speeds up the transform).
     """
     B, H, N, dh = v.shape
     W = g.shape[-1]
-    L = N + W
+    L = _next_fast_len(N + W)
     vf = jnp.fft.rfft(v, n=L, axis=2)  # [B, H, Lf, dh]
     gf = jnp.fft.rfft(g, n=L, axis=-1)  # [H, Lf] or [B, H, Lf]
     if g.ndim == 2:
@@ -240,10 +270,6 @@ def _hann_conv(v: jax.Array, g: jax.Array, reverse: bool) -> jax.Array:
     if reverse:
         gf = jnp.conj(gf)  # time-reversal of a real filter
     z = jnp.fft.irfft(vf * gf[..., None], n=L, axis=2)[:, :, :N]
-    if reverse:
-        # anti-causal conv: z[n] = sum_{t>=0} g[t] v[n+t]; conj in freq gives
-        # correlation, whose first N samples align after no shift.
-        pass
     return z.astype(v.dtype)
 
 
@@ -313,8 +339,12 @@ def _relevance_readout(params, cfg, x, v, log_mag, theta, masks):
     """Paper-figure readout: Z = softmax(R / sqrt(S) + mask) V.
 
     R[n,m] = Re(sum_k m_k L[n,k] conj(L[m,k])), L from the (possibly
-    bidirectional) transform of per-head inputs. O(N^2) — faithful mode for
-    moderate N; the flash-tiled Pallas variant covers larger N on TPU.
+    bidirectional) transform of per-head inputs. This implementation
+    MATERIALIZES the full [B, H, N, N] relevance matrix (plus the
+    [B*H, N, S, dh] complex coefficients) — O(N^2) memory and FLOPs, the
+    paper-faithful mode for moderate N only. A flash-style tiled Pallas
+    kernel that streams R block-by-block (online softmax, coefficients
+    recomputed per tile) is a ROADMAP item, not yet implemented.
     """
     B, H, N, dh = v.shape
     S = cfg.num_nodes
@@ -359,21 +389,25 @@ def stlt_prefill(params: dict, cfg: STLTConfig, x: jax.Array,
     (the output of a previous ``stlt_prefill``/``init_stlt_state``), making
     prefill chunkable at ANY token boundary (DESIGN.md §Serving):
 
-    * exponential window: the carry ``h_re/h_im`` either seeds the chunked
-      scan directly (``engine="chunked"``) or is folded in by linearity —
-      zero-state engine pass + ``stlt_carry_outputs`` free response — for the
-      fused/pallas engines, whose kernels have no initial-state argument.
+    * exponential window: every engine is CARRY-NATIVE — the carry
+      ``h_re/h_im`` seeds the scan directly (``chunked``/``chunked_fused``
+      in jnp, the Pallas kernel via its h0 inputs) and the updated state
+      comes back from the SAME single pass. (The PR 2-4 era resumed the
+      fused/pallas engines by linearity: a zero-state pass plus
+      ``stlt_carry_outputs``/``stlt_final_state`` full-sequence correction
+      passes — now the ``benchmarks/kernels.py`` baseline only.)
     * hann window: the ring buffer supplies the W-1 tokens of left context
       for the finite-support convolution.
 
     ``valid`` (optional [B] ints) marks row b's tokens beyond ``valid[b]``
     as padding (the serving engine pads every tail chunk to one static
     shape): padded positions contribute nothing to the carried state —
-    the new state is exactly the state after ``valid[b]`` tokens, computed
-    in closed form (``scan_lib.stlt_final_state``) for the exponential
-    window and by a per-row gather over the extended context for the hann
-    ring. Outputs at positions >= valid[b] are garbage (causality keeps
-    valid positions exact) and must not be read.
+    the new state is exactly the state after ``valid[b]`` tokens, via each
+    engine's closed-form per-row carry snapshot (in-kernel for pallas,
+    ``scan_lib.stlt_carry_snapshot`` for the jnp engines) and by a per-row
+    gather over the extended context for the hann ring. Outputs at
+    positions >= valid[b] are garbage (causality keeps valid positions
+    exact) and must not be read.
     """
     assert not cfg.bidirectional and cfg.mode == "factorized"
     B, N, d = x.shape
@@ -418,19 +452,47 @@ def stlt_prefill(params: dict, cfg: STLTConfig, x: jax.Array,
             buf = buf.at[:, :, :take].set(
                 ext[:, :, ::-1][:, :, :take].astype(jnp.float32))
             new_state = {"buf": buf, "pos": pos + N}
-    elif cfg.engine in ("chunked_fused", "pallas"):
-        # These engines carry no initial-state argument: run them zero-state
-        # and fold the carry in by linearity (free response + closed-form
-        # final state, repro.core.scan helpers).
-        z = _run_scan(v, log_mag, theta, u_re, u_im, cfg, reverse=False)
-        h0_re = state["h_re"] if state is not None else None
-        h0_im = state["h_im"] if state is not None else None
-        if state is not None:
-            z = z + scan_lib.stlt_carry_outputs(
-                h0_re, h0_im, log_mag, theta, u_re, u_im, N).astype(z.dtype)
-        h_re, h_im = scan_lib.stlt_final_state(v, log_mag, theta, h0_re, h0_im,
-                                               valid=valid)
-        new_state = {"h_re": h_re, "h_im": h_im}
+    elif cfg.engine == "pallas":
+        # Carry-native kernel: h0 in, per-row valid snapshot out — the whole
+        # resumed chunk is ONE kernel dispatch (DESIGN.md §3).
+        from repro.kernels import ops as kernel_ops
+
+        S, dh = cfg.num_nodes, cfg.head_dim
+        vb = v.reshape(B * H, N, dh)
+        lm = jnp.tile(log_mag, (B, 1))  # [B*H, S], H fastest
+        th = jnp.tile(theta, (B, 1))
+        ur, ui = jnp.tile(u_re, (B, 1)), jnp.tile(u_im, (B, 1))
+        h0r = state["h_re"].reshape(B * H, S, dh) if state is not None else None
+        h0i = state["h_im"].reshape(B * H, S, dh) if state is not None else None
+        vr = None if valid is None else jnp.repeat(valid.astype(jnp.int32), H)
+        z, (h_re, h_im) = kernel_ops.stlt_scan(
+            vb, lm, th, ur, ui, chunk=cfg.chunk, h0_re=h0r, h0_im=h0i,
+            valid=vr, return_state=True)
+        z = z.reshape(B, H, N, dh)
+        new_state = {"h_re": h_re.reshape(B, H, S, dh),
+                     "h_im": h_im.reshape(B, H, S, dh)}
+    elif cfg.engine == "chunked_fused":
+        # Carry-native fused-operator scan: seeds from h0 and snapshots the
+        # per-row valid state in the same pass (scan_lib.stlt_carry_snapshot).
+        vh = v.transpose(1, 0, 2, 3)  # [H, B, N, dh]
+        if state is None:
+            h0_re = h0_im = None
+            axes = (0, 0, 0, 0, 0, None, None)
+        else:
+            h0_re = state["h_re"].transpose(1, 0, 2, 3)  # [H, B, S, dh]
+            h0_im = state["h_im"].transpose(1, 0, 2, 3)
+            axes = (0, 0, 0, 0, 0, 0, 0)
+
+        def per_head_fused(vh_, lm_, th_, ur_, ui_, h0r_, h0i_):
+            return scan_lib.stlt_chunked_fused(
+                vh_, lm_, th_, ur_, ui_, chunk=cfg.chunk, return_state=True,
+                h0_re=h0r_, h0_im=h0i_, valid=valid)
+
+        z, (h_re, h_im) = jax.vmap(per_head_fused, in_axes=axes)(
+            vh, log_mag, theta, u_re, u_im, h0_re, h0_im)
+        z = z.transpose(1, 0, 2, 3)
+        new_state = {"h_re": h_re.transpose(1, 0, 2, 3),
+                     "h_im": h_im.transpose(1, 0, 2, 3)}
     else:
         vh = v.transpose(1, 0, 2, 3)  # [H, B, N, dh]
         if state is None:
@@ -441,9 +503,12 @@ def stlt_prefill(params: dict, cfg: STLTConfig, x: jax.Array,
             h0_im = state["h_im"].transpose(1, 0, 2, 3)
 
         def per_head(vh_, lm_, th_, ur_, ui_, h0r_, h0i_):
+            # valid rows snapshot their carry at valid[b] inside the one
+            # scan pass (scan_lib.stlt_carry_snapshot) — padded steps never
+            # leak into the state and there is no second correction pass
             return scan_lib.stlt_chunked(
                 vh_, lm_, th_, ur_, ui_, chunk=cfg.chunk, return_state=True,
-                h0_re=h0r_, h0_im=h0i_,
+                h0_re=h0r_, h0_im=h0i_, valid=valid,
             )
 
         z, (h_re, h_im) = jax.vmap(per_head)(
@@ -451,20 +516,10 @@ def stlt_prefill(params: dict, cfg: STLTConfig, x: jax.Array,
             h0_re, h0_im,
         )
         z = z.transpose(1, 0, 2, 3)
-        if valid is not None:
-            # the scan's final carry sits after the padded steps (the carry
-            # keeps decaying through them); the true per-row state at
-            # valid[b] comes from the closed form instead
-            h_re, h_im = scan_lib.stlt_final_state(
-                v, log_mag, theta,
-                None if state is None else state["h_re"],
-                None if state is None else state["h_im"], valid=valid)
-            new_state = {"h_re": h_re, "h_im": h_im}
-        else:
-            new_state = {
-                "h_re": h_re.transpose(1, 0, 2, 3),  # [B, H, S, dh]
-                "h_im": h_im.transpose(1, 0, 2, 3),
-            }
+        new_state = {
+            "h_re": h_re.transpose(1, 0, 2, 3),  # [B, H, S, dh]
+            "h_im": h_im.transpose(1, 0, 2, 3),
+        }
 
     z = _merge_heads(z)
     if cfg.gate:

@@ -1,4 +1,4 @@
-"""Pallas TPU kernel for the fused factorized STLT scan.
+"""Pallas TPU kernel for the fused factorized STLT scan — carry-native.
 
 Math (DESIGN.md §3): for chunk c with inputs X_c [C, d] and complex carry
 h [S, d],
@@ -17,11 +17,28 @@ where every operator is a tiny, N-independent function of the poles
     Pre/Pim[k,j] = Re/Im(lambda_k^(C-1-j))
     dec = lambda^C
 
-Grid: (BH, d/bd, N/C) with the chunk axis sequential ("arbitrary") and a
-VMEM scratch carry per (row, d-block). All matmul shapes are multiples of
-the 128 MXU tile when C = bd = 128. HBM traffic is exactly x-in + z-out
-(2*N*d*4B per row) — the O(N*S*d) Laplace coefficients never leave VMEM,
-preserving the paper's O(S*d) memory claim on-chip.
+Carry I/O (DESIGN.md §3): the kernel is STATE-NATIVE. It seeds the VMEM
+carry from an initial state ``(h0_re, h0_im)`` [BH, S, d] and emits a final
+carry alongside ``z`` — so a resumed serving prefill chunk is exactly ONE
+kernel dispatch (no linearity-folded free-response / closed-form passes).
+The emitted carry is a per-row SNAPSHOT at token index ``valid[row]``
+(defaults to N): the host precomputes in-chunk snapshot operators
+
+    Spre/Spim[k,j] = Re/Im(lambda_k^(r-1-j)) for j < r, else 0
+    sdec           = lambda^r,   r = in-chunk offset of valid[row]
+    gate[row, c]   = 1 iff chunk c contains valid[row]
+
+and the kernel evaluates ``h_valid = S @ X_c + sdec * h_chunk_start`` in the
+ONE gated chunk — this is how padded tail chunks (two-shape serving) leave
+the carry exactly where the unpadded chunk would, without a second pass.
+Rows with ``valid == 0`` return ``h0`` (written at c == 0, gate never fires).
+
+Grid: (BH, d/bd, N/C) with the chunk axis sequential ("arbitrary"), a VMEM
+scratch pair for the running carry, and the carry outputs as revisited
+(1, S, bd) blocks. All matmul shapes are multiples of the 128 MXU tile when
+C = bd = 128. HBM traffic is x-in + z-out + the O(S*d) carry I/O per row —
+the O(N*S*d) Laplace coefficients never leave VMEM, preserving the paper's
+O(S*d) memory claim on-chip.
 """
 from __future__ import annotations
 
@@ -35,6 +52,7 @@ try:  # TPU memory spaces (used for scratch); interpret mode accepts them too
     from jax.experimental.pallas import tpu as pltpu
 
     _VMEM = pltpu.VMEM
+    _SMEM = pltpu.SMEM
     try:
         _CompilerParams = pltpu.CompilerParams
     except AttributeError:  # older naming
@@ -42,22 +60,29 @@ try:  # TPU memory spaces (used for scratch); interpret mode accepts them too
 except Exception:  # pragma: no cover - non-TPU builds
     pltpu = None
     _VMEM = None
+    _SMEM = None
     _CompilerParams = None
 
 
-def _kernel(x_ref, m_ref, a_ref, b_ref, pre_ref, pim_ref, dec_ref,
-            z_ref, hre_ref, him_ref):
-    """One (row, d-block, chunk) grid step."""
+def _kernel(gate_ref, x_ref, m_ref, a_ref, b_ref, pre_ref, pim_ref, dec_ref,
+            h0re_ref, h0im_ref, spre_ref, spim_ref, sdec_ref,
+            z_ref, hre_ref, him_ref, cre_ref, cim_ref):
+    """One (row, d-block, chunk) grid step. cre/cim: running-carry scratch;
+    hre/him: the snapshot carry output (a revisited block, written in the
+    gated chunk — or h0 at c == 0 for valid == 0 rows)."""
     c = pl.program_id(2)
 
     @pl.when(c == 0)
     def _init():
-        hre_ref[...] = jnp.zeros_like(hre_ref)
-        him_ref[...] = jnp.zeros_like(him_ref)
+        cre_ref[...] = h0re_ref[0]
+        cim_ref[...] = h0im_ref[0]
+        # valid == 0 rows: the state after 0 tokens is h0 (gate never fires)
+        hre_ref[0] = h0re_ref[0]
+        him_ref[0] = h0im_ref[0]
 
     x = x_ref[0]          # [C, bd]
-    h_re = hre_ref[...]   # [S, bd]
-    h_im = him_ref[...]
+    h_re = cre_ref[...]   # [S, bd]  carry at chunk START
+    h_im = cim_ref[...]
     m = m_ref[0]          # [C, C]
     a = a_ref[0]          # [C, S]
     b = b_ref[0]
@@ -71,28 +96,45 @@ def _kernel(x_ref, m_ref, a_ref, b_ref, pre_ref, pim_ref, dec_ref,
     z += jnp.dot(b, h_im, preferred_element_type=jnp.float32)
     z_ref[0] = z.astype(z_ref.dtype)
 
+    # Carry snapshot at this row's valid position (one chunk per row fires).
+    @pl.when(gate_ref[0, 0] > 0)
+    def _snapshot():
+        spre = spre_ref[0]         # [S, C]  lambda^(r-1-j), zero for j >= r
+        spim = spim_ref[0]
+        s_re = sdec_ref[0, 0, :]   # [S]     lambda^r
+        s_im = sdec_ref[0, 1, :]
+        sx = jnp.dot(spre, x, preferred_element_type=jnp.float32)
+        sy = jnp.dot(spim, x, preferred_element_type=jnp.float32)
+        hre_ref[0] = sx + s_re[:, None] * h_re - s_im[:, None] * h_im
+        him_ref[0] = sy + s_re[:, None] * h_im + s_im[:, None] * h_re
+
     px = jnp.dot(pre, x, preferred_element_type=jnp.float32)
     qx = jnp.dot(pim, x, preferred_element_type=jnp.float32)
     new_re = px + dec_re[:, None] * h_re - dec_im[:, None] * h_im
     new_im = qx + dec_re[:, None] * h_im + dec_im[:, None] * h_re
-    hre_ref[...] = new_re
-    him_ref[...] = new_im
+    cre_ref[...] = new_re
+    cim_ref[...] = new_im
 
 
 @functools.partial(
     jax.jit, static_argnames=("chunk", "block_d", "interpret")
 )
-def stlt_scan_kernel(x, m, a, b, pre, pim, dec, *, chunk: int = 128,
+def stlt_scan_kernel(gate, x, m, a, b, pre, pim, dec, h0_re, h0_im,
+                     spre, spim, sdec, *, chunk: int = 128,
                      block_d: int = 128, interpret: bool = False):
     """x [BH, N, d] (N % chunk == 0, d % block_d == 0); operators per row.
 
-    m [BH, C, C]; a,b [BH, C, S]; pre,pim [BH, S, C]; dec [BH, 2, S].
-    Returns z [BH, N, d] float32.
+    m [BH, C, C]; a,b [BH, C, S]; pre,pim,spre,spim [BH, S, C];
+    dec,sdec [BH, 2, S]; h0_re/h0_im [BH, S, d]; gate [BH, nc] int32
+    (exactly one 1 per row with valid > 0, all 0 for valid == 0).
+    Returns (z [BH, N, d], h_re [BH, S, d], h_im [BH, S, d]) float32 — the
+    carry outputs are the per-row snapshot states (see module docstring).
     """
     BH, N, d = x.shape
     S = pre.shape[1]
     assert N % chunk == 0 and d % block_d == 0, (N, chunk, d, block_d)
     nc, nd = N // chunk, d // block_d
+    assert gate.shape == (BH, nc), (gate.shape, BH, nc)
 
     grid = (BH, nd, nc)
     kwargs = {}
@@ -106,10 +148,12 @@ def stlt_scan_kernel(x, m, a, b, pre, pim, dec, *, chunk: int = 128,
         _VMEM((S, block_d), jnp.float32) if _VMEM else
         pl.BlockSpec(memory_space=None),
     ]
-    return pl.pallas_call(
+    gate_spec_kwargs = {"memory_space": _SMEM} if _SMEM is not None else {}
+    z, h_re, h_im = pl.pallas_call(
         _kernel,
         grid=grid,
         in_specs=[
+            pl.BlockSpec((1, 1), lambda bh, db, c: (bh, c), **gate_spec_kwargs),
             pl.BlockSpec((1, chunk, block_d), lambda bh, db, c: (bh, c, db)),
             pl.BlockSpec((1, chunk, chunk), lambda bh, db, c: (bh, 0, 0)),
             pl.BlockSpec((1, chunk, S), lambda bh, db, c: (bh, 0, 0)),
@@ -117,9 +161,24 @@ def stlt_scan_kernel(x, m, a, b, pre, pim, dec, *, chunk: int = 128,
             pl.BlockSpec((1, S, chunk), lambda bh, db, c: (bh, 0, 0)),
             pl.BlockSpec((1, S, chunk), lambda bh, db, c: (bh, 0, 0)),
             pl.BlockSpec((1, 2, S), lambda bh, db, c: (bh, 0, 0)),
+            pl.BlockSpec((1, S, block_d), lambda bh, db, c: (bh, 0, db)),
+            pl.BlockSpec((1, S, block_d), lambda bh, db, c: (bh, 0, db)),
+            pl.BlockSpec((1, S, chunk), lambda bh, db, c: (bh, 0, 0)),
+            pl.BlockSpec((1, S, chunk), lambda bh, db, c: (bh, 0, 0)),
+            pl.BlockSpec((1, 2, S), lambda bh, db, c: (bh, 0, 0)),
         ],
-        out_specs=pl.BlockSpec((1, chunk, block_d), lambda bh, db, c: (bh, c, db)),
-        out_shape=jax.ShapeDtypeStruct((BH, N, d), jnp.float32),
+        out_specs=[
+            pl.BlockSpec((1, chunk, block_d), lambda bh, db, c: (bh, c, db)),
+            pl.BlockSpec((1, S, block_d), lambda bh, db, c: (bh, 0, db)),
+            pl.BlockSpec((1, S, block_d), lambda bh, db, c: (bh, 0, db)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, N, d), jnp.float32),
+            jax.ShapeDtypeStruct((BH, S, d), jnp.float32),
+            jax.ShapeDtypeStruct((BH, S, d), jnp.float32),
+        ],
         scratch_shapes=scratch,
         interpret=interpret,
-    )(x, m, a, b, pre, pim, dec)
+        **kwargs,
+    )(gate, x, m, a, b, pre, pim, dec, h0_re, h0_im, spre, spim, sdec)
+    return z, h_re, h_im

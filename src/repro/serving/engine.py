@@ -33,7 +33,12 @@ split into fixed-size chunks folded through the resumable
 ``transformer.prefill_chunk``, one chunk per tick, interleaved with the
 pool's batched decode steps (Sarathi-style mixed steps) — a 100k-token
 admission therefore stalls co-resident decodes by at most one chunk of
-prefill work per token, never by the whole prompt.
+prefill work per token, never by the whole prompt. Every STLT engine is
+CARRY-NATIVE (DESIGN.md §3): a resumed chunk seeds the scan from the
+carried ``h_re/h_im`` and emits the updated O(S*d) state in the SAME single
+pass — the Pallas kernel included — so chunked admission pays exactly one
+scan pass per chunk, with no linearity-folded free-response/final-state
+correction passes (``benchmarks/kernels.py`` measures the gap).
 
 Chunked admission is a TWO-SHAPE program (DESIGN.md §Serving): every chunk
 — tail chunks included — is padded to ``prefill_chunk`` and carries a

@@ -1,17 +1,27 @@
 """Pallas kernel validation: shape/dtype sweep in interpret mode against the
 pure-jnp oracles (ref.py sequential + core chunked), forward and backward.
 
+Carry-native contract (DESIGN.md §3): carry-in/carry-out parity against the
+sequential definition oracle (h0 != 0, odd lengths, per-row valid-masked
+tails, reverse), analytic parameter grads vs ``jax.grad`` of the oracle and
+vs the legacy per-node recompute, and a trace-probe lockdown that a
+state-resumed pallas prefill chunk is exactly ONE kernel dispatch with zero
+legacy linearity-folding passes.
+
 Hardening sweep (the CI slow-kernel job, ``--runslow``): forward parity
 against the O(N^2 S) direct-summation definition in ``repro/core/ref.py``
 and custom-VJP gradient parity against ``jax.grad`` of the sequential
 definition oracle, across degenerate/odd chunk sizes {1, 7, 128} and
 lengths that are not chunk multiples.
 """
+import functools
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core import scan as scan_lib
 from repro.core.ref import stlt_direct
 from repro.kernels import ops
 from repro.kernels.ref import ref_sequential
@@ -151,6 +161,217 @@ def test_kernel_vjp_vs_definition_oracle(rng, chunk, N):
         denom = float(jnp.max(jnp.abs(b))) + 1e-9
         rel = float(jnp.max(jnp.abs(a - b))) / denom
         assert rel < 1e-3, (name, chunk, N, rel)
+
+
+# ---------------------------------------------------------------------------
+# carry-native kernel: h0 in, snapshot state out, one pass (DESIGN.md §3)
+# ---------------------------------------------------------------------------
+
+
+def _oracle_with_state(x, lm, th, ur, ui, h0=None):
+    """Sequential definition oracle that also returns the complex carry."""
+    lam = jnp.exp(lm.astype(jnp.float32) + 1j * th.astype(jnp.float32))
+    u = ur.astype(jnp.float32) + 1j * ui.astype(jnp.float32)
+    BH, N, d = x.shape
+    S = lam.shape[-1]
+    h = jnp.zeros((BH, S, d), jnp.complex64) if h0 is None else h0
+
+    def step(h, x_t):
+        h = lam[:, :, None] * h + x_t[:, None, :].astype(jnp.complex64)
+        return h, jnp.einsum("bsd,bs->bd", h, u).real
+
+    h, zs = jax.lax.scan(step, h, jnp.moveaxis(x.astype(jnp.float32), 1, 0))
+    return jnp.moveaxis(zs, 0, 1), h
+
+
+@pytest.mark.parametrize("chunk,n_pre,n_post", [(32, 37, 63), (7, 5, 19),
+                                                (128, 1, 129), (16, 48, 16)])
+def test_kernel_carry_roundtrip(rng, chunk, n_pre, n_post):
+    """Two resumed kernel passes == one oracle run: z AND carry state, at
+    odd lengths/split points (h0 != 0 for the second pass)."""
+    BH, d, S = 2, 8, 3
+    x, lm, th, ur, ui = _inputs(rng, BH, n_pre + n_post, d, S, jnp.float32)
+    z_ref, h_ref = _oracle_with_state(x, lm, th, ur, ui)
+    run = functools.partial(ops.stlt_scan, chunk=chunk, interpret=True,
+                            block_d=8, return_state=True)
+    z_a, (h1r, h1i) = run(x[:, :n_pre], lm, th, ur, ui)
+    z_b, (h2r, h2i) = run(x[:, n_pre:], lm, th, ur, ui, h0_re=h1r, h0_im=h1i)
+    scale = float(jnp.max(jnp.abs(z_ref))) + 1e-9
+    np.testing.assert_allclose(
+        np.asarray(jnp.concatenate([z_a, z_b], axis=1)) / scale,
+        np.asarray(z_ref) / scale, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(h2r), np.asarray(h_ref.real),
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h2i), np.asarray(h_ref.imag),
+                               atol=1e-4)
+
+
+@pytest.mark.parametrize("chunk", [7, 32])
+def test_kernel_valid_masked_carry(rng, chunk):
+    """Per-row ``valid``: the emitted state is the state after exactly
+    valid[b] tokens — pad positions never enter the carry, valid == 0 rows
+    return h0 bit-exactly, valid == N matches the full run."""
+    BH, N, d, S = 3, 40, 8, 3
+    x, lm, th, ur, ui = _inputs(rng, BH, N, d, S, jnp.float32)
+    h0 = jnp.asarray(rng.normal(size=(2, BH, S, d)), jnp.float32)
+    valid = jnp.asarray([13, 0, N], jnp.int32)
+    _, (h_re, h_im) = ops.stlt_scan(
+        x, lm, th, ur, ui, chunk=chunk, interpret=True, block_d=8,
+        h0_re=h0[0], h0_im=h0[1], valid=valid, return_state=True)
+    for b, q in enumerate([13, 0, N]):
+        _, h_ref = _oracle_with_state(
+            x[b:b + 1, :q], lm[b:b + 1], th[b:b + 1], ur[b:b + 1],
+            ui[b:b + 1], (h0[0, b:b + 1] + 1j * h0[1, b:b + 1]))
+        np.testing.assert_allclose(np.asarray(h_re[b]),
+                                   np.asarray(h_ref.real[0]), atol=1e-4,
+                                   err_msg=f"row {b} valid={q}")
+        np.testing.assert_allclose(np.asarray(h_im[b]),
+                                   np.asarray(h_ref.imag[0]), atol=1e-4,
+                                   err_msg=f"row {b} valid={q}")
+    # valid == 0 passthrough is bit-exact
+    np.testing.assert_array_equal(np.asarray(h_re[1]), np.asarray(h0[0, 1]))
+    np.testing.assert_array_equal(np.asarray(h_im[1]), np.asarray(h0[1, 1]))
+
+
+@pytest.mark.parametrize("use_kernel", [True, False],
+                         ids=["kernel", "jnp-fallback"])
+def test_kernel_reverse_emits_reverse_state(rng, use_kernel):
+    """reverse=True still yields forward/backward z parity (existing suite)
+    and the state outputs refer to the SCAN direction (flipped input) — on
+    BOTH dispatch backends (the jnp fallback serves non-TPU hosts and must
+    not diverge from the kernel)."""
+    BH, N, d, S = 2, 50, 8, 3
+    x, lm, th, ur, ui = _inputs(rng, BH, N, d, S, jnp.float32)
+    kw = (dict(interpret=True, block_d=8) if use_kernel
+          else dict(use_kernel=False))
+    z, (h_re, h_im) = ops.stlt_scan(x, lm, th, ur, ui, chunk=16,
+                                    reverse=True, return_state=True, **kw)
+    z_ref, h_ref = _oracle_with_state(x[:, ::-1], lm, th, ur, ui)
+    scale = float(jnp.max(jnp.abs(z_ref))) + 1e-9
+    np.testing.assert_allclose(np.asarray(z[:, ::-1]) / scale,
+                               np.asarray(z_ref) / scale, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(h_re), np.asarray(h_ref.real),
+                               atol=1e-4)
+
+
+@pytest.mark.parametrize("engine", ["chunked", "chunked_fused"])
+def test_jnp_engines_carry_native(rng, engine):
+    """The jnp scan engines mirror the kernel's carry contract: h0 seed +
+    per-row valid snapshot in ONE pass (scan_lib.stlt_carry_snapshot)."""
+    BH, N, d, S, C = 2, 45, 8, 3, 16
+    x, lm, th, ur, ui = _inputs(rng, BH, N, d, S, jnp.float32)
+    h0 = jnp.asarray(rng.normal(size=(2, BH, S, d)), jnp.float32)
+    valid = jnp.asarray([29, 7], jnp.int32)
+    fn = (scan_lib.stlt_chunked if engine == "chunked"
+          else scan_lib.stlt_chunked_fused)
+
+    def per_row(xr, lm_, th_, ur_, ui_, hr, hi, q):
+        return fn(xr, lm_, th_, ur_, ui_, chunk=C, return_state=True,
+                  h0_re=hr, h0_im=hi, valid=q[None])
+
+    z, (h_re, h_im) = jax.vmap(per_row)(x, lm, th, ur, ui, h0[0], h0[1],
+                                        valid)
+    for b, q in enumerate([29, 7]):
+        z_ref, h_ref = _oracle_with_state(
+            x[b:b + 1, :q], lm[b:b + 1], th[b:b + 1], ur[b:b + 1],
+            ui[b:b + 1], (h0[0, b:b + 1] + 1j * h0[1, b:b + 1]))
+        np.testing.assert_allclose(np.asarray(z[b, :q]), np.asarray(z_ref[0]),
+                                   atol=1e-4, err_msg=f"{engine} row {b}")
+        np.testing.assert_allclose(np.asarray(h_re[b]),
+                                   np.asarray(h_ref.real[0]), atol=1e-4)
+        np.testing.assert_allclose(np.asarray(h_im[b]),
+                                   np.asarray(h_ref.imag[0]), atol=1e-4)
+
+
+def test_fused_engine_per_row_mixers(rng):
+    """Adaptive per-batch mixers u[B, S] fold into per-row fused operators —
+    parity with the per-node chunked engine (no fall-through)."""
+    B, N, d, S, C = 3, 40, 8, 4, 16
+    x = jnp.asarray(rng.normal(size=(B, N, d)), jnp.float32)
+    lm = jnp.asarray(-rng.uniform(0.005, 1.0, (S,)), jnp.float32)
+    th = jnp.asarray(-rng.uniform(0, 1.5, (S,)), jnp.float32)
+    u = jnp.asarray(rng.normal(size=(2, B, S)) / S, jnp.float32)
+    z_f = scan_lib.stlt_chunked_fused(x, lm, th, u[0], u[1], chunk=C)
+    z_c = scan_lib.stlt_chunked(x, lm, th, u[0], u[1], chunk=C)
+    np.testing.assert_allclose(np.asarray(z_f), np.asarray(z_c), atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# analytic parameter-grad VJP (DESIGN.md §3)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("chunk", [1, 7, 128])
+def test_analytic_param_grads_vs_oracle(rng, chunk):
+    """param_grads='analytic' (the default) == jax.grad of the sequential
+    definition oracle == the legacy per-node recompute, at degenerate/odd
+    chunk sizes."""
+    N = 37 if chunk != 128 else 129
+    x, lm, th, ur, ui = _inputs(rng, 2, N, 8, 3, jnp.float32)
+
+    def loss(mode, x, lm, th, ur, ui):
+        z = ops.stlt_scan(x, lm, th, ur, ui, chunk=chunk, interpret=True,
+                          block_d=8, param_grads=mode)
+        return (z ** 2).sum()
+
+    def loss_ref(x, lm, th, ur, ui):
+        return (ref_sequential(x, lm, th, ur, ui) ** 2).sum()
+
+    ga = jax.grad(functools.partial(loss, "analytic"),
+                  argnums=(0, 1, 2, 3, 4))(x, lm, th, ur, ui)
+    gc = jax.grad(functools.partial(loss, "recompute"),
+                  argnums=(0, 1, 2, 3, 4))(x, lm, th, ur, ui)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2, 3, 4))(x, lm, th, ur, ui)
+    for name, a, c, b in zip(["dx", "dlm", "dth", "dur", "dui"], ga, gc, gr):
+        denom = float(jnp.max(jnp.abs(b))) + 1e-9
+        assert float(jnp.max(jnp.abs(a - b))) / denom < 1e-3, (name, chunk)
+        assert float(jnp.max(jnp.abs(a - c))) / denom < 1e-3, (name, chunk)
+
+
+# ---------------------------------------------------------------------------
+# dispatch-count lockdown: a resumed prefill chunk is ONE kernel pass
+# ---------------------------------------------------------------------------
+
+
+def test_resumed_prefill_single_dispatch(rng, monkeypatch):
+    """A state-resumed ``stlt_prefill`` chunk on the pallas engine performs
+    exactly ONE kernel dispatch and ZERO legacy linearity-folding passes
+    (``stlt_carry_outputs``/``stlt_final_state``), with or without a
+    ``valid`` mask; the chunked/chunked_fused engines also stay
+    legacy-free."""
+    from repro.core import stlt as stlt_lib
+    from repro.core.stlt import STLTConfig
+    import repro.kernels.ops as kops
+    from repro.utils import trace_probe
+
+    kernel_log, legacy_log = [], []
+    monkeypatch.setattr(kops, "stlt_scan_kernel",
+                        trace_probe(kops.stlt_scan_kernel, kernel_log,
+                                    "kernel"))
+    for name in ("stlt_carry_outputs", "stlt_final_state"):
+        monkeypatch.setattr(scan_lib, name,
+                            trace_probe(getattr(scan_lib, name), legacy_log,
+                                        name))
+    monkeypatch.setattr(kops, "stlt_scan",
+                        functools.partial(kops.stlt_scan, interpret=True,
+                                          block_d=8))
+
+    B, N = 2, 24
+    x = jnp.asarray(rng.normal(size=(B, N, 32)), jnp.float32)
+    for engine in ("pallas", "chunked", "chunked_fused"):
+        cfg = STLTConfig(d_model=32, num_heads=4, num_nodes=8, chunk=16,
+                         engine=engine)
+        params = stlt_lib.init_stlt(jax.random.key(0), cfg)
+        _, state = stlt_lib.stlt_prefill(params, cfg, x)
+        kernel_log.clear(), legacy_log.clear()
+        # resumed, unmasked
+        stlt_lib.stlt_prefill(params, cfg, x, state=state)
+        # resumed, valid-masked padded tail (the two-shape serving chunk)
+        stlt_lib.stlt_prefill(params, cfg, x, state=state,
+                              valid=jnp.asarray([N, 5], jnp.int32))
+        if engine == "pallas":
+            assert len(kernel_log) == 2, kernel_log  # one dispatch per chunk
+        assert legacy_log == [], (engine, legacy_log)
 
 
 def test_kernel_inside_stlt_layer(rng):
