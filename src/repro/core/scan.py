@@ -169,6 +169,18 @@ def stlt_carry_snapshot(x_star, h_start_re, h_start_im, log_mag, theta, q,
     return h_re, h_im
 
 
+def stlt_window_state(x, h0_re, h0_im, log_mag, theta, q):
+    """Carry after the first ``q[b]`` tokens of a SHORT window ``x``
+    [batch, L, d] resumed from ``h0`` — the speculative-decode rollback
+    primitive (DESIGN.md §Serving). The whole window is ONE chunk, so the
+    chunk-start carry is ``h0`` itself and the accepted-length state is a
+    single closed-form snapshot select: no scan, no outputs, and a rejected
+    draft suffix (tokens >= q[b]) never touches the carry. ``q == 0`` rows
+    return ``h0`` exactly."""
+    return stlt_carry_snapshot(x, h0_re, h0_im, log_mag, theta, q,
+                               chunk=x.shape[-2])
+
+
 def _snapshot_from_select(xc, sel_re, sel_im, log_mag, theta, q, cstar,
                           chunk: int):
     """Shared epilogue of the jnp engines' gated in-scan select: gather row

@@ -543,6 +543,46 @@ def init_stlt_state(cfg: STLTConfig, batch: int, dtype=jnp.float32):
     }
 
 
+def stlt_state_at(params: dict, cfg: STLTConfig, x: jax.Array, state: dict,
+                  q: jax.Array) -> dict:
+    """Streaming state after the first ``q[b]`` tokens of window ``x``
+    [B, N, d], resumed from ``state`` — the speculative-decode rollback path
+    (DESIGN.md §Serving). No outputs, no scan: the exponential-window carry
+    is read straight out of the PR-5 closed-form snapshot
+    (``scan_lib.stlt_window_state`` with the window as one chunk), and the
+    hann ring is rebuilt by the same per-row gather ``stlt_prefill`` uses,
+    so ``q == 0`` rows return their old state exactly and a rejected draft
+    suffix (positions >= q[b]) never touches any carry."""
+    assert not cfg.bidirectional and cfg.mode == "factorized"
+    B, N, _ = x.shape
+    H = cfg.num_heads
+    if state is None:
+        state = init_stlt_state(cfg, B)
+    q = jnp.asarray(q, jnp.int32)
+    v = _split_heads(x @ params["w_v"], H)  # [B, H, N, dh]
+    if cfg.window == "hann":
+        W = cfg.hann_support
+        ctx = state["buf"][:, :, ::-1].astype(v.dtype)       # [B, H, W, dh]
+        ext = jnp.concatenate([ctx, v], axis=2)              # [B, H, W+N, dh]
+        # newest-first ring: slot w <- chronological index (W + q - 1 - w);
+        # indices never reach the rejected suffix (>= W + q)
+        idx = (W + q[:, None] - 1) - jnp.arange(W)[None, :]  # [B, W]
+        buf = jnp.take_along_axis(
+            ext.astype(jnp.float32), idx[:, None, :, None], axis=2)
+        return {"buf": buf, "pos": state["pos"] + q.astype(state["pos"].dtype)}
+    log_mag, theta, _, _ = _poles(params, cfg)
+    S, dh = cfg.num_nodes, cfg.head_dim
+    vb = v.reshape(B * H, N, dh).astype(jnp.float32)
+    lm = jnp.tile(log_mag, (B, 1))  # [B*H, S], H fastest
+    th = jnp.tile(theta, (B, 1))
+    h0r = state["h_re"].reshape(B * H, S, dh).astype(jnp.float32)
+    h0i = state["h_im"].reshape(B * H, S, dh).astype(jnp.float32)
+    h_re, h_im = scan_lib.stlt_window_state(
+        vb, h0r, h0i, lm, th, jnp.repeat(q, H))
+    return {"h_re": h_re.reshape(B, H, S, dh),
+            "h_im": h_im.reshape(B, H, S, dh)}
+
+
 def stlt_state_slice(state: dict, index, length: int = 1) -> dict:
     """Slice ``length`` sequences starting at ``index`` out of a batched
     STLT state (exponential h_re/h_im or hann ring buffer)."""

@@ -15,7 +15,9 @@ request and serves it through the prefix cache, reporting the prefill
 FLOPs skipped; ``--prefix-cache-max-mb`` switches the cache to bytes-aware
 eviction (attention KV entries dwarf O(S*d) STLT entries);
 ``--prefix-cache-ttl`` expires unpinned snapshots after that many idle
-ticks.
+ticks. ``--spec-k K`` turns greedy decode ticks into draft-verify rounds:
+K draft tokens (``--spec-draft ngram|nodes``) verified per tick in ONE
+``prefill_chunk``-shaped dispatch, emitting the exact plain-greedy stream.
 
 ``--mesh-data H`` serves through the multi-host ShardedServeEngine: the
 slot pool's batch axis is laid over a 1-D ("data",) mesh of H shards
@@ -81,6 +83,17 @@ def main(argv=None):
                          "(ShardedServeEngine; 0 = single-host engine)")
     ap.add_argument("--slots-per-host", type=int, default=0,
                     help="decode slots per host shard (default: --slots)")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="speculative decoding: verify k draft tokens per "
+                         "tick in one dispatch (0 = plain greedy decode; "
+                         "requires temperature 0, continuous mode)")
+    ap.add_argument("--spec-draft", default="ngram",
+                    choices=["ngram", "nodes"],
+                    help="draft source: prompt-lookup n-gram (host-side, "
+                         "zero dispatches) or node-subset self-draft")
+    ap.add_argument("--spec-draft-nodes", type=int, default=4,
+                    help="top-m Laplace nodes kept per head in the "
+                         "node-subset draft (--spec-draft nodes)")
     args = ap.parse_args(argv)
 
     cfg = paper_small() if args.arch is None else configs_lib.get_config(
@@ -98,6 +111,14 @@ def main(argv=None):
         # cache — warming it would waste a full prefill and report nonsense
         print("[serve] note: --prefill-chunk/--system-prompt-len apply to "
               "continuous mode only; ignored for --mode wave")
+    if args.spec_k and args.mode == "wave":
+        raise SystemExit("--spec-k applies to continuous mode only (the "
+                         "wave baseline decodes one token per tick)")
+    if args.spec_k and args.temperature > 0:
+        raise SystemExit("--spec-k requires greedy decoding (temperature 0): "
+                         "the verify rule is exact for argmax streams only")
+    spec_kw = dict(spec_k=args.spec_k, spec_draft=args.spec_draft,
+                   spec_draft_nodes=args.spec_draft_nodes)
     use_cache = args.system_prompt_len and args.mode == "continuous"
     cache = None
     cache_kw = dict(
@@ -130,7 +151,7 @@ def main(argv=None):
             params, cfg, n_hosts=args.mesh_data,
             slots_per_host=args.slots_per_host or args.slots,
             max_len=args.max_len, temperature=args.temperature,
-            prefill_chunk=args.prefill_chunk, prefix_cache=cache)
+            prefill_chunk=args.prefill_chunk, prefix_cache=cache, **spec_kw)
         print(f"[serve] sharded: {eng.n_hosts} hosts x "
               f"{eng.slots_per_host} slots over mesh {dict(eng.mesh.shape)}")
     else:
@@ -138,7 +159,8 @@ def main(argv=None):
             cache = PrefixCache(**cache_kw)
         eng = ServeEngine(params, cfg, max_len=args.max_len,
                           temperature=args.temperature,
-                          prefill_chunk=args.prefill_chunk, prefix_cache=cache)
+                          prefill_chunk=args.prefill_chunk, prefix_cache=cache,
+                          **spec_kw)
     rng = np.random.default_rng(0)
     sys_len = args.system_prompt_len if use_cache else 0
     sys_prompt = rng.integers(3, cfg.vocab, sys_len).astype(np.int32)
@@ -173,6 +195,13 @@ def main(argv=None):
     print(f"[serve] mode={args.mode}: {len(reqs)} requests, {n_tok} tokens in "
           f"{dt:.2f}s ({n_tok/max(dt,1e-9):.1f} tok/s), "
           f"latency p50={p50} p99={p99} ticks")
+    if args.spec_k:
+        ss = eng.spec_stats
+        acc = ss["accepted"] / max(ss["drafted"], 1)
+        print(f"[serve] spec k={ss['k']} ({args.spec_draft}): "
+              f"{ss['verify_calls']} verify dispatches for {ss['emitted']} "
+              f"tokens ({ss['emitted']/max(ss['verify_calls'],1):.2f} "
+              f"tok/dispatch), draft accept rate {100*acc:.1f}%")
     if args.mesh_data:
         per_host = {h: 0 for h in range(eng.n_hosts)}
         for s in stats.values():

@@ -501,6 +501,141 @@ def prefill_chunk(params: dict, cfg: ModelConfig, inputs: jax.Array, state: dict
     return logits, {"layers": new_states, "pos": pos + valid}
 
 
+def _block_state_at(params, cfg: ModelConfig, btype: str, x, state, q):
+    """One block's streaming state after the first ``q[b]`` tokens of window
+    ``x`` [B, L, d] — the rollback half of speculative verify. Outputs are
+    discarded; only the state at the per-row accepted length survives.
+
+    STLT's exponential window reads the carry straight out of the PR-5
+    closed-form snapshot (``scan.stlt_carry_snapshot`` with the window as a
+    single chunk) — a select, not a recompute. Every other mixer reuses its
+    PR-3 masked prefill (``valid=q``), whose contract already stops the
+    state at q[b] and makes q == 0 rows bit-exact no-ops."""
+    h = L.apply_norm(cfg.norm, params["norm1"], x)
+    old_state = state
+    if btype == "stlt":
+        state = stlt_lib.stlt_state_at(params["stlt"], cfg.stlt_config(), h,
+                                       state, q)
+    elif btype in ("attn", "local_attn"):
+        window = cfg.local_window if btype == "local_attn" else 0
+        _, state = attn_lib.prefill_chunk(
+            params["attn"], _attn_cfg(cfg, window), h, state, valid=q)
+    elif btype == "mlstm":
+        _, state = xlstm_lib.mlstm_prefill(params["cell"], cfg, h, state,
+                                           valid=q)
+    elif btype == "slstm":
+        _, state = xlstm_lib.slstm_prefill(params["cell"], cfg, h, state,
+                                           valid=q)
+    elif btype == "rglru":
+        _, state = rglru_lib.rglru_prefill(params["rec"], cfg, h, state,
+                                           valid=q)
+    else:
+        raise ValueError(f"spec_verify unsupported for block type {btype!r}")
+    keep = q > 0
+    return jax.tree_util.tree_map(
+        lambda n, o: jnp.where(
+            keep.reshape((-1,) + (1,) * (n.ndim - 1)), n.astype(o.dtype), o),
+        state, old_state)
+
+
+def spec_verify(params: dict, cfg: ModelConfig, inputs: jax.Array, state: dict,
+                valid_len: jax.Array):
+    """Speculative verify-accept-rollback: score a k-token draft window in
+    ONE dispatch and advance every layer's state by exactly the accepted
+    length (DESIGN.md §Serving).
+
+    ``inputs`` [B, L] is, per live row, ``[last emitted token, d_1 .. d_k]``
+    (L = k + 1) — the pending token the plain decode loop would feed next,
+    followed by the draft. ``valid_len`` [B] is 1 + (draft tokens to
+    consider) for live rows and 0 for rows that should be bit-exact no-ops
+    (padding rides along exactly as in the two-shape ``prefill_chunk``).
+
+    Returns ``(greedy [B, L], commit [B], new_state)``:
+
+    * ``greedy[b, j]`` — argmax of the model's logits after consuming
+      ``inputs[b, :j+1]``; because the parallel (prefill) form and the
+      recurrent (decode) form compute the same recurrence, ``greedy[b, 0]``
+      is the token plain greedy decode would emit this tick.
+    * ``commit[b]`` — 1 + the longest prefix of draft tokens matching the
+      greedy continuation, clamped to ``valid_len[b]`` (0 for no-op rows).
+      The engine emits ``greedy[b, :commit[b]]`` — all accepted drafts plus
+      the model's own "bonus" token at the first mismatch — so the emitted
+      stream is token-for-token what one-token-at-a-time greedy decode
+      would produce.
+    * ``new_state`` — state advanced by ``commit[b]`` tokens: the first
+      forward pass runs all L positions but KEEPS NO state; a second
+      state-only pass reads each layer's carry at the accepted length
+      (closed-form snapshot for STLT, masked prefill for the rest), so a
+      rejected draft suffix is never folded into any carry.
+    """
+    pos = state["pos"]
+    if pos.ndim == 0:  # legacy scalar-pos states
+        pos = jnp.full((inputs.shape[0],), pos, jnp.int32)
+    x = L.embed(params["embed"], inputs).astype(cfg.act_dtype)
+    B, N = x.shape[0], x.shape[1]
+    valid = jnp.asarray(valid_len, jnp.int32)
+    if cfg.mixer != "attention" or cfg.family in ("xlstm",):
+        pe = jax.vmap(
+            lambda p: L.sinusoidal_pe(N, cfg.d_model, offset=p, dtype=x.dtype)
+        )(pos)
+        x = x + pe
+
+    # Pass 1 — scoring: forward all L positions through every block,
+    # recording each block's INPUT window (what the state pass re-reads) and
+    # discarding the advanced states. Causality makes position j's output
+    # exact for j < valid[b] regardless of the padding beyond it.
+    xs_saved = []
+    for (btype, count), stacked, st in zip(
+        execution_plan(cfg), params["layers"], state["layers"]
+    ):
+        if count > 1:
+
+            def body(x_in, scanned):
+                layer_params, layer_state = scanned
+                x_out, _ = _block_prefill_chunk(
+                    layer_params, cfg, btype, x_in, layer_state)
+                return x_out, x_in
+
+            x, xs = jax.lax.scan(body, x, (stacked, st))
+        else:
+            xs = x
+            x, _ = _block_prefill_chunk(stacked, cfg, btype, x, st)
+        xs_saved.append(xs)
+
+    xf = L.apply_norm(cfg.norm, params["final_norm"], x)
+    if "lm_head" in params:
+        logits = xf @ params["lm_head"]["kernel"]
+    else:
+        logits = L.unembed(params["embed"], xf)
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    # Accept rule (greedy): take draft tokens while each one equals the
+    # model's argmax at the previous position; commit = accepted + 1 (the
+    # bonus token), clamped to the live window.
+    match = (inputs[:, 1:] == greedy[:, :-1]).astype(jnp.int32)
+    accepted = jnp.cumprod(match, axis=1).sum(axis=1)
+    commit = jnp.where(valid > 0, jnp.minimum(accepted + 1, valid), 0)
+
+    # Pass 2 — rollback: per-layer state at the accepted length.
+    new_states = []
+    for (btype, count), stacked, st, xs in zip(
+        execution_plan(cfg), params["layers"], state["layers"], xs_saved
+    ):
+        if count > 1:
+
+            def body2(carry, scanned):
+                layer_params, layer_state, x_in = scanned
+                return carry, _block_state_at(
+                    layer_params, cfg, btype, x_in, layer_state, commit)
+
+            _, new_s = jax.lax.scan(body2, 0, (stacked, st, xs))
+        else:
+            new_s = _block_state_at(stacked, cfg, btype, xs, st, commit)
+        new_states.append(new_s)
+
+    return greedy, commit, {"layers": new_states, "pos": pos + commit}
+
+
 def _block_step(params, cfg: ModelConfig, btype: str, x_t, state, pos):
     h = L.apply_norm(cfg.norm, params["norm1"], x_t[:, None, :])[:, 0]
     if btype in ("attn", "local_attn"):

@@ -157,18 +157,42 @@ class Scheduler:
         self.pending[slot] = False
 
 
+class _Host:
+    """One host's local serving state: its admission queue, its Scheduler
+    over the K local rows, and its in-flight chunked prefills. The unified
+    tick body (``ServeEngine._serve_ticks``) works over a list of these —
+    the single-host engine is the one-element case."""
+
+    def __init__(self, n_slots: int):
+        self.sched = Scheduler(n_slots)
+        self.queue: list = []            # (arrival, Request), FIFO
+        self.pending: dict[int, dict] = {}  # local slot -> in-flight prefill
+
+
 class ServeEngine:
     def __init__(self, params, cfg: ModelConfig, max_len: int = 4096,
                  temperature: float = 0.0, eos_id: int = -1, top_k: int = 0,
                  prefill_chunk: Optional[int] = None,
-                 prefix_cache: Optional[PrefixCache] = None):
+                 prefix_cache: Optional[PrefixCache] = None,
+                 spec_k: int = 0, spec_draft: str = "ngram",
+                 spec_draft_nodes: int = 4):
         """``prefill_chunk``: split prompts longer than this into chunks
         admitted one per tick, interleaved with decode (None/0 -> monolithic
         admission). ``prefix_cache``: reuse post-prefix streaming states
         across requests sharing a prompt prefix (full-prompt states are
         snapshotted after every completed prefill; chunk-boundary states
         only where they extend an existing cached prefix — warm_prefix
-        seeds first-contact system prompts)."""
+        seeds first-contact system prompts).
+
+        ``spec_k`` >= 1 turns on speculative decoding for continuous-mode
+        serving (greedy only): each decode tick drafts ``spec_k`` tokens
+        (``spec_draft``: "ngram" — prompt-lookup from the request's own
+        context, zero extra dispatches — or "nodes" — a small-S node-subset
+        self-draft keeping the top ``spec_draft_nodes`` Laplace nodes per
+        head) and scores them in ONE ``spec_verify`` dispatch, emitting
+        every accepted token plus the model's bonus token. Token output is
+        exactly the plain greedy stream; only the dispatch count changes.
+        """
         self.params = params
         self.cfg = cfg
         self.max_len = max_len
@@ -178,15 +202,28 @@ class ServeEngine:
         self.prefill_chunk = prefill_chunk or 0
         if self.prefill_chunk < 0:
             raise ValueError(f"prefill_chunk must be >= 0 (got {prefill_chunk})")
+        if spec_k < 0:
+            raise ValueError(f"spec_k must be >= 0 (got {spec_k})")
+        if spec_draft not in ("ngram", "nodes"):
+            raise ValueError(f"unknown spec_draft {spec_draft!r} "
+                             "(expected 'ngram' or 'nodes')")
+        self.spec_k = spec_k
+        self.spec_draft = spec_draft
+        self.spec_draft_nodes = spec_draft_nodes
+        # per-serve speculative accounting (verify dispatches, draft/accept
+        # token counts); reset at the top of every _serve_ticks run
+        self.spec_stats: dict = {}
         self.prefix_cache = prefix_cache
         self._prefill = jax.jit(partial(T.prefill, cfg=cfg, max_len=max_len))
         self._prefill_chunk = jax.jit(partial(T.prefill_chunk, cfg=cfg))
         self._step = jax.jit(partial(T.decode_step, cfg=cfg))
+        self._verify = jax.jit(partial(T.spec_verify, cfg=cfg))
         self._insert = jax.jit(partial(T.insert_slot, cfg=cfg))
         self._extract = jax.jit(partial(T.extract_slot, cfg=cfg))
         self._reset = jax.jit(partial(T.reset_slot, cfg=cfg, max_len=max_len))
         self._sample = jax.jit(partial(sample_slot_tokens, top_k=top_k))
         self._split = jax.jit(split_slot_keys)
+        self._fresh1 = None  # lazy pristine batch-1 template (_fresh_template)
         # only unbounded causal attention allocates a length-bounded cache;
         # windowed attention uses a ring and STLT/SSM states are O(1) in N
         self._length_bounded = any(
@@ -198,7 +235,10 @@ class ServeEngine:
         rng = rng if rng is not None else jax.random.key(0)
         logits, state = self._prefill(self.params, inputs=jnp.asarray(prompts))
         outs = []
-        tok = sample_token(logits, rng, self.temperature, self.top_k)
+        # split BEFORE the first sample: the carried chain must never reuse
+        # a key that already produced a token (key reuse correlates draws)
+        rng, sub = jax.random.split(rng)
+        tok = sample_token(logits, sub, self.temperature, self.top_k)
         outs.append(tok)
         for i in range(max_new_tokens - 1):
             rng, sub = jax.random.split(rng)
@@ -354,56 +394,157 @@ class ServeEngine:
             self._cache_insert(prompt, done, state, logits, pinned=True)
         return len(prompt) - offset
 
+    # ------------------------------------------------------- dispatch ops
+    # The unified tick body (_serve_ticks) is written against these
+    # overridable primitives; ShardedServeEngine swaps in its shard_map'd
+    # dispatches and routing without touching the loop itself.
+
+    # the [1, chunk] lone-pending fast path (and the host-side ops it rides
+    # on) is a single-host economy: the sharded engine always dispatches the
+    # full per-shard pool shape so its trace stays two-shape
+    _fast_single_prefill = True
+
+    def _fresh_template(self):
+        """Shared pristine batch-1 decode state (immutable pytree): seeds
+        fresh prefills and resets rows without re-paying the init dispatch."""
+        if self._fresh1 is None:
+            self._fresh1 = T.init_decode_state(self.cfg, 1, self.max_len)
+        return self._fresh1
+
+    def _ops_insert(self, pool, st1, g):
+        return self._insert(pool, st1, g)
+
+    def _ops_extract(self, pool, g):
+        return self._extract(pool, g)
+
+    def _ops_reset(self, pool, g):
+        return self._reset(pool, g)
+
+    def _ops_prefill_pool(self, params, toks, state, valid):
+        """Full-pool masked chunk dispatch ([B, chunk] + per-row valid)."""
+        return self._prefill_chunk(params, inputs=toks, state=state,
+                                   valid_len=valid)
+
+    def _ops_decode(self, params, tok, pool):
+        return self._step(params, token_t=tok, state=pool)
+
+    def _ops_verify(self, params, toks, valid, pool):
+        """ONE spec_verify dispatch: score + accept + rollback ([B, k+1])."""
+        return self._verify(params, inputs=toks, state=pool, valid_len=valid)
+
+    def _ops_lookup(self, prompt, h: int):
+        return self._lookup_prefix(prompt)
+
+    def _ops_cache_insert(self, prompt, n, state, logits, h: int):
+        self._cache_insert(prompt, n, state, logits)
+
+    def _route_arrivals(self, hosts, queue, tick):
+        """Move every arrived request into a host queue (single host: FIFO
+        passthrough; the sharded engine routes least-loaded)."""
+        while queue and queue[0][0] <= tick:
+            hosts[0].queue.append(queue.pop(0))
+
+    def _make_draft(self, n_slots: int):
+        if not self.spec_k:
+            return None
+        from repro.serving import speculative
+        if self.spec_draft == "nodes":
+            return speculative.NodeDraft(self, self.spec_k, n_slots,
+                                         self.spec_draft_nodes)
+        return speculative.NGramDraft(self.spec_k, n_slots)
+
     # ------------------------------------------------------------- continuous
     def _serve_continuous(self, requests, slots, prompt_len, arrivals,
                           rng_seed, return_stats, chunk_size, coalesce=True):
+        return self._serve_ticks([_Host(slots)], requests, prompt_len,
+                                 arrivals, rng_seed, return_stats, chunk_size,
+                                 coalesce)
+
+    def _serve_ticks(self, hosts, requests, prompt_len, arrivals, rng_seed,
+                     return_stats, chunk_size, coalesce=True):
+        """THE serve tick body (DESIGN.md §Serving) — one implementation
+        driven by both engines. ``hosts`` is a list of per-host local state
+        (queue + Scheduler + pending prefills) over contiguous row ranges of
+        one global slot pool (global slot g = h*K + local); all device work
+        goes through the ``_ops_*`` dispatch primitives, which is the ONLY
+        thing the sharded engine overrides. Per tick, in order: route
+        arrivals -> per-host admission -> at most one masked prefill
+        dispatch -> one decode step (or, with ``spec_k``, one draft-verify
+        round) -> release/reset finished rows."""
         cfg = self.cfg
-        sched = Scheduler(slots)
+        H = len(hosts)
+        K = hosts[0].sched.n_slots
+        B = H * K
         queue = self._queue(requests, arrivals, prompt_len)
         results: dict[int, list[int]] = {}
 
-        pool = T.init_decode_state(cfg, slots, self.max_len)
+        spec = self._make_draft(B)
+        self.spec_stats = {"verify_calls": 0, "drafted": 0, "accepted": 0,
+                           "emitted": 0, "k": self.spec_k}
+        if spec is not None:
+            if self.temperature and self.temperature > 0:
+                raise ValueError(
+                    "speculative decoding is greedy-only: the accept rule "
+                    f"compares argmax tokens (temperature={self.temperature})")
+            for r in requests:
+                if r.temperature:
+                    raise ValueError(
+                        f"request {r.id}: speculative decoding is greedy-only "
+                        f"(temperature={r.temperature})")
+
+        pool = T.init_decode_state(cfg, B, self.max_len)
         # coalesced chunked admission: pending prefills live in a SECOND
         # slot-shaped pool so one batched masked prefill_chunk dispatch
-        # ([slots, chunk] + per-row valid_len) advances every co-pending
+        # ([B, chunk] + per-row valid_len) advances every co-pending
         # admission per tick; non-pending rows ride along with valid_len=0
         # (bit-exact no-ops). Lazily built on the first chunked admission.
         prefill_pool = None
-        # one shared pristine batch-1 state for legacy (coalesce=False)
-        # chunked admissions: jax pytrees are immutable, so every pending
-        # request can seed from the same template without re-paying the
-        # op-by-op init dispatch
-        fresh1 = None
-        tok = np.zeros(slots, np.int32)
-        temps = np.full(slots, self.temperature, np.float32)
+        tok = np.zeros(B, np.int32)
+        temps = np.full(B, self.temperature, np.float32)
         base_key = jax.random.key(rng_seed)
-        keys = jax.random.split(base_key, slots)
-        # slot -> in-flight chunked prefill: prompt, done offset, carried state
-        pending: dict[int, dict] = {}
+        keys = jax.random.split(base_key, B)
         tick = 0
 
-        def promote(s, ent, logits1, st1, tick):
-            """Prefill complete: sample the first token and go live."""
+        def any_live():
+            return any(h_.sched.live.any() for h_ in hosts)
+
+        def any_pending():
+            return any(h_.pending for h_ in hosts)
+
+        def any_queued():
+            return any(h_.queue for h_ in hosts)
+
+        def promote(h, local, ent, logits1, st1):
+            """Prefill complete on host h: sample the first token, go live."""
             nonlocal pool, keys
+            g = h * K + local
+            sched = hosts[h].sched
             req = ent["req"]
             rkey = jax.random.fold_in(base_key, req.id)
+            # split BEFORE sampling/storing: k0 is consumed by the first
+            # token, the carried stream continues from the UNUSED half — no
+            # key is ever both consumed and carried (key reuse would
+            # correlate the first two draws of every sampled request)
+            carry, k0 = jax.random.split(rkey)
             temp = self.temperature if req.temperature is None else req.temperature
-            t0 = int(sample_token(logits1, rkey, temp, self.top_k)[0])
-            pool = self._insert(pool, st1, s)
-            keys = keys.at[s].set(rkey)
-            tok[s] = t0
-            temps[s] = temp
-            sched.activate(s, tick)
+            t0 = int(sample_token(logits1, k0, temp, self.top_k)[0])
+            pool = self._ops_insert(pool, st1, g)
+            keys = keys.at[g].set(carry)
+            tok[g] = t0
+            temps[g] = temp
+            sched.activate(local, tick)
             results[req.id] = [t0]
             sched.stats[req.id]["token_walls"].append(time.perf_counter())
-            sched.emitted[s] = 1
-            if sched.emitted[s] >= sched.budgets[s] or t0 == self.eos_id:
-                sched.release(s, tick)       # prefill-only request
-                pool = self._reset(pool, s)
+            sched.emitted[local] = 1
+            if sched.emitted[local] >= sched.budgets[local] or t0 == self.eos_id:
+                sched.release(local, tick)   # prefill-only request
+                pool = self._ops_reset(pool, g)
+            elif spec is not None:
+                spec.on_promote(g, ent["prompt"], t0)
 
-        while queue or pending or sched.live.any():
+        while queue or any_queued() or any_pending() or any_live():
             tick_was = tick
-            if (not sched.live.any() and not pending
+            if (not any_live() and not any_pending() and not any_queued()
                     and queue and queue[0][0] > tick):
                 tick = queue[0][0]  # idle: fast-forward to the next arrival
                 # sweep the TTL clock across the jump BEFORE this tick's
@@ -413,106 +554,130 @@ class ServeEngine:
                 self._cache_tick(tick - tick_was)
                 tick_was = tick
 
-            # --- admission: assign arrived requests to free slots -----------
-            for s in sched.free_slots():
-                if not queue or queue[0][0] > tick:
-                    break
-                arrival, req = queue.pop(0)
-                prompt = self._padded(req.prompt, prompt_len)
-                offset, pstate, plogits = self._lookup_prefix(prompt)
-                remaining = len(prompt) - offset
-                # per-request boundary snapshots are only worth caching when
-                # they EXTEND a known shared prefix (a unique prompt's
-                # boundaries have ~zero hit probability and would churn the
-                # LRU); warm_prefix covers first-contact system prompts
-                ent = {"req": req, "prompt": prompt, "done": offset,
-                       "state": pstate, "resumed": offset > 0}
-                sched.hold(s, req, arrival, tick,
-                           prompt_tokens=len(prompt), cached_tokens=offset)
-                if remaining == 0:
-                    # full-prompt cache hit: the stored last-token logits
-                    # stand in for the skipped prefill
-                    promote(s, ent, plogits, pstate, tick)
-                elif chunk_size and coalesce:
-                    # incremental admission via the batched dispatch below
-                    # (which promotes a <= one-chunk remainder within this
-                    # same tick): seed the slot's prefill-pool row
-                    if prefill_pool is None:
-                        prefill_pool = T.init_decode_state(cfg, slots, self.max_len)
-                    if pstate is None:
-                        prefill_pool = self._reset(prefill_pool, s)
-                    else:
-                        prefill_pool = self._insert(prefill_pool, pstate, s)
-                    del ent["state"]  # lives in the prefill pool
-                    pending[s] = ent
-                elif chunk_size:
-                    # legacy one-request-per-tick admission (batch-1 states)
-                    if pstate is None:
-                        if fresh1 is None:
-                            fresh1 = T.init_decode_state(cfg, 1, self.max_len)
-                        ent["state"] = fresh1
-                    pending[s] = ent
-                else:  # monolithic admission
-                    if pstate is None:
-                        logits1, st1 = self._prefill(
-                            self.params, inputs=jnp.asarray(prompt[None]))
-                    else:
-                        logits1, st1 = self._prefill_chunk(
-                            self.params,
-                            inputs=jnp.asarray(prompt[None, offset:]),
-                            state=pstate)
-                    self._cache_insert(prompt, len(prompt), st1, logits1)
-                    promote(s, ent, logits1, st1, tick)
+            self._route_arrivals(hosts, queue, tick)
+
+            # --- per-host admission into free local rows --------------------
+            for h, host in enumerate(hosts):
+                sched = host.sched
+                for local in sched.free_slots():
+                    if not host.queue:
+                        break
+                    arrival, req = host.queue.pop(0)
+                    g = h * K + local
+                    prompt = self._padded(req.prompt, prompt_len)
+                    offset, pstate, plogits = self._ops_lookup(prompt, h)
+                    remaining = len(prompt) - offset
+                    # per-request boundary snapshots are only worth caching
+                    # when they EXTEND a known shared prefix (a unique
+                    # prompt's boundaries have ~zero hit probability and
+                    # would churn the LRU); warm_prefix covers first-contact
+                    # system prompts
+                    ent = {"req": req, "prompt": prompt, "done": offset,
+                           "resumed": offset > 0}
+                    sched.hold(local, req, arrival, tick,
+                               prompt_tokens=len(prompt), cached_tokens=offset)
+                    sched.stats[req.id]["host"] = h
+                    if remaining == 0:
+                        # full-prompt cache hit: the stored last-token logits
+                        # stand in for the skipped prefill
+                        promote(h, local, ent, plogits, pstate)
+                    elif chunk_size and coalesce:
+                        # incremental admission via the batched dispatch
+                        # below (which promotes a <= one-chunk remainder
+                        # within this same tick): seed the slot's
+                        # prefill-pool row
+                        if prefill_pool is None:
+                            prefill_pool = T.init_decode_state(cfg, B, self.max_len)
+                        if pstate is None:
+                            prefill_pool = self._ops_insert(
+                                prefill_pool, self._fresh_template(), g)
+                        else:
+                            prefill_pool = self._ops_insert(prefill_pool, pstate, g)
+                        host.pending[local] = ent
+                    elif chunk_size:
+                        # legacy one-request-per-tick admission (batch-1
+                        # states; single-host only — the sharded engine
+                        # always coalesces)
+                        ent["state"] = (pstate if pstate is not None
+                                        else self._fresh_template())
+                        host.pending[local] = ent
+                    else:  # monolithic admission (single-host only)
+                        if pstate is None:
+                            logits1, st1 = self._prefill(
+                                self.params, inputs=jnp.asarray(prompt[None]))
+                        else:
+                            logits1, st1 = self._prefill_chunk(
+                                self.params,
+                                inputs=jnp.asarray(prompt[None, offset:]),
+                                state=pstate)
+                        self._ops_cache_insert(prompt, len(prompt), st1,
+                                               logits1, h)
+                        promote(h, local, ent, logits1, st1)
 
             # --- mixed step: ONE masked chunk dispatch advances every pending
             # admission (coalesce=True). Two static shapes only: a lone
             # pending slot advances at [1, chunk] (the warm_prefix shape —
-            # no point paying slots-x the FLOPs for one row), co-pending
-            # slots coalesce into the full [slots, chunk] pool dispatch.
-            if pending and coalesce and len(pending) == 1 and slots > 1:
-                s, = pending
-                ent = pending[s]
+            # no point paying B-x the FLOPs for one row; single-host only),
+            # co-pending slots coalesce into the full [B, chunk] dispatch
+            # ([K, chunk] per shard).
+            n_pending = sum(len(h_.pending) for h_ in hosts)
+            if (n_pending == 1 and coalesce and B > 1
+                    and self._fast_single_prefill):
+                h, host = next((h_i, h_) for h_i, h_ in enumerate(hosts)
+                               if h_.pending)
+                local, = host.pending
+                ent = host.pending[local]
+                g = h * K + local
                 n = min(chunk_size, len(ent["prompt"]) - ent["done"])
                 buf = np.zeros((1, chunk_size), np.int32)
                 buf[0, :n] = ent["prompt"][ent["done"]:ent["done"] + n]
-                st1 = self._extract(prefill_pool, s)
+                st1 = self._ops_extract(prefill_pool, g)
                 logits1, st1 = self._prefill_chunk(
                     self.params, inputs=jnp.asarray(buf), state=st1,
                     valid_len=jnp.asarray([n], np.int32))
                 ent["done"] += n
                 finished = ent["done"] == len(ent["prompt"])
                 if ent["resumed"] or finished:
-                    self._cache_insert(ent["prompt"], ent["done"], st1, logits1)
+                    self._ops_cache_insert(ent["prompt"], ent["done"], st1,
+                                           logits1, h)
                 if finished:
-                    del pending[s]
-                    promote(s, ent, logits1, st1, tick)
+                    del host.pending[local]
+                    promote(h, local, ent, logits1, st1)
                 else:
-                    prefill_pool = self._insert(prefill_pool, st1, s)
-            elif pending and coalesce:
-                chunk_tok = np.zeros((slots, chunk_size), np.int32)
-                valid = np.zeros((slots,), np.int32)
-                for s, ent in pending.items():
-                    n = min(chunk_size, len(ent["prompt"]) - ent["done"])
-                    chunk_tok[s, :n] = ent["prompt"][ent["done"]:ent["done"] + n]
-                    valid[s] = n
-                logits_all, prefill_pool = self._prefill_chunk(
-                    self.params, inputs=jnp.asarray(chunk_tok),
-                    state=prefill_pool, valid_len=jnp.asarray(valid))
-                for s in list(pending):
-                    ent = pending[s]
-                    ent["done"] += int(valid[s])
-                    finished = ent["done"] == len(ent["prompt"])
-                    if ent["resumed"] or finished:
-                        st1 = self._extract(prefill_pool, s)
-                        self._cache_insert(ent["prompt"], ent["done"], st1,
-                                           logits_all[s:s + 1])
-                    if finished:
-                        del pending[s]
-                        promote(s, ent, logits_all[s:s + 1], st1, tick)
-            # --- ...or one batch-1 chunk per pending slot (legacy path) -----
-            elif pending:
-                for s in list(pending):
-                    ent = pending[s]
+                    prefill_pool = self._ops_insert(prefill_pool, st1, g)
+            elif n_pending and coalesce:
+                chunk_tok = np.zeros((B, chunk_size), np.int32)
+                valid = np.zeros((B,), np.int32)
+                for h, host in enumerate(hosts):
+                    for local, ent in host.pending.items():
+                        g = h * K + local
+                        n = min(chunk_size, len(ent["prompt"]) - ent["done"])
+                        chunk_tok[g, :n] = ent["prompt"][ent["done"]:ent["done"] + n]
+                        valid[g] = n
+                logits_all, prefill_pool = self._ops_prefill_pool(
+                    self.params, jnp.asarray(chunk_tok), prefill_pool,
+                    jnp.asarray(valid))
+                for h, host in enumerate(hosts):
+                    for local in list(host.pending):
+                        ent = host.pending[local]
+                        g = h * K + local
+                        ent["done"] += int(valid[g])
+                        finished = ent["done"] == len(ent["prompt"])
+                        if ent["resumed"] or finished:
+                            # boundary snapshot -> the owning host's shard
+                            st1 = self._ops_extract(prefill_pool, g)
+                            self._ops_cache_insert(
+                                ent["prompt"], ent["done"], st1,
+                                logits_all[g:g + 1], h)
+                        if finished:
+                            del host.pending[local]
+                            promote(h, local, ent, logits_all[g:g + 1], st1)
+            # --- ...or one batch-1 chunk per pending slot (legacy path,
+            # single-host only) ---------------------------------------------
+            elif n_pending:
+                host = hosts[0]
+                for local in list(host.pending):
+                    ent = host.pending[local]
                     n = min(chunk_size, len(ent["prompt"]) - ent["done"])
                     logits1, ent["state"] = self._prefill_chunk(
                         self.params,
@@ -520,44 +685,115 @@ class ServeEngine:
                         state=ent["state"])
                     ent["done"] += n
                     if ent["resumed"] or ent["done"] == len(ent["prompt"]):
-                        self._cache_insert(ent["prompt"], ent["done"],
-                                           ent["state"], logits1)
+                        self._ops_cache_insert(ent["prompt"], ent["done"],
+                                               ent["state"], logits1, 0)
                     if ent["done"] == len(ent["prompt"]):
-                        del pending[s]
-                        promote(s, ent, logits1, ent["state"], tick)
+                        del host.pending[local]
+                        promote(0, local, ent, logits1, ent["state"])
 
             # release the prefill pool once every admission has drained (it
             # doubles resident state — a full second KV pool for attention
             # archs); the next chunked admission lazily rebuilds it
-            if prefill_pool is not None and not pending:
+            if prefill_pool is not None and not any_pending():
                 prefill_pool = None
 
-            # --- ...plus one batched decode step for the whole pool ---------
-            if sched.live.any():
+            # --- ...plus one decode step (or draft-verify round) ------------
+            if any_live() and spec is not None:
+                pool, tick = self._spec_tick(hosts, spec, pool, tok, results,
+                                             tick)
+            elif any_live():
                 keys, subs = self._split(keys)
-                logits, pool = self._step(self.params, token_t=jnp.asarray(tok),
-                                          state=pool)
+                logits, pool = self._ops_decode(self.params, jnp.asarray(tok),
+                                                pool)
                 nxt = np.array(self._sample(logits, subs, jnp.asarray(temps)))
                 tick += 1
-
-                new_live, new_emitted = advance_slots(
-                    nxt, sched.live, sched.emitted, sched.budgets, self.eos_id)
                 now = time.perf_counter()
-                for s in np.flatnonzero(sched.live):
-                    results[sched.req[s].id].append(int(nxt[s]))
-                    sched.stats[sched.req[s].id]["token_walls"].append(now)
-                sched.emitted = new_emitted
-                for s in np.flatnonzero(sched.live & ~new_live):
-                    sched.release(s, tick)
-                    pool = self._reset(pool, s)
+                for h, host in enumerate(hosts):
+                    sched = host.sched
+                    row = nxt[h * K:(h + 1) * K]
+                    new_live, new_emitted = advance_slots(
+                        row, sched.live, sched.emitted, sched.budgets,
+                        self.eos_id)
+                    for local in np.flatnonzero(sched.live):
+                        rid = sched.req[local].id
+                        results[rid].append(int(row[local]))
+                        sched.stats[rid]["token_walls"].append(now)
+                    sched.emitted = new_emitted
+                    for local in np.flatnonzero(sched.live & ~new_live):
+                        sched.release(local, tick)
+                        pool = self._ops_reset(pool, h * K + local)
                 tok = nxt
-            elif pending:
+            elif any_pending():
                 tick += 1  # prefill-only tick (nothing decoding yet)
 
             self._cache_tick(tick - tick_was)
 
         out = {rid: np.array(toks, np.int32) for rid, toks in results.items()}
-        return (out, sched.stats) if return_stats else out
+        if not return_stats:
+            return out
+        stats: dict[int, dict] = {}
+        for host in hosts:
+            stats.update(host.sched.stats)
+        return out, stats
+
+    # ------------------------------------------------------------ speculative
+    def _spec_tick(self, hosts, spec, pool, tok, results, tick):
+        """One draft-verify-accept round (DESIGN.md §Serving): draft k
+        tokens per live row, score the whole window in ONE ``spec_verify``
+        dispatch, emit every accepted token plus the model's bonus token,
+        and roll per-row state to exactly the accepted length. Token output
+        is the plain greedy stream — only the dispatch count changes."""
+        K = hosts[0].sched.n_slots
+        B = len(hosts) * K
+        L = self.spec_k + 1
+        live_mask = np.concatenate([h_.sched.live for h_ in hosts])
+        inputs = np.zeros((B, L), np.int32)
+        inputs[:, 0] = tok
+        inputs[:, 1:] = spec.propose(tok, live_mask)
+        # cap the window at the remaining budget so a row never consumes
+        # tokens past prompt+max_new_tokens (the dead-row valid=0 contract
+        # handles everything else); live rows always get >= 1
+        valid = np.zeros(B, np.int32)
+        for h, host in enumerate(hosts):
+            sched = host.sched
+            for local in np.flatnonzero(sched.live):
+                remaining = int(sched.budgets[local] - sched.emitted[local])
+                valid[h * K + local] = min(L, remaining)
+        greedy, commit, pool = self._ops_verify(
+            self.params, jnp.asarray(inputs), jnp.asarray(valid), pool)
+        greedy = np.asarray(greedy)
+        commit = np.asarray(commit)
+        tick += 1
+        now = time.perf_counter()
+        sstats = self.spec_stats
+        sstats["verify_calls"] += 1
+        for h, host in enumerate(hosts):
+            sched = host.sched
+            for local in np.flatnonzero(sched.live):
+                g = h * K + local
+                rid = sched.req[local].id
+                sstats["drafted"] += int(valid[g]) - 1
+                sstats["accepted"] += int(commit[g]) - 1
+                emitted_now = []
+                for t in greedy[g, :commit[g]]:
+                    emitted_now.append(int(t))
+                    if int(t) == self.eos_id:
+                        break  # tokens past EOS are never emitted
+                results[rid].extend(emitted_now)
+                sched.stats[rid]["token_walls"].extend([now] * len(emitted_now))
+                sched.emitted[local] += len(emitted_now)
+                sstats["emitted"] += len(emitted_now)
+                if (sched.emitted[local] >= sched.budgets[local]
+                        or emitted_now[-1] == self.eos_id):
+                    sched.release(local, tick)
+                    pool = self._ops_reset(pool, g)
+                else:
+                    tok[g] = emitted_now[-1]
+                    spec.on_emit(g, emitted_now)
+        # model-draft bookkeeping: roll the draft pool forward by exactly
+        # the committed tokens (no-op for the host-side n-gram draft)
+        spec.commit(inputs, commit)
+        return pool, tick
 
     def _cache_tick(self, n: int):
         """Advance the prefix cache's TTL clock by ``n`` scheduler ticks."""
@@ -603,16 +839,22 @@ class ServeEngine:
                  for _, r in wave], np.float32)
             keys = jnp.stack(
                 [jax.random.fold_in(base_key, r.id) for _, r in wave])
+            # split before the first sample — the same carry/consume
+            # discipline as promote(), so per-request streams stay identical
+            # across wave/continuous/sharded scheduling
+            keys, subs = self._split(keys)
             logits, state = self._prefill(self.params, inputs=jnp.asarray(prompts))
-            tok = np.array(self._sample(logits, keys, jnp.asarray(temps)))
+            tok = np.array(self._sample(logits, subs, jnp.asarray(temps)))
             for i, (arrival, r) in enumerate(wave):
                 sched.bind(i, r, arrival, tick, prompt_tokens=len(r.prompt))
                 results[r.id] = []
             while sched.live.any():
                 new_live, new_emitted = advance_slots(
                     tok, sched.live, sched.emitted, sched.budgets, self.eos_id)
+                now = time.perf_counter()
                 for i in np.flatnonzero(sched.live):
                     results[sched.req[i].id].append(int(tok[i]))
+                    sched.stats[sched.req[i].id]["token_walls"].append(now)
                 sched.emitted = new_emitted
                 for i in np.flatnonzero(sched.live & ~new_live):
                     sched.release(i, tick)

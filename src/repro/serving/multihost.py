@@ -46,7 +46,6 @@ parity vs the single-host engine, under forced host devices).
 """
 from __future__ import annotations
 
-import time
 from typing import Optional
 
 import jax
@@ -57,20 +56,9 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.base import ModelConfig
 from repro.distributed.sharding import decode_state_specs
 from repro.models import transformer as T
-from repro.serving.engine import Scheduler, ServeEngine
+from repro.serving.engine import Scheduler, ServeEngine, _Host
 from repro.serving.prefix_cache import PrefixCache, ReplicatedPrefixCache
-from repro.serving.sampler import advance_slots, sample_token
 from repro.utils import shard_map
-
-
-class _Host:
-    """One host's local serving state: its admission queue, its Scheduler
-    over the K local rows, and its in-flight chunked prefills."""
-
-    def __init__(self, n_slots: int):
-        self.sched = Scheduler(n_slots)
-        self.queue: list = []            # (arrival, Request), FIFO
-        self.pending: dict[int, dict] = {}  # local slot -> in-flight prefill
 
 
 def make_serve_mesh(n_hosts: int):
@@ -103,7 +91,9 @@ class ShardedServeEngine(ServeEngine):
                  n_hosts: Optional[int] = None, slots_per_host: int = 4,
                  max_len: int = 4096, temperature: float = 0.0,
                  eos_id: int = -1, top_k: int = 0, prefill_chunk: int = 256,
-                 prefix_cache: Optional[ReplicatedPrefixCache] = None):
+                 prefix_cache: Optional[ReplicatedPrefixCache] = None,
+                 spec_k: int = 0, spec_draft: str = "ngram",
+                 spec_draft_nodes: int = 4):
         if prefill_chunk < 1:
             raise ValueError(
                 "ShardedServeEngine admits through the chunked two-shape "
@@ -116,7 +106,9 @@ class ShardedServeEngine(ServeEngine):
                 "ReplicatedPrefixCache (or None), not a bare PrefixCache")
         super().__init__(params, cfg, max_len=max_len, temperature=temperature,
                          eos_id=eos_id, top_k=top_k, prefill_chunk=prefill_chunk,
-                         prefix_cache=prefix_cache)
+                         prefix_cache=prefix_cache, spec_k=spec_k,
+                         spec_draft=spec_draft,
+                         spec_draft_nodes=spec_draft_nodes)
         self.mesh = mesh if mesh is not None else make_serve_mesh(
             n_hosts if n_hosts is not None else jax.device_count())
         if "data" not in self.mesh.axis_names:
@@ -146,6 +138,13 @@ class ShardedServeEngine(ServeEngine):
             return T.prefill_chunk(params, cfg=cfg, inputs=toks, state=state,
                                    valid_len=valid)
 
+        # speculative verify is row-independent like prefill_chunk (PR-3
+        # masked contract + per-row accepted-length rollback), so it shards
+        # the same way: each host scores its own [K, k+1] window
+        def _verify_body(params, toks, state, valid):
+            return T.spec_verify(params, cfg=cfg, inputs=toks, state=state,
+                                 valid_len=valid)
+
         # slot splicing by global id: the owner shard selects the update in,
         # everyone else passes their rows through — no communication
         def _owner(slot):
@@ -173,6 +172,10 @@ class ShardedServeEngine(ServeEngine):
             _prefill_body, mesh_,
             in_specs=(rep, P("data"), spec, P("data")),
             out_specs=(P("data"), spec)))
+        self._verify_sh = jax.jit(shard_map(
+            _verify_body, mesh_,
+            in_specs=(rep, P("data"), spec, P("data")),
+            out_specs=(P("data"), P("data"), spec)))
         self._insert_sh = jax.jit(shard_map(
             _insert_body, mesh_, in_specs=(spec, rep, rep), out_specs=spec))
         self._extract_sh = jax.jit(shard_map(
@@ -180,18 +183,54 @@ class ShardedServeEngine(ServeEngine):
         # pristine batch-1 template: seeds fresh prefills and resets rows
         self._fresh1 = T.init_decode_state(cfg, 1, max_len)
 
-    # ----------------------------------------------------- per-shard cache
-    def _lookup_shard(self, prompt: np.ndarray, shard: int):
+    # -------------------------------------------- dispatch-op overrides
+    # The tick body itself lives in ServeEngine._serve_ticks — the sharded
+    # engine swaps in its shard_map'd dispatches, per-shard cache routing,
+    # and least-loaded arrival routing, and inherits everything else.
+
+    # never take the [1, chunk] lone-pending shortcut: the sharded trace
+    # stays two-shape ([K, chunk] serve dispatches + the host-local
+    # [1, chunk] warm_prefix shape) regardless of admission patterns
+    _fast_single_prefill = False
+
+    def _ops_insert(self, pool, st1, g):
+        return self._insert_sh(pool, st1, g)
+
+    def _ops_extract(self, pool, g):
+        return self._extract_sh(pool, g)
+
+    def _ops_reset(self, pool, g):
+        return self._insert_sh(pool, self._fresh1, g)
+
+    def _ops_prefill_pool(self, params, toks, state, valid):
+        return self._prefill_sh(params, toks, state, valid)
+
+    def _ops_decode(self, params, tok, pool):
+        return self._step_sh(params, tok, pool)
+
+    def _ops_verify(self, params, toks, valid, pool):
+        return self._verify_sh(params, toks, pool, valid)
+
+    def _ops_lookup(self, prompt: np.ndarray, h: int):
         if self.prefix_cache is None:
             return 0, None, None
-        entry = self.prefix_cache.lookup(prompt, shard=shard)
+        entry = self.prefix_cache.lookup(prompt, shard=h)
         if entry is None:
             return 0, None, None
         return entry.n_tokens, entry.state, entry.logits
 
-    def _cache_insert_shard(self, prompt, n: int, state, logits, shard: int):
+    def _ops_cache_insert(self, prompt, n: int, state, logits, h: int):
         if self.prefix_cache is not None and n > 0:
-            self.prefix_cache.insert(prompt[:n], state, logits, shard=shard)
+            self.prefix_cache.insert(prompt[:n], state, logits, shard=h)
+
+    def _route_arrivals(self, hosts, queue, tick):
+        """Deal arrivals to the least-loaded host's queue (deterministic:
+        queued + occupied, lowest host id wins ties)."""
+        while queue and queue[0][0] <= tick:
+            arrival, req = queue.pop(0)
+            load = [len(h_.queue) + int(h_.sched.live.sum())
+                    + int(h_.sched.pending.sum()) for h_ in hosts]
+            hosts[int(np.argmin(load))].queue.append((arrival, req))
 
     # -------------------------------------------------------------- serve
     def serve(self, requests: list, arrivals=None, rng_seed: int = 0,
@@ -200,166 +239,15 @@ class ShardedServeEngine(ServeEngine):
         ``{request_id: tokens}`` (plus per-request stats — each carrying the
         ``host`` that served it — when ``return_stats``).
 
-        Scheduling: arrivals are dealt to the least-loaded host's queue;
+        Scheduling (the shared ``_serve_ticks`` body with this engine's
+        dispatch ops): arrivals are dealt to the least-loaded host's queue;
         each host admits from its own queue into its own rows; every tick
         runs at most ONE ``[n_slots, chunk]`` masked prefill dispatch (all
         hosts' pending admissions advance together) and ONE ``[n_slots]``
-        decode step. Under greedy decoding token outputs are exact vs the
-        single-host engine regardless of the routing."""
-        cfg = self.cfg
-        H, K, B = self.n_hosts, self.slots_per_host, self.n_slots
-        chunk_size = self.prefill_chunk
-        queue = self._queue(requests, arrivals, prompt_len)
-        hosts = [_Host(K) for _ in range(H)]
-        results: dict[int, list[int]] = {}
-
-        pool = T.init_decode_state(cfg, B, self.max_len)
-        prefill_pool = None
-        tok = np.zeros(B, np.int32)
-        temps = np.full(B, self.temperature, np.float32)
-        base_key = jax.random.key(rng_seed)
-        keys = jax.random.split(base_key, B)
-        tick = 0
-
-        def any_live():
-            return any(h.sched.live.any() for h in hosts)
-
-        def any_pending():
-            return any(h.pending for h in hosts)
-
-        def any_queued():
-            return any(h.queue for h in hosts)
-
-        def promote(h, local, ent, logits1, st1):
-            """Prefill complete on host h: sample the first token, go live."""
-            nonlocal pool, keys
-            g = h * K + local
-            sched = hosts[h].sched
-            req = ent["req"]
-            rkey = jax.random.fold_in(base_key, req.id)
-            temp = self.temperature if req.temperature is None else req.temperature
-            t0 = int(sample_token(logits1, rkey, temp, self.top_k)[0])
-            pool = self._insert_sh(pool, st1, g)
-            keys = keys.at[g].set(rkey)
-            tok[g] = t0
-            temps[g] = temp
-            sched.activate(local, tick)
-            results[req.id] = [t0]
-            sched.stats[req.id]["token_walls"].append(time.perf_counter())
-            sched.emitted[local] = 1
-            if sched.emitted[local] >= sched.budgets[local] or t0 == self.eos_id:
-                sched.release(local, tick)   # prefill-only request
-                pool = self._insert_sh(pool, self._fresh1, g)
-
-        while queue or any_queued() or any_pending() or any_live():
-            tick_was = tick
-            if (not any_live() and not any_pending() and not any_queued()
-                    and queue and queue[0][0] > tick):
-                tick = queue[0][0]  # idle: fast-forward to the next arrival
-                # sweep the TTL clock across the jump BEFORE admission
-                # lookups (see ServeEngine._serve_continuous)
-                self._cache_tick(tick - tick_was)
-                tick_was = tick
-
-            # --- route arrivals to the least-loaded host's queue ------------
-            while queue and queue[0][0] <= tick:
-                arrival, req = queue.pop(0)
-                load = [len(h_.queue) + int(h_.sched.live.sum())
-                        + int(h_.sched.pending.sum()) for h_ in hosts]
-                hosts[int(np.argmin(load))].queue.append((arrival, req))
-
-            # --- per-host admission into free local rows --------------------
-            for h, host in enumerate(hosts):
-                for local in host.sched.free_slots():
-                    if not host.queue:
-                        break
-                    arrival, req = host.queue.pop(0)
-                    g = h * K + local
-                    prompt = self._padded(req.prompt, prompt_len)
-                    offset, pstate, plogits = self._lookup_shard(prompt, h)
-                    host.sched.hold(local, req, arrival, tick,
-                                    prompt_tokens=len(prompt),
-                                    cached_tokens=offset)
-                    host.sched.stats[req.id]["host"] = h
-                    ent = {"req": req, "prompt": prompt, "done": offset,
-                           "resumed": offset > 0}
-                    if offset == len(prompt):
-                        # full-prompt hit on this host's replica
-                        promote(h, local, ent, plogits, pstate)
-                        continue
-                    if prefill_pool is None:
-                        prefill_pool = T.init_decode_state(cfg, B, self.max_len)
-                    prefill_pool = self._insert_sh(
-                        prefill_pool,
-                        pstate if pstate is not None else self._fresh1, g)
-                    host.pending[local] = ent
-
-            # --- ONE sharded masked prefill dispatch for every host's pending
-            # rows ([n_slots, chunk] global = [K, chunk] per shard; rows that
-            # are not mid-prefill ride along as valid_len=0 bit-exact no-ops)
-            if any_pending():
-                chunk_tok = np.zeros((B, chunk_size), np.int32)
-                valid = np.zeros((B,), np.int32)
-                for h, host in enumerate(hosts):
-                    for local, ent in host.pending.items():
-                        g = h * K + local
-                        n = min(chunk_size, len(ent["prompt"]) - ent["done"])
-                        chunk_tok[g, :n] = ent["prompt"][ent["done"]:ent["done"] + n]
-                        valid[g] = n
-                logits_all, prefill_pool = self._prefill_sh(
-                    self.params, jnp.asarray(chunk_tok), prefill_pool,
-                    jnp.asarray(valid))
-                for h, host in enumerate(hosts):
-                    for local in list(host.pending):
-                        ent = host.pending[local]
-                        g = h * K + local
-                        ent["done"] += int(valid[g])
-                        finished = ent["done"] == len(ent["prompt"])
-                        if ent["resumed"] or finished:
-                            # boundary snapshot -> the owning host's shard
-                            st1 = self._extract_sh(prefill_pool, g)
-                            self._cache_insert_shard(
-                                ent["prompt"], ent["done"], st1,
-                                logits_all[g:g + 1], h)
-                        if finished:
-                            del host.pending[local]
-                            promote(h, local, ent, logits_all[g:g + 1], st1)
-
-            # release the prefill pool once every host's admissions drained
-            if prefill_pool is not None and not any_pending():
-                prefill_pool = None
-
-            # --- ...plus one sharded decode step for the whole pool ---------
-            if any_live():
-                keys, subs = self._split(keys)
-                logits, pool = self._step_sh(self.params, jnp.asarray(tok), pool)
-                nxt = np.array(self._sample(logits, subs, jnp.asarray(temps)))
-                tick += 1
-                now = time.perf_counter()
-                for h, host in enumerate(hosts):
-                    sched = host.sched
-                    row = nxt[h * K:(h + 1) * K]
-                    new_live, new_emitted = advance_slots(
-                        row, sched.live, sched.emitted, sched.budgets,
-                        self.eos_id)
-                    for local in np.flatnonzero(sched.live):
-                        rid = sched.req[local].id
-                        results[rid].append(int(row[local]))
-                        sched.stats[rid]["token_walls"].append(now)
-                    sched.emitted = new_emitted
-                    for local in np.flatnonzero(sched.live & ~new_live):
-                        sched.release(local, tick)
-                        pool = self._insert_sh(pool, self._fresh1, h * K + local)
-                tok = nxt
-            elif any_pending():
-                tick += 1  # prefill-only tick (nothing decoding yet)
-
-            self._cache_tick(tick - tick_was)
-
-        out = {rid: np.array(toks, np.int32) for rid, toks in results.items()}
-        if not return_stats:
-            return out
-        stats: dict[int, dict] = {}
-        for host in hosts:
-            stats.update(host.sched.stats)
-        return out, stats
+        decode step — or, with ``spec_k``, one sharded draft-verify round.
+        Under greedy decoding token outputs are exact vs the single-host
+        engine regardless of the routing."""
+        hosts = [_Host(self.slots_per_host) for _ in range(self.n_hosts)]
+        return self._serve_ticks(hosts, requests, prompt_len, arrivals,
+                                 rng_seed, return_stats, self.prefill_chunk,
+                                 coalesce=True)

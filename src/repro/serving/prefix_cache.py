@@ -51,6 +51,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import pickle
 from collections import OrderedDict
 from typing import Any, Optional
 
@@ -88,7 +89,14 @@ def state_digest(tree) -> bytes:
             h.update(repr((arr.shape, str(arr.dtype))).encode())
             h.update(np.ascontiguousarray(arr).tobytes())
         except (TypeError, ValueError):  # non-array sentinel leaves
-            h.update(repr(leaf).encode())
+            # repr() of a default object embeds its id() — an address — so
+            # byte-identical trees holding the same sentinel would hash
+            # differently run to run and never dedup; pickle is a
+            # deterministic encoding of the VALUE for equal picklable leaves
+            try:
+                h.update(b"pkl:" + pickle.dumps(leaf, protocol=4))
+            except Exception:  # unpicklable: fall back to the type identity
+                h.update(b"typ:" + repr(type(leaf)).encode())
     return h.digest()
 
 
@@ -143,6 +151,10 @@ class PrefixCache:
         # inserts readback-free when entries are big attention-KV buffers
         self.dedup = dedup
         self._entries: OrderedDict[bytes, PrefixEntry] = OrderedDict()
+        # registered-length index: n_tokens -> entry count. Maintained by
+        # insert/_drop so lookup's longest-first probe iterates the DISTINCT
+        # cached lengths directly instead of rescanning every entry.
+        self._lengths: dict[int, int] = {}
         # content-addressed state store: digest -> [state, nbytes, refcount]
         self._states: dict[bytes, list] = {}
         self._bytes = 0
@@ -205,6 +217,11 @@ class PrefixCache:
 
     def _drop(self, key: bytes) -> None:
         entry = self._entries.pop(key)
+        n = entry.n_tokens
+        if self._lengths[n] == 1:
+            del self._lengths[n]
+        else:
+            self._lengths[n] -= 1
         if entry.digest is None:  # dedup off: the entry owns its state bytes
             self._bytes -= entry.nbytes
             return
@@ -239,6 +256,7 @@ class PrefixCache:
             int(tokens.size), state, logits, pinned,
             nbytes=state_bytes + logits_bytes, digest=digest,
             logits_nbytes=logits_bytes, last_used=self._clock)
+        self._lengths[int(tokens.size)] = self._lengths.get(int(tokens.size), 0) + 1
         self._bytes += state_bytes + logits_bytes
         while self._over_cap() and len(self._entries) > 1:
             victim = next((k for k, e in self._entries.items()
@@ -251,8 +269,8 @@ class PrefixCache:
         """Longest cached prefix of ``prompt`` (None on miss). LRU-refreshes,
         restamps the TTL clock, and counts a hit/miss."""
         prompt = np.asarray(prompt, np.int32)
-        lengths = sorted({e.n_tokens for e in self._entries.values()
-                          if e.n_tokens <= prompt.size}, reverse=True)
+        lengths = sorted((n for n in self._lengths if n <= prompt.size),
+                         reverse=True)
         for n in lengths:
             key = prefix_digest(prompt[:n])
             entry = self._entries.get(key)

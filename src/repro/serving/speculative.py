@@ -1,0 +1,205 @@
+"""Speculative-decoding drafts for the unified serve tick (DESIGN.md
+§Serving).
+
+The target model never changes: both engines verify a k-token draft window
+in ONE ``transformer.spec_verify`` dispatch per tick and emit every
+accepted token plus the model's own bonus token, so the emitted stream is
+token-for-token the plain greedy stream regardless of draft quality — a
+bad draft only wastes the window it rode in. What varies is where the k
+draft tokens come from:
+
+* ``ngram`` (:class:`NGramDraft`) — prompt-lookup drafting: propose the
+  tokens that followed the longest matching suffix n-gram earlier in the
+  request's OWN context (prompt + everything emitted so far). Pure
+  host-side bookkeeping, zero extra device dispatches; acceptance is high
+  exactly when decode is locally repetitive (code, templated text,
+  retrieval-echoing answers) and harmless when it is not.
+* ``nodes`` (:class:`NodeDraft`) — small-S node-subset self-draft: the SAME
+  weights with each STLT layer's complex readout ``u`` masked to the top-m
+  Laplace nodes per head, ranked by |u| x decay mass — the paper's node-
+  importance ordering (a node's contribution to future outputs is its
+  readout gain times the geometric mass sum_t |lambda|^t = 1/(1-|lambda|)
+  of its pole). The recurrence (poles, W_v) is untouched, so the draft's
+  state pytrees have the target's exact shapes and ride the engine's
+  already-compiled jitted programs with the masked params passed as call
+  arguments. The draft keeps its own slot pool: it decodes k greedy steps
+  ahead each tick from a checkpoint (an immutable pytree reference — free),
+  then rolls forward from that checkpoint by exactly the committed tokens
+  with one masked ``prefill_chunk``-shaped dispatch.
+
+Drafts always return exactly k tokens (the n-gram draft pads with a
+repeat-last filler); the engine caps the verified window per row by the
+remaining budget instead.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import stlt as stlt_lib
+from repro.models import transformer as T
+
+
+class NGramDraft:
+    """Prompt-lookup drafting (host-side only, zero dispatches).
+
+    Per slot, keeps the request's full context (prompt + emitted tokens).
+    ``propose`` finds the most recent earlier occurrence of the longest
+    suffix n-gram (n = ``max_ngram`` down to 1) and proposes the k tokens
+    that followed it; with no match (or to fill past a short match) it
+    repeats the last token — any filler is safe, a mismatch just ends the
+    accept run at the verify step."""
+
+    def __init__(self, k: int, n_slots: int, max_ngram: int = 3):
+        if k < 1:
+            raise ValueError(f"k must be >= 1 (got {k})")
+        self.k = k
+        self.max_ngram = max_ngram
+        self._ctx: list = [None] * n_slots
+
+    def on_promote(self, g: int, prompt, t0: int):
+        self._ctx[g] = list(np.asarray(prompt).tolist()) + [int(t0)]
+
+    def on_emit(self, g: int, toks):
+        self._ctx[g].extend(int(t) for t in toks)
+
+    def propose(self, tok, live) -> np.ndarray:
+        out = np.zeros((len(live), self.k), np.int32)
+        for g in np.flatnonzero(live):
+            out[g] = self._propose_one(self._ctx[g])
+        return out
+
+    def commit(self, inputs, commit):
+        pass  # context was already extended via on_emit
+
+    def _propose_one(self, ctx: list) -> np.ndarray:
+        k = self.k
+        draft = []
+        n_ctx = len(ctx)
+        for n in range(min(self.max_ngram, n_ctx - 1), 0, -1):
+            pat = ctx[-n:]
+            # most recent earlier occurrence, scanning right to left
+            for i in range(n_ctx - n - 1, -1, -1):
+                if ctx[i:i + n] == pat:
+                    draft = ctx[i + n:i + n + k]
+                    break
+            if draft:
+                break
+        filler = draft[-1] if draft else ctx[-1]
+        while len(draft) < k:
+            draft.append(filler)
+        return np.asarray(draft[:k], np.int32)
+
+
+def stlt_node_importance(stlt_params: dict, scfg) -> jax.Array:
+    """Per-node importance |u| x decay mass, shape [..., H, S]: readout gain
+    times the geometric output mass of the pole, sum_t |lambda|^t =
+    1 / (1 - |lambda|) — the contribution a node's state makes to all
+    future outputs (the paper's importance ordering for node pruning)."""
+    log_mag, _, _, _ = stlt_lib._poles(stlt_params, scfg)
+    u_re = stlt_params["nodes"]["u_re"]
+    u_im = stlt_params["nodes"]["u_im"]
+    gain = jnp.sqrt(u_re.astype(jnp.float32) ** 2
+                    + u_im.astype(jnp.float32) ** 2)
+    mass = 1.0 / jnp.maximum(1.0 - jnp.exp(log_mag.astype(jnp.float32)), 1e-6)
+    return gain * mass
+
+
+def draft_params(params: dict, cfg, draft_nodes: int) -> dict:
+    """The node-subset draft model: a copy of ``params`` with each STLT
+    layer's complex readout ``u_re/u_im`` masked to its top-``draft_nodes``
+    nodes per head by :func:`stlt_node_importance`. Poles, ``w_v`` and every
+    non-STLT weight are untouched, so draft states share the target's exact
+    pytree shapes (and the engine's compiled programs). Non-STLT layers run
+    at full width — the draft's speedup on hybrid stacks comes from the
+    narrowed readout only."""
+    scfg = cfg.stlt_config()
+    m = min(draft_nodes, scfg.num_nodes)
+    if m < 1:
+        raise ValueError(f"draft_nodes must be >= 1 (got {draft_nodes})")
+    layers = []
+    for (btype, count), lp in zip(T.execution_plan(cfg), params["layers"]):
+        if btype in ("stlt", "stlt_rel"):
+            imp = stlt_node_importance(lp["stlt"], scfg)  # [..., H, S]
+            kth = jnp.sort(imp, axis=-1)[..., scfg.num_nodes - m, None]
+            mask = (imp >= kth).astype(lp["stlt"]["nodes"]["u_re"].dtype)
+            nodes = dict(lp["stlt"]["nodes"])
+            nodes["u_re"] = nodes["u_re"] * mask
+            nodes["u_im"] = nodes["u_im"] * mask
+            lp = {**lp, "stlt": {**lp["stlt"], "nodes": nodes}}
+        layers.append(lp)
+    return {**params, "layers": layers}
+
+
+class NodeDraft:
+    """Small-S node-subset self-draft driving the engine's own dispatch ops.
+
+    Invariant between ticks: ``self.pool`` rows of live speculative slots
+    have consumed exactly the tokens the target pool has (prompt + all
+    committed inputs). ``propose`` checkpoints the pool (a pytree reference),
+    greedily decodes k steps ahead with the masked params, and ``commit``
+    rolls forward from the checkpoint by the per-row committed count with
+    one masked full-pool prefill dispatch — the rejected draft suffix never
+    enters the carried draft state either."""
+
+    def __init__(self, engine, k: int, n_slots: int, draft_nodes: int):
+        if k < 1:
+            raise ValueError(f"k must be >= 1 (got {k})")
+        self.eng = engine
+        self.k = k
+        self.n_slots = n_slots
+        self.params = draft_params(engine.params, engine.cfg, draft_nodes)
+        self.pool = None   # lazy [n_slots] draft decode-state pool
+        self._ckpt = None  # pool snapshot the current proposal decoded from
+
+    def _ensure_pool(self):
+        if self.pool is None:
+            self.pool = T.init_decode_state(self.eng.cfg, self.n_slots,
+                                            self.eng.max_len)
+        return self.pool
+
+    def on_promote(self, g: int, prompt, t0: int):
+        """Prefill the slot's prompt into the draft pool (the draft model's
+        state differs from the target's from layer 1 on, so a prefix-cache
+        hit on the target side still means a full draft prefill here) —
+        the same masked [1, chunk] loop shape as ``warm_prefix``."""
+        eng = self.eng
+        self._ensure_pool()
+        prompt = np.asarray(prompt, np.int32)
+        chunk = eng.prefill_chunk or len(prompt)
+        st = eng._fresh_template()
+        done = 0
+        while done < len(prompt):
+            n = min(chunk, len(prompt) - done)
+            buf = np.zeros((1, chunk), np.int32)
+            buf[0, :n] = prompt[done:done + n]
+            _, st = eng._prefill_chunk(
+                self.params, inputs=jnp.asarray(buf),
+                state=st, valid_len=jnp.asarray([n], np.int32))
+            done += n
+        self.pool = eng._ops_insert(self.pool, st, g)
+
+    def on_emit(self, g: int, toks):
+        pass  # state bookkeeping happens wholesale in commit()
+
+    def propose(self, tok, live) -> np.ndarray:
+        eng = self.eng
+        pool = self._ensure_pool()
+        self._ckpt = pool
+        drafts = np.zeros((len(live), self.k), np.int32)
+        dtok = np.asarray(tok, np.int32).copy()
+        for j in range(self.k):
+            logits, pool = eng._ops_decode(self.params, jnp.asarray(dtok),
+                                           pool)
+            dtok = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+            drafts[:, j] = dtok
+        # the k look-ahead steps are discarded; commit() re-advances from
+        # the checkpoint by only the tokens the verifier accepted
+        return drafts
+
+    def commit(self, inputs, commit):
+        _, self.pool = self.eng._ops_prefill_pool(
+            self.params, jnp.asarray(inputs, np.int32), self._ckpt,
+            jnp.asarray(commit, np.int32))
+        self._ckpt = None

@@ -47,7 +47,7 @@ def jit_trace_log(monkeypatch):
     from repro.utils import trace_probe
 
     log: list = []
-    for name in ("prefill", "prefill_chunk"):
+    for name in ("prefill", "prefill_chunk", "spec_verify"):
         monkeypatch.setattr(T, name, trace_probe(getattr(T, name), log, name))
     return log
 

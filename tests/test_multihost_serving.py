@@ -296,6 +296,15 @@ def test_sharded_parity_forced_8_devices():
         for r in reqs:
             np.testing.assert_array_equal(res2[r.id], res1[r.id], err_msg=str(r.id))
         assert len({s["host"] for s in stats.values()}) > 1
+        # speculative decoding over real sharding stays token-exact too
+        spec = ShardedServeEngine(params, cfg, n_hosts=4, slots_per_host=2,
+                                  max_len=96, prefill_chunk=8,
+                                  spec_k=3, spec_draft="ngram")
+        res3 = spec.serve(reqs, arrivals=arrivals)
+        for r in reqs:
+            np.testing.assert_array_equal(res3[r.id], res1[r.id],
+                                          err_msg="spec " + str(r.id))
+        assert spec.spec_stats["verify_calls"] > 0
         print("OK")
     """)
     env = dict(os.environ)

@@ -421,6 +421,100 @@ def test_prefix_cache_ttl_expires_before_idle_arrival_lookup():
     assert stats[2]["cached_tokens"] == len(prompt), "fresh entry must hit"
 
 
+def test_sampled_rng_streams_locked_across_modes():
+    """The per-request sampling stream is pinned down exactly: token 1 draws
+    from the SPLIT-off half of fold_in(base, id) — never from the carried
+    key itself (key reuse would correlate the first two draws) — and every
+    scheduling mode (continuous, wave) replays the identical stream."""
+    cfg = small_cfg(mixer="stlt", stlt_nodes=4, stlt_chunk=8)
+    params = T.init_lm(jax.random.key(0), cfg)
+    eng = ServeEngine(params, cfg, max_len=64, temperature=1.0)
+    rng = np.random.default_rng(6)
+    # equal-length prompts: wave's in-wave padding is a no-op, so any token
+    # difference is a key-stream difference
+    reqs = [Request(rng.integers(3, cfg.vocab, 6).astype(np.int32), 4, id=i)
+            for i in range(3)]
+    seed = 0
+    cont = eng.serve(reqs, slots=2, rng_seed=seed)
+    wave = eng.serve(reqs, slots=3, mode="wave", rng_seed=seed)
+    for r in reqs:
+        np.testing.assert_array_equal(
+            cont[r.id], wave[r.id],
+            err_msg=f"request {r.id}: continuous vs wave sampled stream")
+
+    # manual replay of the first two draws for one request: carry/consume
+    # discipline means t0 <- split(rkey)[1], t1 <- split(split(rkey)[0])[1]
+    from repro.serving.sampler import sample_token
+    r = reqs[0]
+    rkey = jax.random.fold_in(jax.random.key(seed), r.id)
+    carry, k0 = jax.random.split(rkey)
+    logits1, st = T.prefill(params, cfg, jnp.asarray(r.prompt[None]),
+                            max_len=64)
+    t0 = int(sample_token(logits1, k0, 1.0, 0)[0])
+    assert t0 == int(cont[r.id][0])
+    _, k1 = jax.random.split(carry)
+    logits2, _ = T.decode_step(params, cfg=cfg,
+                               token_t=jnp.asarray([t0], jnp.int32), state=st)
+    t1 = int(sample_token(logits2, k1, 1.0, 0)[0])
+    assert t1 == int(cont[r.id][1])
+
+
+def test_wave_mode_records_token_walls():
+    """Wave serving stamps one wall-clock entry per emitted token (it used
+    to leave token_walls empty, crashing downstream gap stats)."""
+    cfg = small_cfg()
+    params = T.init_lm(jax.random.key(0), cfg)
+    eng = ServeEngine(params, cfg, max_len=64)
+    rng = np.random.default_rng(0)
+    reqs = [Request(rng.integers(3, cfg.vocab, 4).astype(np.int32), 3 + i, id=i)
+            for i in range(3)]
+    res, stats = eng.serve(reqs, slots=3, prompt_len=8, mode="wave",
+                           return_stats=True)
+    for r in reqs:
+        walls = stats[r.id]["token_walls"]
+        assert len(walls) == len(res[r.id])
+        assert all(b >= a for a, b in zip(walls, walls[1:]))
+
+
+def test_prefix_cache_dedup_non_array_leaves():
+    """Content digests are value-deterministic for non-array leaves too:
+    two states equal up to a sentinel object (not id()-dependent repr) still
+    dedup to one resident copy."""
+    c = PrefixCache(max_bytes=1000)
+    arr = np.arange(4, dtype=np.float32)
+    c.insert([1], {"h": arr, "meta": ("tag", 3, None)})
+    c.insert([2, 2], {"h": arr.copy(), "meta": ("tag", 3, None)})
+    st = c.stats()
+    assert st["dedup_hits"] == 1 and st["bytes_saved"] > 0
+    assert c.lookup([1]).state is c.lookup([2, 2]).state
+    # different sentinel content -> different digest
+    c.insert([3, 3, 3], {"h": arr.copy(), "meta": ("tag", 4, None)})
+    assert c.stats()["dedup_hits"] == 1
+
+
+def test_prefix_cache_length_index_consistency():
+    """lookup() scans only registered prefix LENGTHS (not every entry); the
+    index stays consistent through inserts, replacements, evictions and
+    TTL drops."""
+    c = PrefixCache(capacity=3, ttl_ticks=5)
+
+    def lengths():
+        return dict(c._lengths)
+
+    c.insert([1, 2], "a")
+    c.insert([1, 2, 3], "b")
+    c.insert([9, 9], "c")
+    assert lengths() == {2: 2, 3: 1}
+    assert c.lookup([1, 2, 3, 4]).n_tokens == 3       # longest wins
+    c.insert([1, 2], "a2")                             # same-key replacement
+    assert lengths() == {2: 2, 3: 1}
+    c.insert([7, 7, 7, 7], "d")                        # evicts LRU
+    assert sum(lengths().values()) == 3 == len(c)
+    c.tick(100)                                        # TTL-expire everything
+    assert lengths() == {} and len(c) == 0
+    assert c.lookup([1, 2]) is None
+
+
 def test_per_slot_sampler_and_masking():
     """sample_slot_tokens honours per-slot temperature; advance_slots applies
     budget and EOS cuts batched."""

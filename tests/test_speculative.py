@@ -1,0 +1,279 @@
+"""Speculative decoding on the unified serve tick (DESIGN.md §Serving).
+
+Locked contracts:
+
+* TOKEN EXACTNESS: with any draft (n-gram prompt-lookup or node-subset
+  self-draft) and any k, the served stream is token-for-token the plain
+  greedy stream — including EOS cuts that land INSIDE a draft window and
+  budgets smaller than the window.
+* ONE DISPATCH PER ROUND: a spec tick verifies its k-token windows in
+  exactly ONE ``spec_verify`` dispatch for the whole pool and never calls
+  the one-token ``decode_step`` (trace_probe-locked, both as a per-dispatch
+  counter and as a compile counter).
+* UNIFIED TICK: ``ShardedServeEngine`` drives the same ``_serve_ticks``
+  body as ``ServeEngine`` — it overrides dispatch ops only — and sharded
+  spec decode is token-exact vs the single-host plain stream.
+* DRAFT MODELS: ``draft_params`` masks each STLT layer's readout to the
+  top-m nodes per head (everything else bit-identical); the n-gram draft
+  proposes the continuation of the longest matching suffix.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.serving import ServeEngine, ShardedServeEngine
+from repro.serving.engine import Request, ServeEngine as _SE
+from repro.serving.multihost import ShardedServeEngine as _SSE
+from repro.serving import speculative as spec_lib
+from repro.utils import trace_probe
+from conftest import small_cfg
+
+STLT_KW = dict(mixer="stlt", stlt_nodes=4, stlt_chunk=8)
+
+
+def _setup(**kw):
+    cfg = small_cfg(**(kw or STLT_KW))
+    return cfg, T.init_lm(jax.random.key(0), cfg)
+
+
+def _trace(cfg, n=6, seed=0, lo=3, hi=9, budget=lambda i: 6 + i % 7):
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n):
+        # half the prompts repeat a motif (n-gram-friendly), half are random
+        if i % 2:
+            motif = rng.integers(3, cfg.vocab, 4).astype(np.int32)
+            prompt = np.tile(motif, 3)
+        else:
+            prompt = rng.integers(3, cfg.vocab,
+                                  int(rng.integers(lo, hi))).astype(np.int32)
+        reqs.append(Request(prompt, budget(i), id=i))
+    arrivals = [0, 0, 1, 3, 3, 5][:n] + [6] * max(0, n - 6)
+    return reqs, arrivals
+
+
+def _assert_same(plain, out, reqs, ctx):
+    for r in reqs:
+        np.testing.assert_array_equal(
+            out[r.id], plain[r.id], err_msg=f"request {r.id}: {ctx}")
+
+
+@pytest.mark.parametrize("draft", ["ngram", "nodes"])
+@pytest.mark.parametrize("k", [1, 2, 8])
+def test_spec_serve_token_exact(draft, k):
+    """Spec decode emits the exact plain-greedy stream for both drafts at
+    small and large k, on a staggered mixed trace."""
+    cfg, params = _setup()
+    reqs, arrivals = _trace(cfg)
+    plain = ServeEngine(params, cfg, max_len=96, prefill_chunk=8).serve(
+        reqs, slots=3, arrivals=arrivals)
+    eng = ServeEngine(params, cfg, max_len=96, prefill_chunk=8,
+                      spec_k=k, spec_draft=draft, spec_draft_nodes=2)
+    out = eng.serve(reqs, slots=3, arrivals=arrivals)
+    _assert_same(plain, out, reqs, f"{draft} k={k}")
+    # every token past the promote-time first one came out of a verify round
+    total = sum(len(v) for v in plain.values())
+    assert eng.spec_stats["emitted"] == total - len(reqs)
+    assert eng.spec_stats["verify_calls"] > 0
+
+
+@pytest.mark.parametrize("mixer_kw", [STLT_KW, dict(mixer="attention"),
+                                      dict(**STLT_KW, scan_layers=True,
+                                           num_layers=3)])
+def test_spec_serve_token_exact_across_archs(mixer_kw):
+    """The verify-rollback path threads accepted lengths through every
+    mixer's state (STLT closed-form, attention KV, scanned stacks)."""
+    cfg, params = _setup(**mixer_kw)
+    reqs, arrivals = _trace(cfg, n=4)
+    plain = ServeEngine(params, cfg, max_len=96, prefill_chunk=8).serve(
+        reqs, slots=2, arrivals=arrivals)
+    eng = ServeEngine(params, cfg, max_len=96, prefill_chunk=8,
+                      spec_k=3, spec_draft="ngram")
+    out = eng.serve(reqs, slots=2, arrivals=arrivals)
+    _assert_same(plain, out, reqs, f"spec across archs {mixer_kw}")
+
+
+def test_spec_eos_inside_draft():
+    """An EOS landing in the middle of an accepted draft window cuts the
+    stream exactly where plain greedy would."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(2)
+    prompt = rng.integers(3, cfg.vocab, 8).astype(np.int32)
+    ref = ServeEngine(params, cfg, max_len=96).generate(prompt[None], 12)[0]
+    eos = int(ref[5])  # a token plain greedy emits mid-stream
+    req = [Request(prompt, 12, id=0)]
+    plain = ServeEngine(params, cfg, max_len=96, prefill_chunk=8,
+                        eos_id=eos).serve(req, slots=2)
+    eng = ServeEngine(params, cfg, max_len=96, prefill_chunk=8, eos_id=eos,
+                      spec_k=4, spec_draft="ngram")
+    out = eng.serve(req, slots=2)
+    np.testing.assert_array_equal(out[0], plain[0])
+    assert int(out[0][-1]) == eos and len(out[0]) < 12
+
+
+@pytest.mark.parametrize("budget", [1, 2])
+def test_spec_budget_boundary(budget):
+    """Budgets at or below the draft window never over-emit: the verified
+    window is capped by the remaining budget per row."""
+    cfg, params = _setup()
+    reqs, _ = _trace(cfg, n=4, budget=lambda i: budget)
+    plain = ServeEngine(params, cfg, max_len=96, prefill_chunk=8).serve(
+        reqs, slots=2)
+    eng = ServeEngine(params, cfg, max_len=96, prefill_chunk=8,
+                      spec_k=4, spec_draft="ngram")
+    out = eng.serve(reqs, slots=2)
+    _assert_same(plain, out, reqs, f"budget={budget}")
+    for r in reqs:
+        assert len(out[r.id]) == budget
+
+
+def test_spec_one_dispatch_per_verify(jit_trace_log):
+    """The invariant that makes spec decode worth having: every verify round
+    is ONE batched dispatch. Per-dispatch counters (probes wrapped around the
+    jitted callables) prove decode ticks never fall back to one-token steps
+    while spec is on, and the compile counter sees exactly one spec_verify
+    program at [slots, k+1]."""
+    cfg, params = _setup()
+    k, slots = 4, 3
+    eng = ServeEngine(params, cfg, max_len=96, prefill_chunk=8,
+                      spec_k=k, spec_draft="ngram")
+    calls: list = []
+    eng._verify = trace_probe(eng._verify, calls, "verify_dispatch")
+    eng._step = trace_probe(eng._step, calls, "step_dispatch")
+    reqs, arrivals = _trace(cfg)
+    eng.serve(reqs, slots=slots, arrivals=arrivals)
+
+    verify_calls = [e for e in calls if e[0] == "verify_dispatch"]
+    step_calls = [e for e in calls if e[0] == "step_dispatch"]
+    assert not step_calls, "spec serve fell back to one-token decode steps"
+    assert len(verify_calls) == eng.spec_stats["verify_calls"]
+    assert all(e[1] == (slots, k + 1) for e in verify_calls)
+    # amortization: strictly more tokens than dispatches on this trace
+    assert eng.spec_stats["emitted"] > eng.spec_stats["verify_calls"]
+    # compile counter: ONE spec_verify program for the whole trace
+    spec_traces = [e for e in jit_trace_log if e[0] == "spec_verify"]
+    assert [s for _, s in spec_traces] == [(slots, k + 1)], spec_traces
+
+
+def test_spec_sharded_token_exact():
+    """Sharded spec decode (the same _serve_ticks body over shard_map'd
+    dispatch ops) matches the single-host plain greedy stream."""
+    cfg, params = _setup()
+    H = max(h for h in (1, 2, 4) if h <= jax.device_count())
+    reqs, arrivals = _trace(cfg)
+    plain = ServeEngine(params, cfg, max_len=96, prefill_chunk=8).serve(
+        reqs, slots=2 * H, arrivals=arrivals)
+    for draft in ("ngram", "nodes"):
+        eng = ShardedServeEngine(params, cfg, n_hosts=H, slots_per_host=2,
+                                 max_len=96, prefill_chunk=8,
+                                 spec_k=3, spec_draft=draft,
+                                 spec_draft_nodes=2)
+        out = eng.serve(reqs, arrivals=arrivals)
+        _assert_same(plain, out, reqs, f"sharded {draft}")
+
+
+def test_spec_requires_greedy():
+    """The verify rule is exact for argmax streams only: sampled requests
+    are rejected up front rather than silently diverging."""
+    cfg, params = _setup()
+    with pytest.raises(ValueError, match="greedy"):
+        eng = ServeEngine(params, cfg, max_len=96, prefill_chunk=8,
+                          temperature=0.7, spec_k=2)
+        eng.serve([Request(np.arange(3, 8, dtype=np.int32), 4, id=0)], slots=1)
+    eng = ServeEngine(params, cfg, max_len=96, prefill_chunk=8, spec_k=2)
+    with pytest.raises(ValueError, match="greedy"):
+        eng.serve([Request(np.arange(3, 8, dtype=np.int32), 4, id=0,
+                           temperature=1.0)], slots=1)
+    with pytest.raises(ValueError):
+        ServeEngine(params, cfg, spec_k=-1)
+    with pytest.raises(ValueError):
+        ServeEngine(params, cfg, spec_k=2, spec_draft="nope")
+
+
+def test_unified_tick_single_body():
+    """The tick body exists ONCE: the sharded engine inherits _serve_ticks
+    and _spec_tick from ServeEngine and overrides dispatch ops only."""
+    for name in ("_serve_ticks", "_spec_tick", "_make_draft"):
+        assert name in _SE.__dict__, name
+        assert name not in _SSE.__dict__, f"{name} reimplemented in sharded"
+    for name in ("_ops_insert", "_ops_extract", "_ops_reset", "_ops_decode",
+                 "_ops_prefill_pool", "_ops_verify", "_route_arrivals"):
+        assert name in _SSE.__dict__, f"sharded engine must override {name}"
+
+
+def test_draft_params_masks_top_nodes():
+    """draft_params zeroes all but the top-m nodes per head in u_re/u_im,
+    ranked by |u| x decay mass, and leaves every other weight untouched."""
+    cfg, params = _setup()
+    m = 2
+    dp = spec_lib.draft_params(params, cfg, m)
+    scfg = cfg.stlt_config()
+    for lp, dlp in zip(params["layers"], dp["layers"]):
+        imp = np.asarray(spec_lib.stlt_node_importance(lp["stlt"], scfg))
+        kept = np.asarray(dlp["stlt"]["nodes"]["u_re"]) != 0
+        assert (kept.sum(-1) == m).all()  # exactly m nodes per head survive
+        # the survivors are the top-m by importance
+        top = np.argsort(imp, -1)[..., -m:]
+        for h in range(imp.shape[0]):
+            assert set(np.flatnonzero(kept[h])) == set(top[h])
+        # untouched: poles and every non-readout weight
+        np.testing.assert_array_equal(dlp["stlt"]["w_v"], lp["stlt"]["w_v"])
+        np.testing.assert_array_equal(dlp["stlt"]["nodes"]["sigma_hat"],
+                                      lp["stlt"]["nodes"]["sigma_hat"])
+    np.testing.assert_array_equal(dp["embed"]["embed"],
+                                  params["embed"]["embed"])
+    with pytest.raises(ValueError):
+        spec_lib.draft_params(params, cfg, 0)
+
+
+def test_ngram_draft_proposes_continuation():
+    """The n-gram draft proposes the tokens that followed the longest
+    matching suffix in the request's own context, padding with repeat-last."""
+    d = spec_lib.NGramDraft(k=3, n_slots=2, max_ngram=3)
+    d.on_promote(0, np.asarray([5, 6, 7, 8, 5, 6], np.int32), t0=7)
+    # context [5,6,7,8,5,6,7]: suffix [5,6,7] recurs at the start -> [8,5,6]
+    out = d.propose(np.asarray([7, 0]), np.asarray([True, False]))
+    np.testing.assert_array_equal(out[0], [8, 5, 6])
+    np.testing.assert_array_equal(out[1], [0, 0, 0])  # dead rows untouched
+    # no match anywhere: repeat-last filler
+    d.on_promote(1, np.asarray([1, 2, 3], np.int32), t0=9)
+    out = d.propose(np.asarray([7, 9]), np.asarray([False, True]))
+    np.testing.assert_array_equal(out[1], [9, 9, 9])
+    # emitted tokens extend the searchable context
+    d.on_emit(0, [8, 5])
+    assert d._ctx[0][-2:] == [8, 5]
+    with pytest.raises(ValueError):
+        spec_lib.NGramDraft(k=0, n_slots=1)
+
+
+@pytest.mark.parametrize("window", ["exponential", "hann"])
+def test_stlt_state_at_matches_incremental(window):
+    """The closed-form spec-rollback state (stlt_state_at at q) equals the
+    state after prefilling exactly q tokens, for every q including 0."""
+    from repro.core import stlt as stlt_lib
+
+    scfg = stlt_lib.STLTConfig(d_model=32, num_heads=4, num_nodes=4,
+                               window=window, hann_support=16, chunk=8)
+    params = stlt_lib.init_stlt(jax.random.key(1), scfg)
+    rng = np.random.default_rng(0)
+    L = 5
+    x = jnp.asarray(rng.normal(size=(2, L, 32)), jnp.float32)
+    # a non-trivial starting state: prefill a few warmup tokens first
+    warm = jnp.asarray(rng.normal(size=(2, 3, 32)), jnp.float32)
+    _, st0 = stlt_lib.stlt_prefill(params, scfg, warm)
+    for q in range(L + 1):
+        got = stlt_lib.stlt_state_at(params, scfg, x,
+                                     jax.tree_util.tree_map(lambda a: a, st0),
+                                     jnp.asarray([q, q], jnp.int32))
+        if q == 0:
+            want = st0
+        else:
+            _, want = stlt_lib.stlt_prefill(params, scfg, x[:, :q],
+                                            state=st0)
+        for ka in got:
+            np.testing.assert_allclose(
+                np.asarray(got[ka]), np.asarray(want[ka]),
+                rtol=2e-5, atol=2e-5, err_msg=f"{window} q={q} key={ka}")
