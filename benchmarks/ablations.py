@@ -6,9 +6,20 @@ corpus). Same grid as the paper:
 
 Reports final validation CE per variant; the expected orderings (paper §4.4)
 are checked by benchmarks.run and recorded in EXPERIMENTS.md.
+
+``main_quality_vs_s`` (CLI: ``--quality-only``) is the serving companion:
+ONE trained S=16 model evaluated with its readout masked to the top-m nodes
+per head for m in {4, 8, 16} — exactly the mask a served request decodes
+under at ``serve_nodes=m`` (the engine's cap ranks nodes with the same
+importance order, see repro.core.adaptive), so the CE-vs-m curve prices
+each step of the SLO degrade ladder in BENCH_serving.json's
+``slo_degradation`` row. Writes ``BENCH_ablations.json`` (a tier-1 CI
+artifact).
 """
 from __future__ import annotations
 
+import json
+import pathlib
 import time
 
 import jax
@@ -19,6 +30,7 @@ from benchmarks.common import bench_cfg, emit, train_eval
 from repro.data import ByteCorpus
 from repro.models import layers as L
 from repro.models import transformer as T
+from repro.serving.speculative import draft_params
 
 
 def _val_ce(cfg, corpus):
@@ -62,5 +74,45 @@ def main(steps: int = 250, fast: bool = False):
     return results
 
 
+def main_quality_vs_s(steps: int = 250, fast: bool = False):
+    """Quality vs served node budget: train one S=16 model, then eval val CE
+    with the readout masked to the top-m importance-ranked nodes per head
+    (m in {4, 8, 16}; m == S is bit-identical to the unmasked model)."""
+    if fast:
+        steps = min(steps, 120)
+    corpus = ByteCorpus()
+    cfg = bench_cfg("stlt", stlt_nodes=16)
+    ev = _val_ce(cfg, corpus)
+    _, ce_full, params = train_eval(cfg, lambda s: corpus.batch(s, 8, 128),
+                                    steps, eval_fn=ev)
+    curve = {}
+    for m in (4, 8, 16):
+        ce = ev(draft_params(params, cfg, m))
+        curve[f"S{m}"] = ce
+        emit(f"ablation/quality_vs_s/S{m}", 0.0, f"val_ce={ce:.4f}")
+    curve["full"] = ce_full
+    if abs(curve["S16"] - ce_full) > 1e-6:
+        print("# WARNING: top-16-of-16 mask is not the identity")
+    if not curve["S4"] >= curve["S8"] >= curve["S16"]:
+        print("# WARNING: val CE did not degrade monotonically with fewer nodes")
+    out = {"profile": "fast" if fast else "full", "steps": steps,
+           "rows": {"quality_vs_nodes": curve}}
+    path = pathlib.Path(__file__).resolve().parent.parent / "BENCH_ablations.json"
+    path.write_text(json.dumps(out, indent=2) + "\n")
+    print(f"# wrote {path}")
+    return curve
+
+
 if __name__ == "__main__":
-    main()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--quality-only", action="store_true",
+                    help="run only the quality-vs-serve_nodes curve and "
+                         "write BENCH_ablations.json")
+    args = ap.parse_args()
+    if args.quality_only:
+        main_quality_vs_s(fast=not args.full)
+    else:
+        main(fast=not args.full)

@@ -2,7 +2,7 @@
 chunked prefill admission, the prefix-state cache, the two-shape BATCHED
 admission path, speculative decoding, and multi-host sharded serving.
 
-Six traces are replayed; the first four through the same ``ServeEngine``:
+Seven traces are replayed; the first four through the same ``ServeEngine``:
 
 1. mixed short/long BUDGETS (Poisson arrivals): continuous vs wave — the
    wave engine drains whole admission waves, so one long generation stalls
@@ -32,7 +32,14 @@ Six traces are replayed; the first four through the same ``ServeEngine``:
    verify dispatch (> 1 beats one-token-per-tick decode) alongside draft
    accept rate; the emitted streams are checked token-exact vs plain.
 
-6. MULTI-HOST sharded serving (``ShardedServeEngine``): the same mixed
+6. SLO-AWARE NODE DEGRADATION: a one-burst overload replayed with the
+   degrade ladder off vs on (``slo_queue_depth=2``, ladder ``(8, 4)``):
+   the queue-depth breach walks live rows down the node-budget ladder and
+   the drain restores them stepwise — the recorded trace (degrade/restore
+   steps, ticks degraded, min nodes) is deterministic; the quality cost
+   per ladder level is the quality-vs-S curve in BENCH_ablations.json.
+
+7. MULTI-HOST sharded serving (``ShardedServeEngine``): the same mixed
    trace — short shared-system-prompt decodes plus concurrent long-prompt
    admissions — replayed at 1/2/4 hosts x 2 slots (as the forced device
    count allows; the CI multi-host job forces 8). Reports per-host
@@ -417,6 +424,58 @@ def run_speculative(params, cfg, max_len, fast: bool):
     return out
 
 
+def run_slo_degradation(params, cfg, max_len, fast: bool):
+    """SLO-aware node degradation on a burst trace: every request arrives at
+    once, so the admission queue backs up far past ``slo_queue_depth`` and
+    the engine walks the degrade ladder down (full S -> 8 -> 4 nodes),
+    then restores stepwise as the tail drains. The queue-depth trigger is
+    deterministic (tick accounting, not wall clock), so the recorded
+    degrade/restore trace is reproducible in CI.
+
+    By design the capped rows share the uncapped decode program (the cap is
+    a data argument), so this artifact records the CONTROL trace — when the
+    breach fired, how deep the ladder went, how long rows ran degraded —
+    not a wall-clock speedup; the quality each ladder level costs is the
+    companion quality-vs-S curve in BENCH_ablations.json."""
+    rng = np.random.default_rng(17)
+    n = 12 if fast else 24
+    reqs = [Request(rng.integers(3, cfg.vocab, 12).astype(np.int32),
+                    16 if fast else 24, id=i)
+            for i in range(n)]
+    arrivals = [0] * n  # one burst: the queue depth IS the overload signal
+    slots = 2
+    out = {}
+    for label, kw in (("off", {}),
+                      ("on", dict(slo_queue_depth=2, slo_degrade=(8, 4),
+                                  slo_recovery_ticks=4))):
+        eng = ServeEngine(params, cfg, max_len=max_len, prefill_chunk=64, **kw)
+        eng.serve(reqs, slots=slots, arrivals=arrivals)  # pay compiles
+        t0 = time.perf_counter()
+        results, stats = eng.serve(reqs, slots=slots, arrivals=arrivals,
+                                   return_stats=True)
+        wall = time.perf_counter() - t0
+        n_tok = sum(len(v) for v in results.values())
+        row = {"wall_s": wall, "tok_s": n_tok / max(wall, 1e-9),
+               **_latency_stats(stats),
+               **_decode_gap_stats(stats, [r.id for r in reqs])}
+        if kw:
+            row["node_stats"] = dict(eng.node_stats)
+        out[label] = row
+        emit(f"serving/slo_{label}", wall * 1e6,
+             f"tok_s={row['tok_s']:.1f};p99={row['p99']:.0f};"
+             f"gap_p99_ms={row['gap_p99_ms']:.1f}")
+    ns = out["on"]["node_stats"]
+    emit("serving/slo_trace", 0.0,
+         f"degrades={ns['degrade_steps']};restores={ns['restore_steps']};"
+         f"ticks_degraded={ns['ticks_degraded']};min_nodes={ns['min_nodes']};"
+         f"queue_breaches={ns['queue_breaches']}")
+    if ns["degrade_steps"] == 0:
+        print("# WARNING: SLO burst trace never triggered a degrade")
+    if ns["restore_steps"] != ns["degrade_steps"]:
+        print("# WARNING: SLO trace ended still degraded (tail never drained)")
+    return out
+
+
 def main(fast: bool = False):
     cfg = bench_cfg(mixer="stlt")
     params = T.init_lm(jax.random.key(0), cfg)
@@ -497,6 +556,10 @@ def main(fast: bool = False):
     # --- speculative decoding: draft-verify dispatch economics -------------
     rows["speculative"] = run_speculative(params, cfg, max_len=256, fast=fast)
 
+    # --- SLO-aware node degradation under a burst ---------------------------
+    rows["slo_degradation"] = run_slo_degradation(params, cfg, max_len=256,
+                                                  fast=fast)
+
     # --- multi-host sharded serving (scales with forced host devices) ------
     rows["multihost"] = run_multihost(params, cfg, max_len=256, chunk=bchunk,
                                       fast=fast)
@@ -513,7 +576,7 @@ def _bench_path() -> pathlib.Path:
 
 
 def main_multihost(fast: bool = False):
-    """Trace 5 only — for the forced-device CI job, which would otherwise
+    """The multi-host trace only — for the forced-device CI job, which would otherwise
     duplicate the four single-host traces the tier-1 job already ran. The
     multihost row is merged into an existing BENCH_serving.json when one is
     present (so the uploaded artifact stays complete)."""

@@ -66,6 +66,7 @@ class ModelConfig:
     stlt_learnable_T: bool = True
     stlt_zero_omega: bool = False
     stlt_mask_reg: float = 1e-3      # lambda_mask (0 disables the node penalty)
+    stlt_hard_eval: bool = False     # hard-threshold adaptive masks at eval/serve
     # --- enc-dec (whisper) --------------------------------------------------------
     num_decoder_layers: int = 0
     cross_attention: bool = True
@@ -131,7 +132,8 @@ class ModelConfig:
             learnable_T=self.stlt_learnable_T,
             zero_omega=self.stlt_zero_omega,
             adaptive=AdaptiveConfig(enabled=self.stlt_adaptive,
-                                    lambda_mask=self.stlt_mask_reg),
+                                    lambda_mask=self.stlt_mask_reg,
+                                    hard_eval=self.stlt_hard_eval),
             param_dtype=self.p_dtype,
         )
 

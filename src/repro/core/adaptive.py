@@ -44,6 +44,21 @@ def init_adaptive(key: jax.Array, d_model: int, num_heads: int, num_nodes: int, 
     }
 
 
+def masks_from_pooled(params: dict, pooled: jax.Array, cfg: AdaptiveConfig, dtype=jnp.float32):
+    """Deterministic (eval/serve) masks from an already-pooled summary.
+
+    The serve-time contract: prefill pools the carried summary + valid chunk,
+    decode pools the running state mean — both land here so train-eval,
+    prefill, and per-token decode agree on the mask given the same pooled
+    vector.  ``pooled`` is [..., d]; returns m [..., H, S].
+    """
+    logits = jnp.einsum("...d,dhk->...hk", pooled, params["w_alpha"]) + params["b_alpha"]
+    m = jax.nn.sigmoid(logits / cfg.tau)
+    if cfg.hard_eval:
+        m = jax.nn.sigmoid(logits) > cfg.threshold
+    return m.astype(dtype)
+
+
 def node_masks(
     params: dict,
     x: jax.Array,
@@ -64,20 +79,55 @@ def node_masks(
         pooled = (x * pad_mask[..., None]).sum(-2) / denom
     else:
         pooled = x.mean(axis=-2)  # [B, d]
-    logits = jnp.einsum("bd,dhk->bhk", pooled, params["w_alpha"]) + params["b_alpha"]
-    alpha = jax.nn.sigmoid(logits)
-    log_ratio = logits  # log(alpha) - log(1-alpha) == logits (sigmoid inverse)
-    if deterministic or rng is None:
-        noise = 0.0
+    if deterministic:
+        m = masks_from_pooled(params, pooled, cfg, dtype=x.dtype)
     else:
-        # Logistic noise == difference of two Gumbel(0,1)s.
-        u = jax.random.uniform(rng, logits.shape, minval=1e-6, maxval=1.0 - 1e-6)
-        noise = jnp.log(u) - jnp.log1p(-u)
-    m = jax.nn.sigmoid((log_ratio + noise) / cfg.tau)
-    if deterministic and cfg.hard_eval:
-        m = (alpha > cfg.threshold).astype(x.dtype)
+        logits = jnp.einsum("bd,dhk->bhk", pooled, params["w_alpha"]) + params["b_alpha"]
+        log_ratio = logits  # log(alpha) - log(1-alpha) == logits (sigmoid inverse)
+        if rng is None:
+            noise = 0.0
+        else:
+            # Logistic noise == difference of two Gumbel(0,1)s.
+            u = jax.random.uniform(rng, logits.shape, minval=1e-6, maxval=1.0 - 1e-6)
+            noise = jnp.log(u) - jnp.log1p(-u)
+        m = jax.nn.sigmoid((log_ratio + noise) / cfg.tau)
     s_eff = m.sum(axis=(-1, -2)) / m.shape[-2]  # per-batch mean over heads
     return m, s_eff
+
+
+def node_importance(u_re: jax.Array, u_im: jax.Array, log_mag: jax.Array) -> jax.Array:
+    """Static per-node importance: readout gain |u| times the pole's decay
+    mass 1/(1-|lambda|) — a node with large coefficients and a slow decay
+    carries the most signal.  All args [..., S] (typically [H, S])."""
+    gain = jnp.sqrt(u_re.astype(jnp.float32) ** 2 + u_im.astype(jnp.float32) ** 2)
+    mass = 1.0 / jnp.maximum(1.0 - jnp.exp(log_mag.astype(jnp.float32)), 1e-6)
+    return gain * mass
+
+
+def node_rank(imp: jax.Array) -> jax.Array:
+    """Dense descending rank over the last axis, ties broken by index (lower
+    index wins).  rank 0 = most important; ``rank < m`` keeps exactly m nodes.
+    O(S^2) pairwise comparisons — same idiom as ``regularization``: no
+    sort/gather primitive is traced (their JVP rules are broken in this
+    jaxlib build)."""
+    idx = jnp.arange(imp.shape[-1])
+    gt = (imp[..., None, :] > imp[..., :, None]).astype(jnp.int32)
+    tie = (imp[..., None, :] == imp[..., :, None]) & (idx[None, :] < idx[:, None])
+    return (gt + tie.astype(jnp.int32)).sum(-1)
+
+
+def top_m_mask(imp: jax.Array, m: int, dtype=jnp.float32) -> jax.Array:
+    """One-hot keep-mask of the m most important nodes (deterministic,
+    index-tie-broken): exactly m survivors per row even under full ties."""
+    return (node_rank(imp) < m).astype(dtype)
+
+
+def node_cap_mask(imp: jax.Array, cap: jax.Array, dtype=jnp.float32) -> jax.Array:
+    """Per-row capacity mask: imp [H, S] static importance, cap [B] per-row
+    node budget -> [B, H, S] keep-mask.  cap == S keeps every node (the
+    all-ones mask — uncapped rows ride the same dispatch unchanged)."""
+    rank = node_rank(imp)  # [H, S]
+    return (rank[None, :, :] < cap[:, None, None]).astype(dtype)
 
 
 def regularization(

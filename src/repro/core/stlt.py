@@ -129,6 +129,29 @@ def _masked_u(params: dict, masks: Optional[jax.Array]):
     return u_re, u_im
 
 
+def _serve_node_masks(params: dict, cfg: STLTConfig, pooled, node_cap, log_mag):
+    """Deterministic serve-time keep-masks [B, H, S] (or None).
+
+    Combines the adaptive mask (``pooled`` running input mean ->
+    ``masks_from_pooled``, the same deterministic path ``apply_stlt`` takes
+    at eval) with an optional per-row SLO node cap: row b keeps only its
+    ``node_cap[b]`` most important nodes by the static |u|·decay-mass
+    ranking. ``node_cap[b] == S`` is the all-ones mask, so uncapped rows
+    ride the same dispatch unchanged.
+    """
+    masks = None
+    if cfg.adaptive.enabled:
+        masks = adaptive_lib.masks_from_pooled(
+            params["adaptive"], pooled, cfg.adaptive, dtype=jnp.float32)
+    if node_cap is not None:
+        imp = adaptive_lib.node_importance(
+            params["nodes"]["u_re"], params["nodes"]["u_im"], log_mag)
+        cap_m = adaptive_lib.node_cap_mask(
+            imp, jnp.asarray(node_cap, jnp.int32), dtype=jnp.float32)
+        masks = cap_m if masks is None else masks * cap_m
+    return masks
+
+
 def _run_scan(v, log_mag, theta, u_re, u_im, cfg: STLTConfig, reverse: bool):
     """Fused factorized transform on [B, H, N, dh] -> [B, H, N, dh].
 
@@ -380,7 +403,8 @@ def _relevance_readout(params, cfg, x, v, log_mag, theta, masks):
 
 def stlt_prefill(params: dict, cfg: STLTConfig, x: jax.Array,
                  state: Optional[dict] = None,
-                 valid: Optional[jax.Array] = None):
+                 valid: Optional[jax.Array] = None,
+                 node_cap: Optional[jax.Array] = None):
     """Parallel prefill: full-sequence outputs + the O(S*d) streaming state.
 
     x [B, N, d] -> (y [B, N, d], state). Unilateral, factorized mode.
@@ -408,13 +432,22 @@ def stlt_prefill(params: dict, cfg: STLTConfig, x: jax.Array,
     gather over the extended context for the hann ring. Outputs at
     positions >= valid[b] are garbage (causality keeps valid positions
     exact) and must not be read.
+
+    When ``cfg.adaptive.enabled`` the deterministic adaptive node mask is
+    computed for the chunk (pooled over the carried input-mean summary
+    ``asum/acnt`` plus this chunk's valid tokens) and folded into the
+    readout mixers ``u`` — the recurrence itself is mask-independent, so
+    carried ``h`` states stay full-fidelity. ``node_cap`` (optional [B]
+    ints) additionally keeps only each row's top-``node_cap[b]`` nodes by
+    static importance — the SLO serve-nodes path; admission prefill never
+    passes it (only ``spec_verify``, which replaces decode steps, does).
     """
     assert not cfg.bidirectional and cfg.mode == "factorized"
     B, N, d = x.shape
     H = cfg.num_heads
     log_mag, theta, _, _ = _poles(params, cfg)
     v = _split_heads(x @ params["w_v"], H)  # [B, H, N, dh]
-    u_re, u_im = params["nodes"]["u_re"], params["nodes"]["u_im"]
+    live = None
     if valid is not None:
         if state is None:
             state = init_stlt_state(cfg, B)
@@ -423,8 +456,36 @@ def stlt_prefill(params: dict, cfg: STLTConfig, x: jax.Array,
         live = jnp.arange(N)[None, :] < valid[:, None]          # [B, N]
         v = jnp.where(live[:, None, :, None], v, 0.0)
 
+    acfg = cfg.adaptive
+    masks = None
+    sum_state = {}
+    if acfg.enabled or node_cap is not None:
+        pooled = None
+        if acfg.enabled:
+            # Running input-mean summary: carried (asum, acnt) plus this
+            # chunk's valid tokens -> ONE deterministic mask for the whole
+            # chunk. Fresh full-prompt prefill (no carry, no padding) pools
+            # over exactly the prompt, matching apply_lm's eval pooling;
+            # across chunk boundaries the earlier chunks' outputs used the
+            # then-available summary (DESIGN.md §Serving).
+            if live is None:
+                csum = x.sum(-2, dtype=jnp.float32)
+                ccnt = jnp.full((B,), float(N), jnp.float32)
+            else:
+                csum = jnp.where(live[..., None], x, 0).sum(-2, dtype=jnp.float32)
+                ccnt = valid.astype(jnp.float32)
+            asum = (state["asum"] if state is not None and "asum" in state
+                    else jnp.zeros((B, d), jnp.float32))
+            acnt = (state["acnt"] if state is not None and "acnt" in state
+                    else jnp.zeros((B,), jnp.float32))
+            asum, acnt = asum + csum, acnt + ccnt
+            pooled = asum / jnp.maximum(acnt, 1.0)[:, None]
+            sum_state = {"asum": asum, "acnt": acnt}
+        masks = _serve_node_masks(params, cfg, pooled, node_cap, log_mag)
+    u_re, u_im = _masked_u(params, masks)
+
     if cfg.window == "hann":
-        g = _hann_filters(params, cfg, None)
+        g = _hann_filters(params, cfg, masks)
         W = cfg.hann_support
         if state is None:
             z = _hann_conv(v, g, reverse=False)
@@ -461,7 +522,10 @@ def stlt_prefill(params: dict, cfg: STLTConfig, x: jax.Array,
         vb = v.reshape(B * H, N, dh)
         lm = jnp.tile(log_mag, (B, 1))  # [B*H, S], H fastest
         th = jnp.tile(theta, (B, 1))
-        ur, ui = jnp.tile(u_re, (B, 1)), jnp.tile(u_im, (B, 1))
+        if u_re.ndim == 2:  # [H, S] static mixers
+            ur, ui = jnp.tile(u_re, (B, 1)), jnp.tile(u_im, (B, 1))
+        else:  # [B, H, S] per-row masked -> [B*H, S], H fastest (matches vb)
+            ur, ui = u_re.reshape(B * H, S), u_im.reshape(B * H, S)
         h0r = state["h_re"].reshape(B * H, S, dh) if state is not None else None
         h0i = state["h_im"].reshape(B * H, S, dh) if state is not None else None
         vr = None if valid is None else jnp.repeat(valid.astype(jnp.int32), H)
@@ -475,6 +539,10 @@ def stlt_prefill(params: dict, cfg: STLTConfig, x: jax.Array,
         # Carry-native fused-operator scan: seeds from h0 and snapshots the
         # per-row valid state in the same pass (scan_lib.stlt_carry_snapshot).
         vh = v.transpose(1, 0, 2, 3)  # [H, B, N, dh]
+        if u_re.ndim == 2:  # [H, S] static mixers -> shared operators
+            ur, ui = u_re, u_im
+        else:  # [B, H, S] masked -> per-row [H, B, S] operators
+            ur, ui = u_re.transpose(1, 0, 2), u_im.transpose(1, 0, 2)
         if state is None:
             h0_re = h0_im = None
             axes = (0, 0, 0, 0, 0, None, None)
@@ -489,12 +557,16 @@ def stlt_prefill(params: dict, cfg: STLTConfig, x: jax.Array,
                 h0_re=h0r_, h0_im=h0i_, valid=valid)
 
         z, (h_re, h_im) = jax.vmap(per_head_fused, in_axes=axes)(
-            vh, log_mag, theta, u_re, u_im, h0_re, h0_im)
+            vh, log_mag, theta, ur, ui, h0_re, h0_im)
         z = z.transpose(1, 0, 2, 3)
         new_state = {"h_re": h_re.transpose(1, 0, 2, 3),
                      "h_im": h_im.transpose(1, 0, 2, 3)}
     else:
         vh = v.transpose(1, 0, 2, 3)  # [H, B, N, dh]
+        if u_re.ndim == 2:  # [H, S]
+            ur, ui = u_re[:, None, :], u_im[:, None, :]
+        else:  # [B, H, S] masked -> [H, B, S]
+            ur, ui = u_re.transpose(1, 0, 2), u_im.transpose(1, 0, 2)
         if state is None:
             h0_re = jnp.zeros((H, B, cfg.num_nodes, cfg.head_dim), jnp.float32)
             h0_im = h0_re
@@ -512,8 +584,7 @@ def stlt_prefill(params: dict, cfg: STLTConfig, x: jax.Array,
             )
 
         z, (h_re, h_im) = jax.vmap(per_head)(
-            vh, log_mag, theta, u_re[:, None, :], u_im[:, None, :],
-            h0_re, h0_im,
+            vh, log_mag, theta, ur, ui, h0_re, h0_im,
         )
         z = z.transpose(1, 0, 2, 3)
         new_state = {
@@ -521,6 +592,8 @@ def stlt_prefill(params: dict, cfg: STLTConfig, x: jax.Array,
             "h_im": h_im.transpose(1, 0, 2, 3),
         }
 
+    if sum_state:
+        new_state = {**new_state, **sum_state}
     z = _merge_heads(z)
     if cfg.gate:
         z = z * jax.nn.silu(x @ params["w_g"])
@@ -532,15 +605,24 @@ def init_stlt_state(cfg: STLTConfig, batch: int, dtype=jnp.float32):
 
     Every leaf carries a leading [batch] axis (including the hann ring's
     ``pos``) so states are sliceable/splicable per sequence — the invariant
-    the serving slot pool relies on (see ``stlt_state_slice``)."""
+    the serving slot pool relies on (see ``stlt_state_slice``).
+
+    Adaptive configs carry two extra leaves: ``asum`` [batch, d_model] /
+    ``acnt`` [batch], the running sum and count of (normed) layer inputs
+    that prefill/decode pool into the deterministic serve-time node mask."""
     H, S, dh = cfg.num_heads, cfg.num_nodes, cfg.head_dim
     if cfg.window == "hann":
-        return {"buf": jnp.zeros((batch, H, cfg.hann_support, dh), dtype),
-                "pos": jnp.zeros((batch,), jnp.int32)}
-    return {
-        "h_re": jnp.zeros((batch, H, S, dh), dtype),
-        "h_im": jnp.zeros((batch, H, S, dh), dtype),
-    }
+        st = {"buf": jnp.zeros((batch, H, cfg.hann_support, dh), dtype),
+              "pos": jnp.zeros((batch,), jnp.int32)}
+    else:
+        st = {
+            "h_re": jnp.zeros((batch, H, S, dh), dtype),
+            "h_im": jnp.zeros((batch, H, S, dh), dtype),
+        }
+    if cfg.adaptive.enabled:
+        st["asum"] = jnp.zeros((batch, cfg.d_model), jnp.float32)
+        st["acnt"] = jnp.zeros((batch,), jnp.float32)
+    return st
 
 
 def stlt_state_at(params: dict, cfg: STLTConfig, x: jax.Array, state: dict,
@@ -560,6 +642,16 @@ def stlt_state_at(params: dict, cfg: STLTConfig, x: jax.Array, state: dict,
         state = init_stlt_state(cfg, B)
     q = jnp.asarray(q, jnp.int32)
     v = _split_heads(x @ params["w_v"], H)  # [B, H, N, dh]
+    sum_state = {}
+    if cfg.adaptive.enabled:
+        # the accepted prefix (first q[b] tokens) joins the running
+        # input-mean summary, exactly as q[b] decode steps would have
+        live = jnp.arange(N)[None, :] < q[:, None]
+        csum = jnp.where(live[..., None], x, 0).sum(-2, dtype=jnp.float32)
+        asum = (state["asum"] if "asum" in state
+                else jnp.zeros((B, x.shape[-1]), jnp.float32))
+        acnt = state["acnt"] if "acnt" in state else jnp.zeros((B,), jnp.float32)
+        sum_state = {"asum": asum + csum, "acnt": acnt + q.astype(jnp.float32)}
     if cfg.window == "hann":
         W = cfg.hann_support
         ctx = state["buf"][:, :, ::-1].astype(v.dtype)       # [B, H, W, dh]
@@ -569,7 +661,8 @@ def stlt_state_at(params: dict, cfg: STLTConfig, x: jax.Array, state: dict,
         idx = (W + q[:, None] - 1) - jnp.arange(W)[None, :]  # [B, W]
         buf = jnp.take_along_axis(
             ext.astype(jnp.float32), idx[:, None, :, None], axis=2)
-        return {"buf": buf, "pos": state["pos"] + q.astype(state["pos"].dtype)}
+        return {"buf": buf, "pos": state["pos"] + q.astype(state["pos"].dtype),
+                **sum_state}
     log_mag, theta, _, _ = _poles(params, cfg)
     S, dh = cfg.num_nodes, cfg.head_dim
     vb = v.reshape(B * H, N, dh).astype(jnp.float32)
@@ -580,7 +673,7 @@ def stlt_state_at(params: dict, cfg: STLTConfig, x: jax.Array, state: dict,
     h_re, h_im = scan_lib.stlt_window_state(
         vb, h0r, h0i, lm, th, jnp.repeat(q, H))
     return {"h_re": h_re.reshape(B, H, S, dh),
-            "h_im": h_im.reshape(B, H, S, dh)}
+            "h_im": h_im.reshape(B, H, S, dh), **sum_state}
 
 
 def stlt_state_slice(state: dict, index, length: int = 1) -> dict:
@@ -601,29 +694,55 @@ def stlt_state_insert(pool: dict, state: dict, index) -> dict:
     )
 
 
-def apply_stlt_step(params: dict, cfg: STLTConfig, x_t: jax.Array, state: dict):
+def apply_stlt_step(params: dict, cfg: STLTConfig, x_t: jax.Array, state: dict,
+                    node_cap: Optional[jax.Array] = None):
     """One decode step. x_t: [B, d_model] -> (y_t [B, d_model], new state).
 
-    Unilateral only (decoders are causal); adaptive masks at decode time use
-    the deterministic path pooled over the running state mean.
+    Unilateral only (decoders are causal). When ``cfg.adaptive.enabled``
+    the deterministic adaptive mask is recomputed every step from the
+    running input-mean summary carried in the state (``asum``/``acnt``,
+    updated here to include the current token) and folded into the readout
+    mixers. ``node_cap`` (optional [B] ints) keeps only each row's top-k
+    nodes by static importance — the SLO serve-nodes path; ``cap == S``
+    rows are unmasked and ride the same compiled program.
     """
     assert not cfg.bidirectional, "decode is causal"
     B, d = x_t.shape
     H = cfg.num_heads
     v_t = (x_t @ params["w_v"]).reshape(B, H, cfg.head_dim)
     log_mag, theta, _, _ = _poles(params, cfg)
-    u_re, u_im = params["nodes"]["u_re"], params["nodes"]["u_im"]
+
+    acfg = cfg.adaptive
+    masks = None
+    sum_state = {}
+    if acfg.enabled or node_cap is not None:
+        pooled = None
+        if acfg.enabled:
+            asum = (state["asum"] if "asum" in state
+                    else jnp.zeros((B, d), jnp.float32))
+            acnt = state["acnt"] if "acnt" in state else jnp.zeros((B,), jnp.float32)
+            asum = asum + x_t.astype(jnp.float32)
+            acnt = acnt + 1.0
+            pooled = asum / jnp.maximum(acnt, 1.0)[:, None]
+            sum_state = {"asum": asum, "acnt": acnt}
+        masks = _serve_node_masks(params, cfg, pooled, node_cap, log_mag)
+    u_re, u_im = _masked_u(params, masks)
 
     if cfg.window == "hann":
-        g = _hann_filters(params, cfg, None)  # [H, W]
+        g = _hann_filters(params, cfg, masks)  # [H, W] or [B, H, W]
         buf = jnp.roll(state["buf"], 1, axis=2).at[:, :, 0].set(v_t)
-        z = jnp.einsum("bhwd,hw->bhd", buf, g)
+        if g.ndim == 3:
+            z = jnp.einsum("bhwd,bhw->bhd", buf, g)
+        else:
+            z = jnp.einsum("bhwd,hw->bhd", buf, g)
         new_state = {"buf": buf, "pos": state["pos"] + 1}
     else:
         z, h_re, h_im = scan_lib.stlt_decode_step(
             v_t, state["h_re"], state["h_im"], log_mag, theta, u_re, u_im
         )
         new_state = {"h_re": h_re, "h_im": h_im}
+    if sum_state:
+        new_state = {**new_state, **sum_state}
 
     z = z.reshape(B, d)
     if cfg.gate:

@@ -94,6 +94,19 @@ def main(argv=None):
     ap.add_argument("--spec-draft-nodes", type=int, default=4,
                     help="top-m Laplace nodes kept per head in the "
                          "node-subset draft (--spec-draft nodes)")
+    ap.add_argument("--serve-nodes", type=int, default=0,
+                    help="decode every request with only the top-m Laplace "
+                         "nodes per head (0 = full S; STLT archs only)")
+    ap.add_argument("--slo-gap-ms", type=float, default=0.0,
+                    help="SLO: degrade node budget when the wall-clock gap "
+                         "between decode ticks exceeds this (0 = off)")
+    ap.add_argument("--slo-queue-depth", type=int, default=0,
+                    help="SLO: degrade node budget when this many requests "
+                         "are still queued after admission (0 = off)")
+    ap.add_argument("--slo-degrade", default="",
+                    help="comma-separated node-budget ladder for SLO "
+                         "degradation, e.g. '16,8,4' (requires a trigger: "
+                         "--slo-gap-ms or --slo-queue-depth)")
     args = ap.parse_args(argv)
 
     cfg = paper_small() if args.arch is None else configs_lib.get_config(
@@ -119,6 +132,11 @@ def main(argv=None):
                          "the verify rule is exact for argmax streams only")
     spec_kw = dict(spec_k=args.spec_k, spec_draft=args.spec_draft,
                    spec_draft_nodes=args.spec_draft_nodes)
+    ladder = tuple(int(m) for m in args.slo_degrade.split(",") if m.strip())
+    node_kw = dict(serve_nodes=args.serve_nodes or None,
+                   slo_gap_ms=args.slo_gap_ms,
+                   slo_queue_depth=args.slo_queue_depth,
+                   slo_degrade=ladder)
     use_cache = args.system_prompt_len and args.mode == "continuous"
     cache = None
     cache_kw = dict(
@@ -151,7 +169,8 @@ def main(argv=None):
             params, cfg, n_hosts=args.mesh_data,
             slots_per_host=args.slots_per_host or args.slots,
             max_len=args.max_len, temperature=args.temperature,
-            prefill_chunk=args.prefill_chunk, prefix_cache=cache, **spec_kw)
+            prefill_chunk=args.prefill_chunk, prefix_cache=cache,
+            **spec_kw, **node_kw)
         print(f"[serve] sharded: {eng.n_hosts} hosts x "
               f"{eng.slots_per_host} slots over mesh {dict(eng.mesh.shape)}")
     else:
@@ -160,7 +179,7 @@ def main(argv=None):
         eng = ServeEngine(params, cfg, max_len=args.max_len,
                           temperature=args.temperature,
                           prefill_chunk=args.prefill_chunk, prefix_cache=cache,
-                          **spec_kw)
+                          **spec_kw, **node_kw)
     rng = np.random.default_rng(0)
     sys_len = args.system_prompt_len if use_cache else 0
     sys_prompt = rng.integers(3, cfg.vocab, sys_len).astype(np.int32)
@@ -202,6 +221,13 @@ def main(argv=None):
               f"{ss['verify_calls']} verify dispatches for {ss['emitted']} "
               f"tokens ({ss['emitted']/max(ss['verify_calls'],1):.2f} "
               f"tok/dispatch), draft accept rate {100*acc:.1f}%")
+    if ladder:
+        ns = eng.node_stats
+        print(f"[serve] slo ladder={ns['ladder']}: "
+              f"{ns['degrade_steps']} degrades / {ns['restore_steps']} "
+              f"restores, {ns['ticks_degraded']} ticks degraded "
+              f"(min {ns['min_nodes']} nodes; breaches: "
+              f"gap={ns['gap_breaches']} queue={ns['queue_breaches']})")
     if args.mesh_data:
         per_host = {h: 0 for h in range(eng.n_hosts)}
         for s in stats.values():

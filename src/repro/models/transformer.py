@@ -246,8 +246,11 @@ def apply_lm(
         logits = x @ params["lm_head"]["kernel"]
     else:
         logits = L.unembed(params["embed"], x)
-    nl = max(1, cfg.num_layers)
-    total_aux["s_eff"] = total_aux["s_eff"] / nl
+    # s_eff is summed only over STLT blocks (others contribute 0): normalize
+    # by the STLT block count, not num_layers — hybrid stlt+attn stacks would
+    # otherwise understate the reported S_eff.
+    n_stlt = sum(c for bt, c in execution_plan(cfg) if bt in ("stlt", "stlt_rel"))
+    total_aux["s_eff"] = total_aux["s_eff"] / max(1, n_stlt)
     return logits, total_aux
 
 
@@ -392,7 +395,7 @@ def prefill(params: dict, cfg: ModelConfig, inputs: jax.Array, max_len: int):
 
 
 def _block_prefill_chunk(params, cfg: ModelConfig, btype: str, x, state,
-                         valid=None):
+                         valid=None, node_cap=None):
     """Advance one block's streaming state by one prompt chunk (state=None:
     fresh monolithic prefill — the mixers treat both uniformly).
 
@@ -403,7 +406,12 @@ def _block_prefill_chunk(params, cfg: ModelConfig, btype: str, x, state,
     load-bearing, not just insurance: e.g. a fresh mLSTM row (stabilizer
     m = -1e30) degenerates under the gate-neutralization trick when it sees
     only pad steps, and the engine's coalesced dispatch runs every slot of
-    the prefill pool, pending or not."""
+    the prefill pool, pending or not.
+
+    ``node_cap`` (optional [B] ints) is the per-row SLO node budget,
+    forwarded to the STLT mixer only. Only ``spec_verify`` (which replaces
+    decode steps) passes it — admission prefill always runs at full S so
+    carried states and cached prefixes stay full-fidelity."""
     h = L.apply_norm(cfg.norm, params["norm1"], x)
     old_state = state
     if btype in ("attn", "local_attn"):
@@ -412,7 +420,8 @@ def _block_prefill_chunk(params, cfg: ModelConfig, btype: str, x, state,
             params["attn"], _attn_cfg(cfg, window), h, state, valid=valid)
     elif btype == "stlt":
         mixed, state = stlt_lib.stlt_prefill(
-            params["stlt"], cfg.stlt_config(), h, state, valid=valid)
+            params["stlt"], cfg.stlt_config(), h, state, valid=valid,
+            node_cap=node_cap)
     elif btype == "mlstm":
         mixed, state = xlstm_lib.mlstm_prefill(params["cell"], cfg, h, state,
                                                valid=valid)
@@ -539,7 +548,7 @@ def _block_state_at(params, cfg: ModelConfig, btype: str, x, state, q):
 
 
 def spec_verify(params: dict, cfg: ModelConfig, inputs: jax.Array, state: dict,
-                valid_len: jax.Array):
+                valid_len: jax.Array, node_cap: Optional[jax.Array] = None):
     """Speculative verify-accept-rollback: score a k-token draft window in
     ONE dispatch and advance every layer's state by exactly the accepted
     length (DESIGN.md §Serving).
@@ -567,6 +576,10 @@ def spec_verify(params: dict, cfg: ModelConfig, inputs: jax.Array, state: dict,
       state-only pass reads each layer's carry at the accepted length
       (closed-form snapshot for STLT, masked prefill for the rest), so a
       rejected draft suffix is never folded into any carry.
+
+    ``node_cap`` (optional [B] ints) applies the per-row SLO node budget to
+    the scoring pass — verify replaces decode steps, so capped rows must
+    score their window under the same top-k node mask decode would use.
     """
     pos = state["pos"]
     if pos.ndim == 0:  # legacy scalar-pos states
@@ -593,13 +606,15 @@ def spec_verify(params: dict, cfg: ModelConfig, inputs: jax.Array, state: dict,
             def body(x_in, scanned):
                 layer_params, layer_state = scanned
                 x_out, _ = _block_prefill_chunk(
-                    layer_params, cfg, btype, x_in, layer_state)
+                    layer_params, cfg, btype, x_in, layer_state,
+                    node_cap=node_cap)
                 return x_out, x_in
 
             x, xs = jax.lax.scan(body, x, (stacked, st))
         else:
             xs = x
-            x, _ = _block_prefill_chunk(stacked, cfg, btype, x, st)
+            x, _ = _block_prefill_chunk(stacked, cfg, btype, x, st,
+                                        node_cap=node_cap)
         xs_saved.append(xs)
 
     xf = L.apply_norm(cfg.norm, params["final_norm"], x)
@@ -636,7 +651,8 @@ def spec_verify(params: dict, cfg: ModelConfig, inputs: jax.Array, state: dict,
     return greedy, commit, {"layers": new_states, "pos": pos + commit}
 
 
-def _block_step(params, cfg: ModelConfig, btype: str, x_t, state, pos):
+def _block_step(params, cfg: ModelConfig, btype: str, x_t, state, pos,
+                node_cap=None):
     h = L.apply_norm(cfg.norm, params["norm1"], x_t[:, None, :])[:, 0]
     if btype in ("attn", "local_attn"):
         window = cfg.local_window if btype == "local_attn" else 0
@@ -644,7 +660,8 @@ def _block_step(params, cfg: ModelConfig, btype: str, x_t, state, pos):
             params["attn"], _attn_cfg(cfg, window), h, state
         )
     elif btype in ("stlt", "stlt_rel"):
-        mixed, state = stlt_lib.apply_stlt_step(params["stlt"], cfg.stlt_config(), h, state)
+        mixed, state = stlt_lib.apply_stlt_step(
+            params["stlt"], cfg.stlt_config(), h, state, node_cap=node_cap)
     elif btype == "mlstm":
         mixed, state = xlstm_lib.apply_mlstm_step(params["cell"], cfg, h, state)
     elif btype == "slstm":
@@ -665,11 +682,14 @@ def _block_step(params, cfg: ModelConfig, btype: str, x_t, state, pos):
     return x_t, state
 
 
-def decode_step(params: dict, cfg: ModelConfig, token_t: jax.Array, state: dict):
+def decode_step(params: dict, cfg: ModelConfig, token_t: jax.Array, state: dict,
+                node_cap: Optional[jax.Array] = None):
     """One token for the whole stack. token_t [B] ints (or [B, d] embeddings).
 
     ``state["pos"]`` is a per-sequence [B] vector; positional encodings are
     evaluated per row so co-resident slots may sit at different depths.
+    ``node_cap`` (optional [B] ints) is the per-row SLO node budget for STLT
+    blocks (``cap == S`` rows run unmasked in the same compiled program).
     """
     pos = state["pos"]
     if pos.ndim == 0:  # legacy scalar-pos states
@@ -692,12 +712,14 @@ def decode_step(params: dict, cfg: ModelConfig, token_t: jax.Array, state: dict)
 
             def body(x_in, scanned):
                 layer_params, layer_state = scanned
-                x_out, new_s = _block_step(layer_params, cfg, btype, x_in, layer_state, pos)
+                x_out, new_s = _block_step(layer_params, cfg, btype, x_in,
+                                           layer_state, pos, node_cap=node_cap)
                 return x_out, new_s
 
             x_t, new_s = jax.lax.scan(body, x_t, (stacked, st))
         else:
-            x_t, new_s = _block_step(stacked, cfg, btype, x_t, st, pos)
+            x_t, new_s = _block_step(stacked, cfg, btype, x_t, st, pos,
+                                     node_cap=node_cap)
         new_states.append(new_s)
 
     x_t = L.apply_norm(cfg.norm, params["final_norm"], x_t[:, None, :])[:, 0]

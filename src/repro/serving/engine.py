@@ -93,6 +93,11 @@ class Request:
     max_new_tokens: int
     id: int = 0
     temperature: Optional[float] = None  # None -> engine default
+    # per-request STLT node budget (None -> engine default -> full S):
+    # latency-sensitive requests decode with only their top-serve_nodes
+    # Laplace nodes per head; mixed levels ride ONE dispatch (same trick as
+    # valid_len — the cap is a [B] argument, not a shape)
+    serve_nodes: Optional[int] = None
 
 
 class Scheduler:
@@ -175,7 +180,10 @@ class ServeEngine:
                  prefill_chunk: Optional[int] = None,
                  prefix_cache: Optional[PrefixCache] = None,
                  spec_k: int = 0, spec_draft: str = "ngram",
-                 spec_draft_nodes: int = 4):
+                 spec_draft_nodes: int = 4,
+                 serve_nodes: Optional[int] = None,
+                 slo_gap_ms: float = 0.0, slo_queue_depth: int = 0,
+                 slo_degrade: tuple = (), slo_recovery_ticks: int = 8):
         """``prefill_chunk``: split prompts longer than this into chunks
         admitted one per tick, interleaved with decode (None/0 -> monolithic
         admission). ``prefix_cache``: reuse post-prefix streaming states
@@ -192,6 +200,21 @@ class ServeEngine:
         head) and scores them in ONE ``spec_verify`` dispatch, emitting
         every accepted token plus the model's bonus token. Token output is
         exactly the plain greedy stream; only the dispatch count changes.
+
+        ``serve_nodes``: default STLT node budget for every request (None ->
+        full S); each :class:`Request` may override it. Caps apply to
+        decode/verify dispatches only — admission prefill always runs at
+        full S, so carried states and cached prefixes stay full-fidelity
+        and restoring the budget recovers quality instantly.
+
+        ``slo_degrade``: a descending ladder of node budgets, e.g.
+        ``(16, 8, 4)``, the scheduler steps DOWN when a decode tick breaches
+        the SLO — inter-token wall gap > ``slo_gap_ms`` (when > 0) or
+        post-admission queue depth >= ``slo_queue_depth`` (when > 0) — and
+        back UP after ``slo_recovery_ticks`` consecutive healthy ticks.
+        Degrading S trades per-token quality for throughput instead of
+        queueing; ``node_stats`` records the trajectory (mirrors
+        ``spec_stats``).
         """
         self.params = params
         self.cfg = cfg
@@ -213,6 +236,52 @@ class ServeEngine:
         # per-serve speculative accounting (verify dispatches, draft/accept
         # token counts); reset at the top of every _serve_ticks run
         self.spec_stats: dict = {}
+        self._has_stlt = any(bt in ("stlt", "stlt_rel")
+                             for bt, _ in T.execution_plan(cfg))
+        if spec_k and self._has_stlt and cfg.stlt_adaptive:
+            # spec_verify scores the whole draft window under ONE pooled
+            # adaptive mask, but per-token decode recomputes the mask each
+            # step — the two would disagree, breaking spec token-exactness
+            raise ValueError(
+                "speculative decoding is incompatible with adaptive node "
+                "masks (stlt_adaptive=True): verify pools one mask per "
+                "window, decode pools one per token")
+        S = cfg.stlt_nodes
+        if serve_nodes is not None:
+            if not self._has_stlt:
+                raise ValueError("serve_nodes requires an STLT mixer")
+            if not 1 <= serve_nodes <= S:
+                raise ValueError(
+                    f"serve_nodes must be in [1, {S}] (got {serve_nodes})")
+        self.serve_nodes = serve_nodes
+        slo_degrade = tuple(int(m) for m in (slo_degrade or ()))
+        if slo_degrade:
+            if not self._has_stlt:
+                raise ValueError("slo_degrade requires an STLT mixer")
+            if not (slo_gap_ms > 0 or slo_queue_depth > 0):
+                raise ValueError(
+                    "slo_degrade needs a trigger: set slo_gap_ms and/or "
+                    "slo_queue_depth")
+            for m in slo_degrade:
+                if not 1 <= m <= S:
+                    raise ValueError(
+                        f"slo_degrade levels must be in [1, {S}] "
+                        f"(got {slo_degrade})")
+        if slo_recovery_ticks < 1:
+            raise ValueError(
+                f"slo_recovery_ticks must be >= 1 (got {slo_recovery_ticks})")
+        self.slo_gap_ms = slo_gap_ms
+        self.slo_queue_depth = slo_queue_depth
+        self.slo_degrade = slo_degrade
+        self.slo_recovery_ticks = slo_recovery_ticks
+        # SLO degradation state machine (reset per _serve_ticks run):
+        # _slo_level indexes slo_degrade (-1 = undegraded)
+        self._slo_level = -1
+        self._slo_streak = 0
+        self._slo_last_wall: Optional[float] = None
+        # per-serve node-budget accounting, mirrors spec_stats
+        self.node_stats: dict = {}
+        self._full_caps_cache: dict[int, jax.Array] = {}
         self.prefix_cache = prefix_cache
         self._prefill = jax.jit(partial(T.prefill, cfg=cfg, max_len=max_len))
         self._prefill_chunk = jax.jit(partial(T.prefill_chunk, cfg=cfg))
@@ -230,9 +299,20 @@ class ServeEngine:
             bt == "attn" for bt, _ in T.execution_plan(cfg))
 
     # ------------------------------------------------------------------ simple
-    def generate(self, prompts: np.ndarray, max_new_tokens: int, rng=None):
-        """prompts [B, L] -> generated tokens [B, max_new_tokens]."""
+    def generate(self, prompts: np.ndarray, max_new_tokens: int, rng=None,
+                 serve_nodes: Optional[int] = None):
+        """prompts [B, L] -> generated tokens [B, max_new_tokens].
+
+        ``serve_nodes`` caps the STLT node budget for every row of this
+        call (None -> engine default -> full S); prefill runs at full S,
+        exactly like the serving path."""
         rng = rng if rng is not None else jax.random.key(0)
+        level = serve_nodes if serve_nodes is not None else self.serve_nodes
+        S = self.cfg.stlt_nodes
+        if level is not None and not 1 <= level <= S:
+            raise ValueError(f"serve_nodes must be in [1, {S}] (got {level})")
+        caps = jnp.full((len(prompts),), level if level is not None else S,
+                        jnp.int32)
         logits, state = self._prefill(self.params, inputs=jnp.asarray(prompts))
         outs = []
         # split BEFORE the first sample: the carried chain must never reuse
@@ -242,7 +322,8 @@ class ServeEngine:
         outs.append(tok)
         for i in range(max_new_tokens - 1):
             rng, sub = jax.random.split(rng)
-            logits, state = self._step(self.params, token_t=tok, state=state)
+            logits, state = self._step(self.params, token_t=tok, state=state,
+                                       node_cap=caps)
             tok = sample_token(logits, sub, self.temperature, self.top_k)
             outs.append(tok)
         return np.stack([np.asarray(t) for t in outs], axis=1)
@@ -331,6 +412,14 @@ class ServeEngine:
                 raise ValueError(
                     f"request {r.id}: max_new_tokens must be >= 1 "
                     f"(got {r.max_new_tokens})")
+            if r.serve_nodes is not None:
+                if not self._has_stlt:
+                    raise ValueError(
+                        f"request {r.id}: serve_nodes requires an STLT mixer")
+                if not 1 <= r.serve_nodes <= self.cfg.stlt_nodes:
+                    raise ValueError(
+                        f"request {r.id}: serve_nodes must be in "
+                        f"[1, {self.cfg.stlt_nodes}] (got {r.serve_nodes})")
             n_prompt = len(np.asarray(r.prompt))
             if prompt_len is not None and n_prompt > prompt_len:
                 raise ValueError(
@@ -425,12 +514,26 @@ class ServeEngine:
         return self._prefill_chunk(params, inputs=toks, state=state,
                                    valid_len=valid)
 
-    def _ops_decode(self, params, tok, pool):
-        return self._step(params, token_t=tok, state=pool)
+    def _full_caps(self, b: int):
+        """Cached full-S node-cap array: a cap == S row is the all-ones
+        mask, so uncapped traffic and capped traffic share ONE compiled
+        decode/verify program (the cap is a data argument, not a shape)."""
+        if b not in self._full_caps_cache:
+            self._full_caps_cache[b] = jnp.full((b,), self.cfg.stlt_nodes,
+                                                jnp.int32)
+        return self._full_caps_cache[b]
 
-    def _ops_verify(self, params, toks, valid, pool):
+    def _ops_decode(self, params, tok, pool, caps=None):
+        if caps is None:
+            caps = self._full_caps(tok.shape[0])
+        return self._step(params, token_t=tok, state=pool, node_cap=caps)
+
+    def _ops_verify(self, params, toks, valid, pool, caps=None):
         """ONE spec_verify dispatch: score + accept + rollback ([B, k+1])."""
-        return self._verify(params, inputs=toks, state=pool, valid_len=valid)
+        if caps is None:
+            caps = self._full_caps(toks.shape[0])
+        return self._verify(params, inputs=toks, state=pool, valid_len=valid,
+                            node_cap=caps)
 
     def _ops_lookup(self, prompt, h: int):
         return self._lookup_prefix(prompt)
@@ -443,6 +546,58 @@ class ServeEngine:
         passthrough; the sharded engine routes least-loaded)."""
         while queue and queue[0][0] <= tick:
             hosts[0].queue.append(queue.pop(0))
+
+    # ------------------------------------------------------- SLO node budget
+    def _row_caps(self, hosts, K: int) -> np.ndarray:
+        """Per-row node budgets [B] for this decode tick: request override
+        -> engine default -> full S, then clamped down by the current SLO
+        degradation level. Free/pending rows get full S (no-op rows)."""
+        S = self.cfg.stlt_nodes
+        caps = np.full(len(hosts) * K, S, np.int32)
+        ladder_cap = (self.slo_degrade[self._slo_level]
+                      if self._slo_level >= 0 else S)
+        for h, host in enumerate(hosts):
+            sched = host.sched
+            for local in np.flatnonzero(sched.live):
+                req = sched.req[local]
+                base = (req.serve_nodes if req.serve_nodes is not None
+                        else self.serve_nodes)
+                base = S if base is None else base
+                caps[h * K + local] = max(1, min(base, ladder_cap, S))
+        return caps
+
+    def _slo_update(self, hosts, gap_ms: Optional[float]):
+        """One step of the degrade/restore state machine, after a decode
+        tick: any breach (inter-token wall gap or queue depth) steps one
+        level DOWN the ladder and resets the healthy streak; a healthy
+        streak of ``slo_recovery_ticks`` steps one level back UP."""
+        if not self.slo_degrade:
+            return
+        ns = self.node_stats
+        qdepth = sum(len(h_.queue) for h_ in hosts)
+        gap_breach = bool(self.slo_gap_ms > 0 and gap_ms is not None
+                          and gap_ms > self.slo_gap_ms)
+        queue_breach = bool(self.slo_queue_depth > 0
+                            and qdepth >= self.slo_queue_depth)
+        if gap_breach:
+            ns["gap_breaches"] += 1
+        if queue_breach:
+            ns["queue_breaches"] += 1
+        if gap_breach or queue_breach:
+            if self._slo_level < len(self.slo_degrade) - 1:
+                self._slo_level += 1
+                ns["degrade_steps"] += 1
+            self._slo_streak = 0
+        else:
+            self._slo_streak += 1
+            if self._slo_level >= 0 and self._slo_streak >= self.slo_recovery_ticks:
+                self._slo_level -= 1
+                ns["restore_steps"] += 1
+                self._slo_streak = 0
+        if self._slo_level >= 0:
+            ns["ticks_degraded"] += 1
+            ns["min_nodes"] = min(ns["min_nodes"],
+                                  int(self.slo_degrade[self._slo_level]))
 
     def _make_draft(self, n_slots: int):
         if not self.spec_k:
@@ -481,6 +636,14 @@ class ServeEngine:
         spec = self._make_draft(B)
         self.spec_stats = {"verify_calls": 0, "drafted": 0, "accepted": 0,
                            "emitted": 0, "k": self.spec_k}
+        self._slo_level = -1
+        self._slo_streak = 0
+        self._slo_last_wall = None
+        self.node_stats = {"degrade_steps": 0, "restore_steps": 0,
+                           "ticks_degraded": 0, "gap_breaches": 0,
+                           "queue_breaches": 0,
+                           "min_nodes": int(cfg.stlt_nodes),
+                           "ladder": list(self.slo_degrade)}
         if spec is not None:
             if self.temperature and self.temperature > 0:
                 raise ValueError(
@@ -698,13 +861,16 @@ class ServeEngine:
                 prefill_pool = None
 
             # --- ...plus one decode step (or draft-verify round) ------------
+            decoded = any_live()
             if any_live() and spec is not None:
+                caps = jnp.asarray(self._row_caps(hosts, K))
                 pool, tick = self._spec_tick(hosts, spec, pool, tok, results,
-                                             tick)
+                                             tick, caps)
             elif any_live():
+                caps = jnp.asarray(self._row_caps(hosts, K))
                 keys, subs = self._split(keys)
                 logits, pool = self._ops_decode(self.params, jnp.asarray(tok),
-                                                pool)
+                                                pool, caps)
                 nxt = np.array(self._sample(logits, subs, jnp.asarray(temps)))
                 tick += 1
                 now = time.perf_counter()
@@ -726,6 +892,15 @@ class ServeEngine:
             elif any_pending():
                 tick += 1  # prefill-only tick (nothing decoding yet)
 
+            if self.slo_degrade:
+                gap_ms = None
+                if decoded:
+                    now_slo = time.perf_counter()
+                    if self._slo_last_wall is not None:
+                        gap_ms = (now_slo - self._slo_last_wall) * 1e3
+                    self._slo_last_wall = now_slo
+                self._slo_update(hosts, gap_ms)
+
             self._cache_tick(tick - tick_was)
 
         out = {rid: np.array(toks, np.int32) for rid, toks in results.items()}
@@ -737,7 +912,7 @@ class ServeEngine:
         return out, stats
 
     # ------------------------------------------------------------ speculative
-    def _spec_tick(self, hosts, spec, pool, tok, results, tick):
+    def _spec_tick(self, hosts, spec, pool, tok, results, tick, caps=None):
         """One draft-verify-accept round (DESIGN.md §Serving): draft k
         tokens per live row, score the whole window in ONE ``spec_verify``
         dispatch, emit every accepted token plus the model's bonus token,
@@ -760,7 +935,7 @@ class ServeEngine:
                 remaining = int(sched.budgets[local] - sched.emitted[local])
                 valid[h * K + local] = min(L, remaining)
         greedy, commit, pool = self._ops_verify(
-            self.params, jnp.asarray(inputs), jnp.asarray(valid), pool)
+            self.params, jnp.asarray(inputs), jnp.asarray(valid), pool, caps)
         greedy = np.asarray(greedy)
         commit = np.asarray(commit)
         tick += 1

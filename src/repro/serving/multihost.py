@@ -93,7 +93,10 @@ class ShardedServeEngine(ServeEngine):
                  eos_id: int = -1, top_k: int = 0, prefill_chunk: int = 256,
                  prefix_cache: Optional[ReplicatedPrefixCache] = None,
                  spec_k: int = 0, spec_draft: str = "ngram",
-                 spec_draft_nodes: int = 4):
+                 spec_draft_nodes: int = 4,
+                 serve_nodes: Optional[int] = None, slo_gap_ms: float = 0.0,
+                 slo_queue_depth: int = 0, slo_degrade=(),
+                 slo_recovery_ticks: int = 8):
         if prefill_chunk < 1:
             raise ValueError(
                 "ShardedServeEngine admits through the chunked two-shape "
@@ -108,7 +111,11 @@ class ShardedServeEngine(ServeEngine):
                          eos_id=eos_id, top_k=top_k, prefill_chunk=prefill_chunk,
                          prefix_cache=prefix_cache, spec_k=spec_k,
                          spec_draft=spec_draft,
-                         spec_draft_nodes=spec_draft_nodes)
+                         spec_draft_nodes=spec_draft_nodes,
+                         serve_nodes=serve_nodes, slo_gap_ms=slo_gap_ms,
+                         slo_queue_depth=slo_queue_depth,
+                         slo_degrade=slo_degrade,
+                         slo_recovery_ticks=slo_recovery_ticks)
         self.mesh = mesh if mesh is not None else make_serve_mesh(
             n_hosts if n_hosts is not None else jax.device_count())
         if "data" not in self.mesh.axis_names:
@@ -131,8 +138,12 @@ class ShardedServeEngine(ServeEngine):
 
         # the same two row-independent dispatches as the single-host engine,
         # shard_map'd so each host runs its own K-row range; params replicated
-        def _step_body(params, tok, state):
-            return T.decode_step(params, cfg=cfg, token_t=tok, state=state)
+        # per-row node caps ride the data axis like the token rows: the
+        # engine always passes a [B] caps array (full-S when nobody is
+        # capped), so capped and uncapped traffic share ONE program here too
+        def _step_body(params, tok, state, caps):
+            return T.decode_step(params, cfg=cfg, token_t=tok, state=state,
+                                 node_cap=caps)
 
         def _prefill_body(params, toks, state, valid):
             return T.prefill_chunk(params, cfg=cfg, inputs=toks, state=state,
@@ -141,9 +152,9 @@ class ShardedServeEngine(ServeEngine):
         # speculative verify is row-independent like prefill_chunk (PR-3
         # masked contract + per-row accepted-length rollback), so it shards
         # the same way: each host scores its own [K, k+1] window
-        def _verify_body(params, toks, state, valid):
+        def _verify_body(params, toks, state, valid, caps):
             return T.spec_verify(params, cfg=cfg, inputs=toks, state=state,
-                                 valid_len=valid)
+                                 valid_len=valid, node_cap=caps)
 
         # slot splicing by global id: the owner shard selects the update in,
         # everyone else passes their rows through — no communication
@@ -166,7 +177,7 @@ class ShardedServeEngine(ServeEngine):
                     jnp.where(owns, x, jnp.zeros_like(x)), "data"), row)
 
         self._step_sh = jax.jit(shard_map(
-            _step_body, mesh_, in_specs=(rep, P("data"), spec),
+            _step_body, mesh_, in_specs=(rep, P("data"), spec, P("data")),
             out_specs=(P("data"), spec)))
         self._prefill_sh = jax.jit(shard_map(
             _prefill_body, mesh_,
@@ -174,7 +185,7 @@ class ShardedServeEngine(ServeEngine):
             out_specs=(P("data"), spec)))
         self._verify_sh = jax.jit(shard_map(
             _verify_body, mesh_,
-            in_specs=(rep, P("data"), spec, P("data")),
+            in_specs=(rep, P("data"), spec, P("data"), P("data")),
             out_specs=(P("data"), P("data"), spec)))
         self._insert_sh = jax.jit(shard_map(
             _insert_body, mesh_, in_specs=(spec, rep, rep), out_specs=spec))
@@ -205,11 +216,15 @@ class ShardedServeEngine(ServeEngine):
     def _ops_prefill_pool(self, params, toks, state, valid):
         return self._prefill_sh(params, toks, state, valid)
 
-    def _ops_decode(self, params, tok, pool):
-        return self._step_sh(params, tok, pool)
+    def _ops_decode(self, params, tok, pool, caps=None):
+        if caps is None:
+            caps = self._full_caps(int(tok.shape[0]))
+        return self._step_sh(params, tok, pool, caps)
 
-    def _ops_verify(self, params, toks, valid, pool):
-        return self._verify_sh(params, toks, pool, valid)
+    def _ops_verify(self, params, toks, valid, pool, caps=None):
+        if caps is None:
+            caps = self._full_caps(int(toks.shape[0]))
+        return self._verify_sh(params, toks, pool, valid, caps)
 
     def _ops_lookup(self, prompt: np.ndarray, h: int):
         if self.prefix_cache is None:

@@ -37,6 +37,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import adaptive as adaptive_lib
 from repro.core import stlt as stlt_lib
 from repro.models import transformer as T
 
@@ -96,14 +97,14 @@ def stlt_node_importance(stlt_params: dict, scfg) -> jax.Array:
     """Per-node importance |u| x decay mass, shape [..., H, S]: readout gain
     times the geometric output mass of the pole, sum_t |lambda|^t =
     1 / (1 - |lambda|) — the contribution a node's state makes to all
-    future outputs (the paper's importance ordering for node pruning)."""
+    future outputs (the paper's importance ordering for node pruning).
+
+    Thin wrapper over :func:`repro.core.adaptive.node_importance` — the
+    serve-time SLO node caps rank with the same scores, so a draft's top-m
+    subset and a capped request's top-m subset agree."""
     log_mag, _, _, _ = stlt_lib._poles(stlt_params, scfg)
-    u_re = stlt_params["nodes"]["u_re"]
-    u_im = stlt_params["nodes"]["u_im"]
-    gain = jnp.sqrt(u_re.astype(jnp.float32) ** 2
-                    + u_im.astype(jnp.float32) ** 2)
-    mass = 1.0 / jnp.maximum(1.0 - jnp.exp(log_mag.astype(jnp.float32)), 1e-6)
-    return gain * mass
+    return adaptive_lib.node_importance(
+        stlt_params["nodes"]["u_re"], stlt_params["nodes"]["u_im"], log_mag)
 
 
 def draft_params(params: dict, cfg, draft_nodes: int) -> dict:
@@ -122,8 +123,10 @@ def draft_params(params: dict, cfg, draft_nodes: int) -> dict:
     for (btype, count), lp in zip(T.execution_plan(cfg), params["layers"]):
         if btype in ("stlt", "stlt_rel"):
             imp = stlt_node_importance(lp["stlt"], scfg)  # [..., H, S]
-            kth = jnp.sort(imp, axis=-1)[..., scfg.num_nodes - m, None]
-            mask = (imp >= kth).astype(lp["stlt"]["nodes"]["u_re"].dtype)
+            # deterministic index-tie-broken top-m: a `imp >= kth` threshold
+            # keeps MORE than m nodes on ties (guaranteed at symmetric inits)
+            mask = adaptive_lib.top_m_mask(
+                imp, m, dtype=lp["stlt"]["nodes"]["u_re"].dtype)
             nodes = dict(lp["stlt"]["nodes"])
             nodes["u_re"] = nodes["u_re"] * mask
             nodes["u_im"] = nodes["u_im"] * mask

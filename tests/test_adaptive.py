@@ -71,6 +71,23 @@ def test_regularization_terms(rng):
     assert r_small < r_mask
 
 
+def test_hybrid_s_eff_normalized_by_stlt_block_count(rng):
+    """apply_lm's reported s_eff averages over the STLT blocks only: on a
+    hybrid stlt+attention stack it must equal the per-block S_eff (here the
+    full S, non-adaptive), not be diluted by the attention layers (the old
+    divide-by-num_layers bug halved it on a 50/50 stack)."""
+    import jax.numpy as jnp
+
+    from repro.models import transformer as T
+    from conftest import small_cfg
+
+    cfg = small_cfg(layer_types=("stlt", "attn"), stlt_nodes=8, stlt_chunk=8)
+    params = T.init_lm(jax.random.key(0), cfg)
+    toks = jnp.asarray(rng.integers(3, cfg.vocab, (2, 10)), jnp.int32)
+    _, aux = T.apply_lm(params, cfg, toks)
+    assert float(aux["s_eff"]) == cfg.stlt_nodes
+
+
 def test_mask_regularization_gradient_shrinks_masks(rng):
     """lambda_mask drives node usage down through the Gumbel-sigmoid."""
     params, x = _setup(rng)

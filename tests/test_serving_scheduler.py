@@ -515,6 +515,192 @@ def test_prefix_cache_length_index_consistency():
     assert c.lookup([1, 2]) is None
 
 
+# ---------------------------------------------------------------------------
+# Adaptive serving parity (DESIGN.md §Serving, serve-time mask contract):
+# training computes input-dependent node masks; serving must compute the SAME
+# deterministic masks from its carried running-mean summary instead of
+# silently running all S nodes.
+# ---------------------------------------------------------------------------
+
+ADAPTIVE_KW = dict(mixer="stlt", stlt_nodes=8, stlt_chunk=8,
+                   stlt_adaptive=True)
+
+
+@pytest.mark.parametrize("hard_eval", [False, True])
+def test_adaptive_serve_matches_generate(hard_eval):
+    """Adaptive configs are token-exact between generate, continuous serve,
+    and sharded serve when prompts are admitted in a single chunk (the
+    pooled-summary mask then matches eval pooling exactly) — soft sigmoid
+    and hard-threshold (stlt_hard_eval) masks alike."""
+    from repro.serving import ShardedServeEngine
+
+    cfg = small_cfg(**ADAPTIVE_KW, stlt_hard_eval=hard_eval)
+    params = T.init_lm(jax.random.key(0), cfg)
+    rng = np.random.default_rng(3)
+    reqs = [Request(rng.integers(3, cfg.vocab,
+                                 int(rng.integers(4, 12))).astype(np.int32),
+                    int(3 + i % 4), id=i)
+            for i in range(5)]
+    # prefill_chunk >= every prompt: single-chunk admission is the exact path
+    eng = ServeEngine(params, cfg, max_len=64, prefill_chunk=16)
+    res = eng.serve(reqs, slots=2, arrivals=[0, 0, 1, 3, 3])
+    sh = ShardedServeEngine(params, cfg, n_hosts=1, slots_per_host=2,
+                            max_len=64, prefill_chunk=16)
+    res_sh = sh.serve(reqs, arrivals=[0, 0, 1, 3, 3])
+    for r in reqs:
+        ref = eng.generate(r.prompt[None], r.max_new_tokens)[0]
+        np.testing.assert_array_equal(
+            res[r.id], ref,
+            err_msg=f"request {r.id} (hard_eval={hard_eval}): serve != generate")
+        np.testing.assert_array_equal(
+            res_sh[r.id], ref,
+            err_msg=f"request {r.id} (hard_eval={hard_eval}): sharded != generate")
+
+
+ENGINE_PATCHES = {"chunked": None, "chunked_fused": None, "pallas": None}
+
+
+def _interpret_pallas():
+    import functools
+
+    import repro.kernels.ops as kops
+
+    orig = kops.stlt_scan
+    kops.stlt_scan = functools.partial(orig, interpret=True, block_d=8)
+    return kops, orig
+
+
+@pytest.mark.parametrize("valid", [None, 4])
+@pytest.mark.parametrize("engine", sorted(ENGINE_PATCHES))
+def test_adaptive_chunk_vs_steps_state_parity(engine, valid):
+    """A masked prefill chunk leaves the SAME carried state (every leaf,
+    including the asum/acnt pooling summary) as stepping the tokens through
+    apply_stlt_step one by one, for every engine — and the chunk's
+    final-position output equals the last step's output (both pool over the
+    identical carry + full-window summary there). Intermediate positions
+    legitimately differ: the chunk applies one chunk-wide mask, decode one
+    mask per token."""
+    scfg = stlt_lib.STLTConfig(
+        d_model=32, num_heads=4, num_nodes=4, chunk=8, engine=engine,
+        adaptive=stlt_lib.adaptive_lib.AdaptiveConfig(enabled=True))
+    params = stlt_lib.init_stlt(jax.random.key(1), scfg)
+    rng = np.random.default_rng(0)
+    B, N = 2, 6
+    warm = jnp.asarray(rng.normal(size=(B, 3, 32)), jnp.float32)
+    _, st0 = stlt_lib.stlt_prefill(params, scfg, warm)
+    x = jnp.asarray(rng.normal(size=(B, N, 32)), jnp.float32)
+    nv = N if valid is None else valid
+    v = None if valid is None else jnp.asarray([valid] * B, jnp.int32)
+    # pad positions carry junk: the valid mask must win, not luck
+    xpad = x if valid is None else x.at[:, valid:].set(99.0)
+
+    patched = _interpret_pallas() if engine == "pallas" else None
+    try:
+        yc, stc = stlt_lib.stlt_prefill(params, scfg, xpad, state=st0,
+                                        valid=v)
+        st = dict(st0)
+        for t in range(nv):
+            ys, st = stlt_lib.apply_stlt_step(params, scfg, x[:, t], st)
+    finally:
+        if patched is not None:
+            patched[0].stlt_scan = patched[1]
+
+    assert set(stc) == set(st)
+    for k in stc:
+        np.testing.assert_allclose(
+            np.asarray(stc[k]), np.asarray(st[k]), rtol=2e-5, atol=2e-5,
+            err_msg=f"{engine} valid={valid}: state leaf {k}")
+    np.testing.assert_allclose(
+        np.asarray(yc[:, nv - 1]), np.asarray(ys), rtol=2e-4, atol=2e-4,
+        err_msg=f"{engine} valid={valid}: final-position output")
+
+
+def test_mixed_serve_nodes_one_dispatch_and_parity(monkeypatch):
+    """Per-request node budgets: rows decoding at different S share ONE
+    decode program (the cap rides as a data argument — full-S rows carry an
+    all-ones mask, which is bitwise the uncapped computation), and each
+    request's stream equals generate() at its own budget."""
+    from repro.utils import trace_probe
+
+    cfg = small_cfg(**ADAPTIVE_KW)
+    params = T.init_lm(jax.random.key(0), cfg)
+    log: list = []
+    monkeypatch.setattr(T, "decode_step",
+                        trace_probe(T.decode_step, log, "decode_step"))
+    eng = ServeEngine(params, cfg, max_len=64, prefill_chunk=16)
+    rng = np.random.default_rng(5)
+    budgets = [2, 8, None, 4]  # 8 == S and None are both the full model
+    reqs = [Request(rng.integers(3, cfg.vocab, 8).astype(np.int32), 5, id=i,
+                    serve_nodes=m)
+            for i, m in enumerate(budgets)]
+    n0 = len(log)
+    res = eng.serve(reqs, slots=4)
+    assert len(log) - n0 == 1, (
+        f"mixed serve_nodes compiled {len(log) - n0} decode programs "
+        "(must be 1: caps are data, not shape)")
+    for r in reqs:
+        np.testing.assert_array_equal(
+            res[r.id],
+            eng.generate(r.prompt[None], 5, serve_nodes=r.serve_nodes)[0],
+            err_msg=f"request {r.id} (serve_nodes={r.serve_nodes})")
+    # a capped row really is degraded: S=2 diverges from full-S here
+    assert list(res[0]) != list(res[1])
+    # cap == S is bitwise the uncapped program
+    np.testing.assert_array_equal(res[1], eng.generate(reqs[1].prompt[None], 5)[0])
+
+
+def test_slo_degrades_and_restores_node_budget():
+    """The queue-depth SLO trigger walks the degrade ladder down while the
+    engine is overloaded and restores stepwise after recovery; node_stats
+    mirrors spec_stats and resets per serve call."""
+    cfg = small_cfg(**ADAPTIVE_KW)
+    params = T.init_lm(jax.random.key(0), cfg)
+    eng = ServeEngine(params, cfg, max_len=64, prefill_chunk=16,
+                      slo_queue_depth=1, slo_degrade=(4, 2),
+                      slo_recovery_ticks=2)
+    rng = np.random.default_rng(7)
+    reqs = [Request(rng.integers(3, cfg.vocab, 8).astype(np.int32), 6, id=i)
+            for i in range(4)]
+    res = eng.serve(reqs, slots=1)  # 1 slot, 4 requests: the queue backs up
+    for r in reqs:
+        assert len(res[r.id]) == r.max_new_tokens
+    ns = eng.node_stats
+    assert ns["ladder"] == [4, 2]
+    assert ns["queue_breaches"] > 0 and ns["gap_breaches"] == 0
+    assert ns["degrade_steps"] >= 1 and ns["ticks_degraded"] > 0
+    assert ns["min_nodes"] < cfg.stlt_nodes
+    # the tail drains with an empty queue long enough to recover fully
+    assert ns["restore_steps"] == ns["degrade_steps"]
+    # per-call reset, like spec_stats
+    eng.serve([Request(reqs[0].prompt, 2, id=0)], slots=1)
+    assert eng.node_stats["degrade_steps"] == 0
+
+
+def test_serve_nodes_validation():
+    """Node budgets are rejected up front: non-STLT archs, out-of-range
+    budgets, and a degrade ladder without a trigger are all config errors."""
+    cfg_a = small_cfg(mixer="attention")
+    params_a = T.init_lm(jax.random.key(0), cfg_a)
+    with pytest.raises(ValueError, match="STLT"):
+        ServeEngine(params_a, cfg_a, serve_nodes=4)
+    with pytest.raises(ValueError, match="STLT"):
+        ServeEngine(params_a, cfg_a, slo_degrade=(4,), slo_queue_depth=1)
+    cfg = small_cfg(**ADAPTIVE_KW)
+    params = T.init_lm(jax.random.key(0), cfg)
+    with pytest.raises(ValueError, match="serve_nodes"):
+        ServeEngine(params, cfg, serve_nodes=0)
+    with pytest.raises(ValueError, match="serve_nodes"):
+        ServeEngine(params, cfg, serve_nodes=cfg.stlt_nodes + 1)
+    with pytest.raises(ValueError, match="trigger"):
+        ServeEngine(params, cfg, slo_degrade=(4, 2))
+    eng = ServeEngine(params, cfg)
+    p = np.arange(3, 8, dtype=np.int32)
+    with pytest.raises(ValueError, match="serve_nodes"):
+        eng.serve([Request(p, 2, id=0, serve_nodes=99)], slots=1)
+    with pytest.raises(ValueError, match="serve_nodes"):
+        eng.generate(p[None], 2, serve_nodes=0)
+
+
 def test_per_slot_sampler_and_masking():
     """sample_slot_tokens honours per-slot temperature; advance_slots applies
     budget and EOS cuts batched."""

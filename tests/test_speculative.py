@@ -229,6 +229,56 @@ def test_draft_params_masks_top_nodes():
         spec_lib.draft_params(params, cfg, 0)
 
 
+def test_draft_params_all_tied_keeps_exactly_m():
+    """Degenerate importance ties (every node identical) still keep EXACTLY
+    m nodes per head — the old ``imp >= kth`` threshold kept all S. The
+    deterministic tie-break is node index: the lowest-indexed m survive."""
+    cfg, params = _setup()
+    layers = []
+    for lp in params["layers"]:
+        nodes = {k: jnp.tile(v[..., :1], (1, v.shape[-1]))
+                 for k, v in lp["stlt"]["nodes"].items()}
+        layers.append({**lp, "stlt": {**lp["stlt"], "nodes": nodes}})
+    tied = {**params, "layers": layers}
+    m = 2
+    dp = spec_lib.draft_params(tied, cfg, m)
+    scfg = cfg.stlt_config()
+    for lp, dlp in zip(tied["layers"], dp["layers"]):
+        imp = np.asarray(spec_lib.stlt_node_importance(lp["stlt"], scfg))
+        assert (np.ptp(imp, axis=-1) == 0.0).all()  # every head fully tied
+        kept = np.asarray(dlp["stlt"]["nodes"]["u_re"]) != 0
+        assert (kept.sum(-1) == m).all(), kept.sum(-1)
+        np.testing.assert_array_equal(
+            kept,
+            np.broadcast_to(np.arange(imp.shape[-1]) < m, kept.shape),
+            err_msg="index tie-break")
+
+
+def test_spec_rejects_adaptive_configs():
+    """Speculative verify pools ONE adaptive mask per k-token window while
+    plain decode pools one per token — the streams would diverge, so the
+    combination is a constructor error, not a silent approximation."""
+    cfg, params = _setup(**STLT_KW, stlt_adaptive=True)
+    with pytest.raises(ValueError, match="adaptive"):
+        ServeEngine(params, cfg, max_len=96, prefill_chunk=8, spec_k=2)
+
+
+def test_spec_with_serve_nodes_token_exact():
+    """Per-request node caps are input-INdependent masks, so spec decode
+    stays exact under them: capped spec serve == capped plain serve."""
+    cfg, params = _setup()
+    reqs, arrivals = _trace(cfg, n=4)
+    for r in reqs:
+        r.serve_nodes = 2
+    plain = ServeEngine(params, cfg, max_len=96, prefill_chunk=8).serve(
+        reqs, slots=2, arrivals=arrivals)
+    eng = ServeEngine(params, cfg, max_len=96, prefill_chunk=8,
+                      spec_k=3, spec_draft="ngram")
+    out = eng.serve(reqs, slots=2, arrivals=arrivals)
+    _assert_same(plain, out, reqs, "spec under serve_nodes caps")
+    assert eng.spec_stats["verify_calls"] > 0
+
+
 def test_ngram_draft_proposes_continuation():
     """The n-gram draft proposes the tokens that followed the longest
     matching suffix in the request's own context, padding with repeat-last."""
