@@ -18,6 +18,13 @@ swept over S ∈ {8, 32, 128} nodes × N ∈ {1k, 4k, 16k} tokens:
    cotangents, DESIGN.md §3) vs the legacy per-node jnp recompute
    (``param_grads="recompute"``). The recompute sweep is trimmed in the
    fast profile (it materializes O(N*S*d) per-chunk tensors — the point).
+4. ``relevance``: the flash-tiled relevance kernel
+   (``repro.kernels.relevance_flash``) vs the materialized O(N^2) readout,
+   N ∈ {1k, 4k, 32k}. The materialized comparator is SKIPPED past the
+   memory cliff where its ~3 N^2 fp32 buffers stop fitting (the skip and
+   its reason are logged in the row — no silent caps); the tiled kernel
+   must survive every N in ONE pallas dispatch without ever holding
+   [BH, N, N].
 
 On non-TPU hosts the kernel runs in interpret mode (same dispatch
 structure, wall numbers are indicative only — the dispatch counts and the
@@ -38,11 +45,19 @@ import numpy as np
 from benchmarks.common import emit
 from repro.core import scan as scan_lib
 from repro.kernels import ops
+from repro.kernels import relevance_flash as rflash
 from repro.utils import trace_probe
 
 CHUNK = 128
 BH = 2
 D = 64
+
+# relevance family: small head so the O(N^2) comparator fits at 4k while the
+# 32k row still exercises a >500-tile grid
+REL_S = 8
+REL_DH = 16
+REL_BH = 1
+REL_CLIFF_BYTES = 2 << 30
 
 
 def _inputs(N, S, seed=0):
@@ -193,6 +208,84 @@ def bench_backward(sweep, recompute_sweep):
     return rows
 
 
+def _rel_inputs(N, seed=0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(REL_BH, N, REL_DH)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(REL_BH, N, REL_DH)), jnp.float32)
+    lm = jnp.asarray(-rng.uniform(0.005, 1.0, (REL_BH, REL_S)), jnp.float32)
+    th = jnp.asarray(-rng.uniform(0, 1.5, (REL_BH, REL_S)), jnp.float32)
+    return x, v, lm, th
+
+
+def _rel_materialized(x, v, lm, th):
+    """The O(N^2) comparator the flash kernel replaces: full coefficient
+    scan, full [BH, N, N] relevance matrix, causal softmax."""
+    B, N, dh = x.shape
+    S = lm.shape[-1]
+    lam = jnp.exp(lm + 1j * th).astype(jnp.complex64)
+    xc = jnp.broadcast_to(x[:, :, None, :].astype(jnp.complex64),
+                          (B, N, S, dh))
+    a = jnp.broadcast_to(lam[:, None, :, None], xc.shape)
+    L = scan_lib.scan_associative(a, xc, axis=-3)
+    R = jnp.einsum("bnkd,bmkd->bnm", L, jnp.conj(L)).real
+    R = R / jnp.sqrt(float(S))
+    R = jnp.where(jnp.tril(jnp.ones((N, N), bool))[None], R, -jnp.inf)
+    return jnp.einsum("bnm,bmd->bnd", jax.nn.softmax(R, axis=-1), v)
+
+
+def _rel_dispatches(fn, *args):
+    """Pallas dispatches per eager call of ``fn`` (trace_probe on the
+    flash kernel wrapper, same scheme as ``_dispatches``)."""
+    klog: list = []
+    orig = rflash.relevance_flash_kernel
+    rflash.relevance_flash_kernel = trace_probe(orig, klog, "flash")
+    try:
+        jax.block_until_ready(fn(*args))
+    finally:
+        rflash.relevance_flash_kernel = orig
+    return len(klog)
+
+
+def bench_relevance(Ns=(1024, 4096, 32768)):
+    rows = []
+    kernel_kw = {} if jax.default_backend() == "tpu" else {"interpret": True}
+    for N in Ns:
+        # 128 matches cfg.chunk defaults; the 32k row widens the tile so the
+        # interpret-mode grid stays tractable off-TPU (still >500 tiles)
+        tile = 128 if N <= 4096 else 1024
+        x, v, lm, th = _rel_inputs(N)
+
+        def tiled(x, v):
+            return rflash.relevance_flash(x, v, lm, th, causal=True,
+                                          tile=tile, **kernel_kw)
+
+        iters = 3 if N <= 4096 else 1
+        us_t = _time(jax.jit(tiled), x, v, iters=iters)
+        nd = _rel_dispatches(tiled, x, v)
+        row = {"family": "relevance", "S": REL_S, "N": N, "tile": tile,
+               "head_dim": REL_DH, "batch_rows": REL_BH, "tiled_us": us_t,
+               "tiled_dispatches": nd}
+        mat_bytes = 3 * REL_BH * N * N * 4  # R + masked R + softmax probs
+        if mat_bytes <= REL_CLIFF_BYTES:
+            mat = jax.jit(lambda x, v: _rel_materialized(x, v, lm, th))
+            err = float(jnp.max(jnp.abs(tiled(x, v) - mat(x, v))))
+            us_m = _time(mat, x, v, iters=iters)
+            row["materialized_us"] = us_m
+            row["max_abs_diff"] = err
+            emit(f"kernels/relevance_tiled/N{N}", us_t,
+                 f"dispatches={nd};materialized_us={us_m:.0f};"
+                 f"maxdiff={err:.1e}")
+        else:
+            row["materialized_skipped"] = (
+                f"memory cliff: ~{mat_bytes / 2**30:.1f} GiB of N^2 "
+                f"buffers > {REL_CLIFF_BYTES / 2**30:.0f} GiB budget")
+            emit(f"kernels/relevance_tiled/N{N}", us_t,
+                 f"dispatches={nd};materialized=SKIPPED("
+                 f"{row['materialized_skipped']})")
+        rows.append(row)
+    return rows
+
+
 def main(fast: bool = True):
     sweep = [(S, N) for S in (8, 32, 128) for N in (1024, 4096, 16384)]
     if fast:
@@ -207,6 +300,7 @@ def main(fast: bool = True):
     rows += bench_forward(sweep)
     rows += bench_resume(sweep)
     rows += bench_backward(sweep, recompute_sweep)
+    rows += bench_relevance()
     out = {
         "backend": jax.default_backend(),
         "interpret": jax.default_backend() != "tpu",

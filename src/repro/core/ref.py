@@ -67,6 +67,28 @@ def relevance_direct(L: np.ndarray, masks=None) -> np.ndarray:
     return np.einsum("nkd,k,mkd->nm", L, m, np.conj(L)).real / np.sqrt(S)
 
 
+def relevance_attend_direct(L, v, masks=None, *, causal=True, key_mask=None):
+    """Full relevance readout oracle: Z = masked-softmax(R) @ v, [N, d].
+
+    R from ``relevance_direct`` (node ``masks`` folded there); ``causal``
+    lower-triangulates the softmax; ``key_mask`` [N] bools remove padded
+    keys. Fully-masked rows return 0 (the engines' guarded-softmax
+    contract), so an all-padding row is comparable across paths.
+    """
+    R = relevance_direct(L, masks)
+    N = R.shape[0]
+    valid = np.ones((N, N), bool)
+    if causal:
+        valid &= np.tril(np.ones((N, N), bool))
+    if key_mask is not None:
+        valid &= np.asarray(key_mask, bool)[None, :]
+    Rm = np.where(valid, R, -1e30)
+    p = np.exp(Rm - Rm.max(-1, keepdims=True)) * valid
+    l = p.sum(-1, keepdims=True)
+    A = np.where(l > 0, p / np.where(l > 0, l, 1.0), 0.0)
+    return A @ np.asarray(v, np.float64)
+
+
 def reconstruction_error(N: int, S: int, sigma_spread=(1e-2, 1.0)) -> float:
     """§3.7 proxy: approximate a smooth signal with S one-pole filters and
     report the residual — used to check the error decays as S grows."""

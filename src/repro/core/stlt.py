@@ -332,7 +332,8 @@ def apply_stlt(
     u_re, u_im = _masked_u(params, masks)
 
     if cfg.mode == "relevance":
-        z = _relevance_readout(params, cfg, x, v, log_mag, theta, masks)
+        z = _relevance_readout(params, cfg, x, v, log_mag, theta, masks,
+                               pad_mask=pad_mask)
     elif cfg.window == "hann":
         g = _hann_filters(params, cfg, masks)
         z = _hann_conv(v, g, reverse=False)
@@ -358,20 +359,46 @@ def apply_stlt(
     return y, {"reg": reg, "s_eff": s_eff, "masks": masks, "T": T, "sigma": sigma}
 
 
-def _relevance_readout(params, cfg, x, v, log_mag, theta, masks):
+def _relevance_readout(params, cfg, x, v, log_mag, theta, masks,
+                       pad_mask=None):
     """Paper-figure readout: Z = softmax(R / sqrt(S) + mask) V.
 
     R[n,m] = Re(sum_k m_k L[n,k] conj(L[m,k])), L from the (possibly
-    bidirectional) transform of per-head inputs. This implementation
-    MATERIALIZES the full [B, H, N, N] relevance matrix (plus the
-    [B*H, N, S, dh] complex coefficients) — O(N^2) memory and FLOPs, the
-    paper-faithful mode for moderate N only. A flash-style tiled Pallas
-    kernel that streams R block-by-block (online softmax, coefficients
-    recomputed per tile) is a ROADMAP item, not yet implemented.
+    bidirectional) transform of per-head inputs. Two engines, dispatched
+    on ``cfg.engine``:
+
+    * ``engine="pallas"``: the flash-tiled kernel
+      (``kernels/relevance_flash.py``, DESIGN.md §3) — streams R over a
+      (q-tile, k-tile) grid with online softmax, reconstructing each
+      tile's Laplace coefficients from closed-form node powers and
+      tile-boundary carries. O(N * tile) memory, one dispatch, custom
+      recompute-per-tile VJP; the production path for large N.
+    * anything else: the materialized small-N reference — the full
+      [B, H, N, N] relevance matrix plus [B*H, N, S, dh] complex
+      coefficients, O(N^2) memory. Paper-faithful and simple; the oracle
+      the tiled kernel is tested against.
+
+    ``pad_mask`` [B, N] (True = real token) removes padding from BOTH
+    sides of the softmax on either engine: padded inputs are zeroed
+    before the transform (so bidirectional reverse scans never pull pad
+    garbage into valid positions) and padded keys score -inf. Outputs at
+    padded query positions are garbage by contract.
     """
+    if cfg.engine == "pallas":
+        return _relevance_flash_readout(params, cfg, x, v, log_mag, theta,
+                                        masks, pad_mask)
+    return _relevance_materialized(params, cfg, x, v, log_mag, theta, masks,
+                                   pad_mask)
+
+
+def _relevance_materialized(params, cfg, x, v, log_mag, theta, masks,
+                            pad_mask=None):
+    """Materialized relevance reference (see ``_relevance_readout``)."""
     B, H, N, dh = v.shape
     S = cfg.num_nodes
     xh = _split_heads(x, H)  # transform the (normed) inputs, mix values v
+    if pad_mask is not None:
+        xh = jnp.where(pad_mask[:, None, :, None], xh, 0.0)
     lam = jnp.exp(log_mag + 1j * theta).astype(jnp.complex64)  # [H, S]
     xb = xh.reshape(B * H, N, dh)
     lam_b = jnp.tile(lam, (B, 1))
@@ -389,11 +416,37 @@ def _relevance_readout(params, cfg, x, v, log_mag, theta, masks):
     else:
         Lw = L
     R = jnp.einsum("bhnkd,bhmkd->bhnm", Lw, jnp.conj(L)).real / math.sqrt(S)
+    valid = jnp.ones((1, 1, N, N), bool)
     if not cfg.bidirectional:
-        causal = jnp.tril(jnp.ones((N, N), bool))
-        R = jnp.where(causal[None, None], R, -jnp.inf)
-    A = jax.nn.softmax(R, axis=-1)
+        valid = jnp.tril(jnp.ones((N, N), bool))[None, None]
+    if pad_mask is not None:
+        valid = valid & pad_mask[:, None, None, :]
+    # masked softmax with a finite -inf stand-in: fully-masked rows (a
+    # pad_mask of all False) come out 0 rather than NaN — matching the
+    # tiled kernel's guarded online-softmax semantics exactly
+    Rm = jnp.where(valid, R, -1e30)
+    p = jnp.exp(Rm - jax.lax.stop_gradient(Rm.max(-1, keepdims=True))) * valid
+    l = p.sum(-1, keepdims=True)
+    A = jnp.where(l > 0, p / jnp.where(l > 0, l, 1.0), 0.0)
     return jnp.einsum("bhnm,bhmd->bhnd", A, v)
+
+
+def _relevance_flash_readout(params, cfg, x, v, log_mag, theta, masks,
+                             pad_mask=None):
+    """Flash-tiled relevance dispatch (see ``_relevance_readout``)."""
+    from repro.kernels import relevance_flash as rf
+
+    B, H, N, dh = v.shape
+    S = cfg.num_nodes
+    xh = _split_heads(x, H).reshape(B * H, N, dh).astype(jnp.float32)
+    vb = v.reshape(B * H, N, dh)
+    lm = jnp.tile(log_mag, (B, 1))  # [B*H, S], H fastest
+    th = jnp.tile(theta, (B, 1))
+    mk = None if masks is None else masks.reshape(B * H, S)
+    km = None if pad_mask is None else jnp.repeat(pad_mask, H, axis=0)
+    z = rf.relevance_flash(xh, vb, lm, th, masks=mk, kmask=km,
+                           causal=not cfg.bidirectional, tile=cfg.chunk)
+    return z.reshape(B, H, N, dh).astype(v.dtype)
 
 
 # ---------------------------------------------------------------------------

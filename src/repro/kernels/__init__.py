@@ -1,5 +1,10 @@
 """Pallas TPU kernels for the STLT hot path (pl.pallas_call + BlockSpec),
-with jit'd wrappers (ops.py) and pure-jnp oracles (ref.py)."""
+with jit'd wrappers (ops.py) and pure-jnp oracles (ref.py).
+
+``stlt_scan`` is the fused factorized scan; ``relevance_flash`` (the
+submodule — its entry point is ``relevance_flash.relevance_flash``) is the
+flash-tiled online-softmax relevance readout."""
+from repro.kernels import relevance_flash
 from repro.kernels.ops import stlt_scan
 
-__all__ = ["stlt_scan"]
+__all__ = ["stlt_scan", "relevance_flash"]

@@ -120,6 +120,96 @@ def test_relevance_mode_matches_direct(rng):
     np.testing.assert_allclose(np.asarray(y), y_direct, rtol=2e-3, atol=2e-3)
 
 
+def _relevance_direct_layer(params, cfg, x, masks=None, key_mask=None):
+    """np oracle of the full relevance layer for arbitrary B/H: per-(row,
+    head) ``stlt_direct`` coefficients -> ``relevance_attend_direct`` ->
+    output projection. ``masks`` [B, H, S] node masks, ``key_mask`` [B, N]
+    bools (True = real token; padded inputs are zeroed pre-transform, the
+    engines' pad contract)."""
+    from repro.core.nodes import node_poles
+
+    B, N, d = x.shape
+    H = cfg.num_heads
+    dh = d // H
+    _, theta, sigma, T = node_poles(params["nodes"], fold_window=True)
+    sig_eff = np.asarray(sigma) + 1.0 / np.asarray(T)[:, None]
+    xh = np.asarray(x).reshape(B, N, H, dh).transpose(0, 2, 1, 3)
+    v = (np.asarray(x) @ np.asarray(params["w_v"])).reshape(
+        B, N, H, dh).transpose(0, 2, 1, 3)
+    if key_mask is not None:
+        xh = np.where(np.asarray(key_mask)[:, None, :, None], xh, 0.0)
+    z = np.zeros_like(v)
+    for b in range(B):
+        for h in range(H):
+            L = core_ref.stlt_direct(
+                xh[b, h], sig_eff[h], -np.asarray(theta[h]), T=1e18,
+                window="none", bidirectional=cfg.bidirectional)
+            mk = None if masks is None else np.asarray(masks)[b, h]
+            km = None if key_mask is None else np.asarray(key_mask)[b]
+            z[b, h] = core_ref.relevance_attend_direct(
+                L, v[b, h], mk, causal=not cfg.bidirectional, key_mask=km)
+    return z.transpose(0, 2, 1, 3).reshape(B, N, d) @ np.asarray(params["w_o"])
+
+
+def test_relevance_bidirectional_matches_direct(rng):
+    """Bilateral relevance == the direct bilateral sum: locks the
+    ``L + L_rev - xc`` center correction (dropping the ``- xc`` term shifts
+    every R entry by a diagonal double-count) and the unmasked softmax."""
+    N, S = 10, 4
+    cfg = STLTConfig(d_model=16, num_heads=2, num_nodes=S, mode="relevance",
+                     bidirectional=True, engine="associative")
+    params = stlt_lib.init_stlt(jax.random.key(2), cfg)
+    x = jnp.asarray(rng.normal(size=(1, N, 16)), jnp.float32)
+    y, _ = stlt_lib.apply_stlt(params, cfg, x)
+    np.testing.assert_allclose(
+        np.asarray(y), _relevance_direct_layer(params, cfg, x),
+        rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("hard_eval", [False, True])
+def test_relevance_adaptive_masks_match_direct(rng, hard_eval):
+    """Adaptive node masks reach the relevance contraction: the layer output
+    == ``relevance_direct(masks=)`` with the masks the layer itself reports
+    (soft sigmoid masks and the hard 0/1 eval thresholding)."""
+    from repro.core.adaptive import AdaptiveConfig
+
+    N, S = 12, 6
+    cfg = STLTConfig(d_model=16, num_heads=2, num_nodes=S, mode="relevance",
+                     engine="associative",
+                     adaptive=AdaptiveConfig(enabled=True,
+                                             hard_eval=hard_eval))
+    params = stlt_lib.init_stlt(jax.random.key(3), cfg)
+    x = jnp.asarray(rng.normal(size=(2, N, 16)), jnp.float32)
+    y, aux = stlt_lib.apply_stlt(params, cfg, x)  # deterministic eval masks
+    masks = np.asarray(aux["masks"])
+    assert masks.shape == (2, 2, S)
+    if hard_eval:
+        assert set(np.unique(masks)) <= {0.0, 1.0}, masks
+    else:  # soft masks must actually exercise non-trivial weights
+        assert np.all((masks > 0) & (masks < 1)), masks
+    np.testing.assert_allclose(
+        np.asarray(y), _relevance_direct_layer(params, cfg, x, masks=masks),
+        rtol=2e-3, atol=2e-3)
+
+
+def test_relevance_batched_heterogeneous_rows(rng):
+    """B > 1 with different rows: each batched row == the direct oracle ==
+    its own batch-1 run (no cross-row leakage through the B*H reshape)."""
+    B, N, S = 3, 9, 4
+    cfg = STLTConfig(d_model=16, num_heads=2, num_nodes=S, mode="relevance",
+                     engine="associative")
+    params = stlt_lib.init_stlt(jax.random.key(4), cfg)
+    x = jnp.asarray(rng.normal(size=(B, N, 16)), jnp.float32)
+    y, _ = stlt_lib.apply_stlt(params, cfg, x)
+    np.testing.assert_allclose(
+        np.asarray(y), _relevance_direct_layer(params, cfg, x),
+        rtol=2e-3, atol=2e-3)
+    for b in range(B):
+        y1, _ = stlt_lib.apply_stlt(params, cfg, x[b:b + 1])
+        np.testing.assert_allclose(np.asarray(y[b]), np.asarray(y1[0]),
+                                   rtol=1e-5, atol=1e-5)
+
+
 def test_error_bound_decay_with_S():
     """§3.7: reconstruction error of the node basis decays as S grows."""
     errs = [core_ref.reconstruction_error(N=256, S=s) for s in (2, 4, 8, 16, 32)]
