@@ -1,8 +1,9 @@
 """Serving §Perf — slot-level continuous batching vs the wave engine,
 chunked prefill admission, the prefix-state cache, the two-shape BATCHED
-admission path, speculative decoding, and multi-host sharded serving.
+admission path, speculative decoding, multi-host sharded serving, and
+disaggregated prefill/decode fleets.
 
-Seven traces are replayed; the first four through the same ``ServeEngine``:
+Eight traces are replayed; the first four through the same ``ServeEngine``:
 
 1. mixed short/long BUDGETS (Poisson arrivals): continuous vs wave — the
    wave engine drains whole admission waves, so one long generation stalls
@@ -50,6 +51,19 @@ Seven traces are replayed; the first four through the same ``ServeEngine``:
    p99 wall gaps, and the replicated prefix-cache residency (every shard
    must hold the warmed entries: ``replicated_pinned > 0``).
 
+8. DISAGGREGATED prefill/decode fleets (``serving/disagg``): the same
+   shape of trace — short decode-heavy requests co-resident with a
+   long-prompt (16k full / 2k fast) admission burst — replayed colocated
+   (one engine, one clock) vs disaggregated (prefill fleet + decode
+   fleet, each on its own simulated per-fleet clock). The burst burns
+   PREFILL-fleet clock only, so the decode fleet's inter-token p99 gap
+   stays at its unloaded baseline while the colocated engine's decode
+   slots eat every admission chunk dispatch. Also records the
+   handoff-bytes probe: promote-time wire blobs are byte-IDENTICAL for a
+   128-token and a 16k-token prompt (the O(S*d) flat-bytes property) and
+   ~halve under ``wire_store="bf16"``. Token streams are checked exact
+   vs colocated (f32 wire).
+
 Time is measured in ticks (one mixed scheduler step == one tick), so the
 comparisons are deterministic and hardware-independent; wall tokens/sec is
 reported alongside. ``main`` writes the full row dict to
@@ -67,6 +81,7 @@ import numpy as np
 from benchmarks.common import bench_cfg, emit
 from repro.models import transformer as T
 from repro.serving import (
+    DisaggController,
     PrefixCache,
     ReplicatedPrefixCache,
     ServeEngine,
@@ -354,6 +369,109 @@ def run_multihost(params, cfg, max_len, chunk, fast: bool):
     return out
 
 
+def disagg_trace(n_short: int, n_long: int, long_len: int, seed: int = 23,
+                 vocab: int = 256):
+    """Short decode-heavy requests (the latency-sensitive traffic) plus a
+    near-simultaneous burst of ``long_len``-prompt admissions — the
+    workload disaggregation exists for. Returns (reqs, arrivals,
+    short_ids)."""
+    rng = np.random.default_rng(seed)
+    reqs, arrivals, short_ids = [], [], []
+    for i in range(n_short):
+        reqs.append(Request(
+            rng.integers(3, vocab, int(rng.integers(6, 15))).astype(np.int32),
+            24, id=i))
+        arrivals.append(0)
+        short_ids.append(i)
+    for j in range(n_long):
+        reqs.append(Request(rng.integers(3, vocab, long_len).astype(np.int32),
+                            4, id=n_short + j))
+        arrivals.append(2 + j)  # burst lands while the shorts are decoding
+    return reqs, arrivals, short_ids
+
+
+def run_disagg(params, cfg, chunk, fast: bool):
+    """Colocated vs disaggregated serving under a long-prompt admission
+    burst, plus the handoff-bytes probe. Decode smoothness is measured on
+    each configuration's own decode clock: the colocated engine's decode
+    slots share every tick with the burst's chunk dispatches; the disagg
+    decode fleet's simulated clock advances only on its OWN dispatches, so
+    the burst (which burns prefill-fleet clock) cannot show up in its
+    gaps."""
+    long_len = 2048 if fast else 16384
+    max_len = long_len + 128
+    reqs, arrivals, short_ids = disagg_trace(
+        n_short=4 if fast else 8, n_long=4, long_len=long_len,
+        vocab=cfg.vocab)
+    out = {"long_len": long_len, "chunk": chunk}
+
+    eng = ServeEngine(params, cfg, max_len=max_len, prefill_chunk=chunk)
+    eng.serve(reqs, slots=4, arrivals=arrivals)  # untimed: pay compiles
+    t0 = time.perf_counter()
+    base_results, stats = eng.serve(reqs, slots=4, arrivals=arrivals,
+                                    return_stats=True)
+    wall = time.perf_counter() - t0
+    out["colocated"] = {"wall_s": wall,
+                        **_decode_gap_stats(stats, short_ids)}
+
+    ctl = DisaggController(params, cfg, n_prefill=2, n_decode=1, slots=2,
+                           max_len=max_len, prefill_chunk=chunk)
+    ctl.serve(reqs, arrivals=arrivals)  # untimed: pay compiles
+    t0 = time.perf_counter()
+    results, dstats = ctl.serve(reqs, arrivals=arrivals, return_stats=True)
+    wall = time.perf_counter() - t0
+    exact = all(list(results[r.id]) == list(base_results[r.id])
+                for r in reqs)
+    hb = sorted(set(ctl.handoff_bytes.values()))
+    out["disagg"] = {"wall_s": wall, "exact": exact,
+                     "handoff_bytes": hb,
+                     "bytes_flat": len(hb) == 1,
+                     "prefill_clock_s": ctl.prefill.clock,
+                     "decode_clock_s": ctl.decode.clock,
+                     **_decode_gap_stats(dstats, short_ids)}
+    gap_ratio = (out["colocated"]["gap_p99_ms"]
+                 / max(out["disagg"]["gap_p99_ms"], 1e-9))
+    out["gap_p99_colocated_over_disagg"] = gap_ratio
+    emit("serving/disagg", wall * 1e6,
+         f"gap_p99_ms={out['disagg']['gap_p99_ms']:.1f};"
+         f"colocated_gap_p99_ms={out['colocated']['gap_p99_ms']:.1f};"
+         f"bytes_flat={out['disagg']['bytes_flat']};exact={exact}")
+    if not exact:
+        print("# WARNING: disagg serving diverged from colocated tokens")
+    if not out["disagg"]["bytes_flat"]:
+        print("# WARNING: handoff bytes were not flat across prompt lengths")
+    if out["disagg"]["gap_p99_ms"] >= out["colocated"]["gap_p99_ms"]:
+        print("# WARNING: disagg decode p99 gap not better than colocated "
+              "under the admission burst")
+
+    # handoff-bytes probe: one 128-token and one long_len-token prompt
+    # through both wire stores — the flat-bytes / bf16-halving artifact
+    rng = np.random.default_rng(29)
+    probe = [Request(rng.integers(3, cfg.vocab, n).astype(np.int32), 2, id=i)
+             for i, n in enumerate([128, long_len])]
+    bytes_by_store = {}
+    for store in ("f32", "bf16"):
+        pctl = DisaggController(params, cfg, n_prefill=1, n_decode=1,
+                                slots=2, max_len=max_len,
+                                prefill_chunk=chunk, wire_store=store)
+        pctl.serve(probe, arrivals=[0, 0])
+        bytes_by_store[store] = {str(len(r.prompt)): pctl.handoff_bytes[r.id]
+                                 for r in probe}
+    ratio = (bytes_by_store["bf16"][str(128)]
+             / max(bytes_by_store["f32"][str(128)], 1))
+    out["handoff_bytes_by_prompt_len"] = bytes_by_store
+    out["bf16_over_f32_bytes"] = ratio
+    emit("serving/disagg_bytes", 0.0,
+         f"f32_128={bytes_by_store['f32']['128']};"
+         f"f32_{long_len}={bytes_by_store['f32'][str(long_len)]};"
+         f"bf16_ratio={ratio:.2f}")
+    for store, by_len in bytes_by_store.items():
+        if len(set(by_len.values())) != 1:
+            print(f"# WARNING: {store} handoff bytes varied with prompt "
+                  "length")
+    return out
+
+
 def speculative_trace(n_requests: int, motif_len: int, budget: int,
                       seed: int = 11, vocab: int = 256):
     """Decode-heavy requests whose prompts repeat a short token motif — the
@@ -564,6 +682,9 @@ def main(fast: bool = False):
     rows["multihost"] = run_multihost(params, cfg, max_len=256, chunk=bchunk,
                                       fast=fast)
 
+    # --- disaggregated prefill/decode fleets --------------------------------
+    rows["disagg"] = run_disagg(params, cfg, chunk=bchunk, fast=fast)
+
     out = {"profile": "fast" if fast else "full", "rows": rows}
     path = _bench_path()
     path.write_text(json.dumps(out, indent=2) + "\n")
@@ -594,6 +715,23 @@ def main_multihost(fast: bool = False):
     return mh
 
 
+def main_disagg(fast: bool = False):
+    """The disagg trace only — for the CI disagg job; merged into an
+    existing BENCH_serving.json when one is present (same pattern as
+    ``main_multihost``)."""
+    cfg = bench_cfg(mixer="stlt")
+    params = T.init_lm(jax.random.key(0), cfg)
+    dg = run_disagg(params, cfg, chunk=_admission_chunk(fast), fast=fast)
+    path = _bench_path()
+    out = {"profile": "fast" if fast else "full", "rows": {}}
+    if path.exists():
+        out = json.loads(path.read_text())
+    out.setdefault("rows", {})["disagg"] = dg
+    path.write_text(json.dumps(out, indent=2) + "\n")
+    print(f"# wrote {path}")
+    return dg
+
+
 if __name__ == "__main__":
     import argparse
 
@@ -602,8 +740,13 @@ if __name__ == "__main__":
     ap.add_argument("--multihost-only", action="store_true",
                     help="run only the multi-host trace and merge it into "
                          "an existing BENCH_serving.json")
+    ap.add_argument("--disagg-only", action="store_true",
+                    help="run only the disaggregated-fleet trace and merge "
+                         "it into an existing BENCH_serving.json")
     args = ap.parse_args()
     if args.multihost_only:
         main_multihost(fast=not args.full)
+    elif args.disagg_only:
+        main_disagg(fast=not args.full)
     else:
         main(fast=not args.full)

@@ -1,5 +1,9 @@
 """Serving example (deliverable b): batched requests through the continuous-
-batching engine with an STLT model (O(S*d) state per sequence).
+batching engine with an STLT model (O(S*d) state per sequence), then the
+same shape of trace through the disaggregated prefill/decode fleets —
+promote-time states cross the role boundary as O(S*d) wire blobs whose
+size is FLAT in prompt length (the report block prints bytes/request,
+gossip hit rate, and steal counts).
 
   PYTHONPATH=src python examples/serve_lm.py
 """
@@ -7,3 +11,7 @@ from repro.launch import serve as serve_lib
 
 if __name__ == "__main__":
     serve_lib.main(["--requests", "8", "--slots", "4", "--max-new", "12"])
+    serve_lib.main(["--requests", "8", "--slots", "2", "--max-new", "12",
+                    "--role", "disagg", "--prefill-hosts", "2",
+                    "--decode-hosts", "2", "--prefill-chunk", "16",
+                    "--system-prompt-len", "32", "--wire-store", "bf16"])

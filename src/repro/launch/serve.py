@@ -29,6 +29,21 @@ prefix cache). Needs H devices — force host devices with
       PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m \
       --reduced --mesh-data 4 --slots-per-host 2 --prefill-chunk 128 \
       --requests 16 --system-prompt-len 64
+
+``--role disagg`` serves through the disaggregated prefill/decode
+controller (``serving/disagg``): ``--prefill-hosts``/``--decode-hosts``
+size the two fleets, promote-time states ship as O(S*d) wire blobs (flat
+in prompt length; ``--wire-store bf16`` halves them), ``--steal-threshold``
+enables cross-role work stealing, and the report block prints handoff
+bytes/request, gossip hit rate, steal count, and the per-fleet clocks.
+``--role controller --listen host:port --workers N`` drives N socket-
+connected prefill workers instead of in-process hosts; start each with
+``--role prefill --connect host:port`` (model config + init seed cross
+the wire, weights never do).
+
+  PYTHONPATH=src python -m repro.launch.serve --role disagg \
+      --prefill-hosts 2 --decode-hosts 2 --prefill-chunk 64 \
+      --requests 8 --system-prompt-len 64 --wire-store bf16
 """
 from __future__ import annotations
 
@@ -107,7 +122,46 @@ def main(argv=None):
                     help="comma-separated node-budget ladder for SLO "
                          "degradation, e.g. '16,8,4' (requires a trigger: "
                          "--slo-gap-ms or --slo-queue-depth)")
+    ap.add_argument("--spec-adaptive", action="store_true",
+                    help="per-request adaptive draft window: shrink a "
+                         "slot's k when its rolling accept rate drops "
+                         "below --spec-accept-floor, restore stepwise "
+                         "(requires --spec-k >= 2)")
+    ap.add_argument("--spec-accept-floor", type=float, default=0.4)
+    ap.add_argument("--spec-adapt-window", type=int, default=8)
+    ap.add_argument("--spec-adapt-recovery", type=int, default=4)
+    ap.add_argument("--role", default="colocated",
+                    choices=["colocated", "disagg", "controller", "prefill"],
+                    help="colocated: single engine (default). disagg: "
+                         "prefill/decode fleets over an in-process "
+                         "transport. controller: disagg with socket-"
+                         "connected prefill workers (--listen, --workers). "
+                         "prefill: run one worker process (--connect)")
+    ap.add_argument("--prefill-hosts", type=int, default=1)
+    ap.add_argument("--decode-hosts", type=int, default=1)
+    ap.add_argument("--steal-threshold", type=int, default=0,
+                    help="steal queued prefill work onto idle decode hosts "
+                         "when the unadmitted backlog reaches this (0 = off)")
+    ap.add_argument("--wire-store", default="f32", choices=["f32", "bf16"],
+                    help="handoff state dtype on the wire (bf16 ~halves "
+                         "bytes; logits always stay f32)")
+    ap.add_argument("--listen", default="127.0.0.1:18631",
+                    help="controller bind address (--role controller)")
+    ap.add_argument("--connect", default="127.0.0.1:18631",
+                    help="controller address (--role prefill)")
+    ap.add_argument("--worker-name", default="prefill/0")
+    ap.add_argument("--workers", type=int, default=1,
+                    help="remote prefill workers to wait for "
+                         "(--role controller)")
     args = ap.parse_args(argv)
+
+    if args.role == "prefill":
+        # a prefill worker builds everything from the controller's config
+        # message (params from the shared init seed) — no local model args
+        from repro.serving.disagg import worker as worker_lib
+        worker_lib.main(["--connect", args.connect,
+                         "--name", args.worker_name])
+        return
 
     cfg = paper_small() if args.arch is None else configs_lib.get_config(
         args.arch, args.variant)
@@ -131,12 +185,22 @@ def main(argv=None):
         raise SystemExit("--spec-k requires greedy decoding (temperature 0): "
                          "the verify rule is exact for argmax streams only")
     spec_kw = dict(spec_k=args.spec_k, spec_draft=args.spec_draft,
-                   spec_draft_nodes=args.spec_draft_nodes)
+                   spec_draft_nodes=args.spec_draft_nodes,
+                   spec_adaptive=args.spec_adaptive,
+                   spec_accept_floor=args.spec_accept_floor,
+                   spec_adapt_window=args.spec_adapt_window,
+                   spec_adapt_recovery=args.spec_adapt_recovery)
     ladder = tuple(int(m) for m in args.slo_degrade.split(",") if m.strip())
     node_kw = dict(serve_nodes=args.serve_nodes or None,
                    slo_gap_ms=args.slo_gap_ms,
                    slo_queue_depth=args.slo_queue_depth,
                    slo_degrade=ladder)
+    disagg = args.role in ("disagg", "controller")
+    if disagg and args.mode == "wave":
+        raise SystemExit("--role disagg serves continuous mode only")
+    if disagg and args.mesh_data:
+        raise SystemExit("--role disagg and --mesh-data are separate fleet "
+                         "layouts; pick one")
     use_cache = args.system_prompt_len and args.mode == "continuous"
     cache = None
     cache_kw = dict(
@@ -151,7 +215,55 @@ def main(argv=None):
         # KV-buffer entries (unbounded or windowed attention)
         dedup=not any(bt in ("attn", "local_attn")
                       for bt, _ in T.execution_plan(cfg)))
-    if args.mesh_data:
+    ctl = None
+    remote = None
+    if disagg:
+        from repro.serving import DisaggController
+        from repro.serving.disagg.transport import Message, SocketTransport
+        transport = None
+        if args.role == "controller":
+            import dataclasses
+            if use_cache:
+                raise SystemExit("--system-prompt-len with remote prefill "
+                                 "workers is not supported yet (warm_prefix "
+                                 "does not cross the wire)")
+            host, port = args.listen.rsplit(":", 1)
+            transport = SocketTransport("controller", listen=(host, int(port)))
+            names: list[str] = []
+            deadline = time.monotonic() + 120
+            while len(names) < args.workers and time.monotonic() < deadline:
+                names += [m.src for m in
+                          transport.recv("controller", timeout=0.2)
+                          if m.kind == "hello"]
+            if len(names) < args.workers:
+                raise SystemExit(f"only {len(names)}/{args.workers} prefill "
+                                 f"workers connected")
+            payload = {"cfg": dataclasses.asdict(cfg), "seed": 0,
+                       "max_len": args.max_len,
+                       "prefill_chunk": args.prefill_chunk or 64,
+                       "slots": args.slots, "prompt_len": None,
+                       "wire_store": args.wire_store}
+            for n in names:
+                transport.send(Message("config", "controller", n, payload))
+            remote = names
+            print(f"[serve] controller: remote prefill workers {names}")
+        ctl = DisaggController(
+            params, cfg, n_prefill=args.prefill_hosts,
+            n_decode=args.decode_hosts, slots=args.slots,
+            max_len=args.max_len, temperature=args.temperature,
+            prefill_chunk=args.prefill_chunk or 64, transport=transport,
+            steal_threshold=args.steal_threshold,
+            wire_store=args.wire_store,
+            prefix_cache_factory=((lambda: PrefixCache(**cache_kw))
+                                  if use_cache and remote is None else None),
+            remote_prefill=remote, **spec_kw, **node_kw)
+        eng = ctl.decode
+        if use_cache and remote is None:
+            cache = ctl.prefill.caches[0]
+        print(f"[serve] disagg: {args.prefill_hosts} prefill x "
+              f"{args.decode_hosts} decode hosts ({args.slots} slots each), "
+              f"wire={args.wire_store}")
+    elif args.mesh_data:
         if args.mode == "wave":
             raise SystemExit("--mesh-data shards the continuous engine only")
         if args.sequential_admission:
@@ -191,10 +303,14 @@ def main(argv=None):
         for i in range(args.requests)
     ]
     if cache is not None:
-        warmed = eng.warm_prefix(sys_prompt, chunk=args.prefill_chunk or None)
+        warmer = ctl if ctl is not None else eng
+        warmed = warmer.warm_prefix(sys_prompt,
+                                    chunk=args.prefill_chunk or None)
         print(f"[serve] prefix cache warmed: {warmed} tokens")
     t0 = time.time()
-    if args.mesh_data:
+    if ctl is not None:
+        results, stats = ctl.serve(reqs, rng_seed=0, return_stats=True)
+    elif args.mesh_data:
         results, stats = eng.serve(
             reqs, prompt_len=None if use_cache else args.prompt_len,
             return_stats=True)
@@ -214,6 +330,22 @@ def main(argv=None):
     print(f"[serve] mode={args.mode}: {len(reqs)} requests, {n_tok} tokens in "
           f"{dt:.2f}s ({n_tok/max(dt,1e-9):.1f} tok/s), "
           f"latency p50={p50} p99={p99} ticks")
+    if ctl is not None:
+        rep = ctl.report()
+        print(f"[serve] disagg role={args.role}: "
+              f"{rep['handoff_requests']} handoffs, bytes/request "
+              f"[{rep['handoff_bytes_min']}, {rep['handoff_bytes_max']}] "
+              f"(flat in prompt length), steals={rep['steal_count']}, "
+              f"gossip sent={rep['gossip_sent']} "
+              f"hit-rate={rep['gossip_hit_rate']}")
+        print(f"[serve] fleet clocks: prefill={rep['prefill_clock_s']} "
+              f"decode={rep['decode_clock_s']}; "
+              f"transport msgs={rep['transport']['msgs']}")
+        if remote:
+            from repro.serving.disagg.transport import Message
+            for n in remote:
+                ctl.transport.send(Message("bye", "controller", n, {}))
+            ctl.transport.close()
     if args.spec_k:
         ss = eng.spec_stats
         acc = ss["accepted"] / max(ss["drafted"], 1)
@@ -221,6 +353,10 @@ def main(argv=None):
               f"{ss['verify_calls']} verify dispatches for {ss['emitted']} "
               f"tokens ({ss['emitted']/max(ss['verify_calls'],1):.2f} "
               f"tok/dispatch), draft accept rate {100*acc:.1f}%")
+        if args.spec_adaptive:
+            print(f"[serve] spec adapt: {ss['adapt_shrinks']} shrinks / "
+                  f"{ss['adapt_restores']} restores "
+                  f"(min k {ss['adapt_min_k']}, floor {ss['adapt_floor']})")
     if ladder:
         ns = eng.node_stats
         print(f"[serve] slo ladder={ns['ladder']}: "

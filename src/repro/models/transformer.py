@@ -299,6 +299,29 @@ def init_decode_state(cfg: ModelConfig, batch: int, max_len: int):
     return {"layers": states, "pos": jnp.zeros((batch,), jnp.int32)}
 
 
+def decode_state_layout(cfg: ModelConfig, batch: int = 1,
+                        max_len: int = 4096):
+    """Per-layer-kind wire spec of a decode state: a list of
+    ``(block_type, count, leafspec)`` runs mirroring the execution plan,
+    where ``leafspec`` is the run's state pytree with every array leaf
+    replaced by ``(shape, dtype_str)``. Computed via ``eval_shape`` — no
+    arrays are materialized — so the serving wire format
+    (``serving/disagg/wire.py``) can validate a blob against the receiving
+    model's config without shipping structure metadata alongside the
+    payload."""
+    out = []
+    for btype, count in execution_plan(cfg):
+        one = jax.eval_shape(
+            functools.partial(_init_block_state, cfg, btype, batch, max_len))
+        if count > 1:
+            one = jax.tree_util.tree_map(
+                lambda x: jax.ShapeDtypeStruct((count,) + x.shape, x.dtype),
+                one)
+        out.append((btype, count, jax.tree_util.tree_map(
+            lambda l: (tuple(l.shape), str(l.dtype)), one)))
+    return out
+
+
 def _init_block_state(cfg: ModelConfig, btype: str, batch: int, max_len: int):
     dtype = cfg.act_dtype
     if btype in ("attn", "local_attn"):

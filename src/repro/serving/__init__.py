@@ -1,7 +1,12 @@
-from repro.serving.engine import ServeEngine
+from repro.serving.engine import Request, ServeEngine
 from repro.serving.multihost import ShardedServeEngine, make_serve_mesh
 from repro.serving.prefix_cache import PrefixCache, ReplicatedPrefixCache
 from repro.serving.sampler import sample_token
+from repro.serving.disagg import (DisaggController, PrefillEngine,
+                                  DecodeEngine, LoopbackTransport,
+                                  SocketTransport)
 
-__all__ = ["PrefixCache", "ReplicatedPrefixCache", "ServeEngine",
-           "ShardedServeEngine", "make_serve_mesh", "sample_token"]
+__all__ = ["PrefixCache", "ReplicatedPrefixCache", "Request", "ServeEngine",
+           "ShardedServeEngine", "make_serve_mesh", "sample_token",
+           "DisaggController", "PrefillEngine", "DecodeEngine",
+           "LoopbackTransport", "SocketTransport"]

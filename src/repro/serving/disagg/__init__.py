@@ -1,0 +1,30 @@
+"""Disaggregated prefill/decode fleet serving (DESIGN.md §Serving).
+
+STLT's post-prefix decode state is O(S*d) independent of prompt length, so
+DistServe-style disaggregation — prefill fleet admits and chunk-prefills,
+decode fleet decodes — costs a constant-size state handoff per request
+where a transformer ships an O(N*d) KV cache. Three modules:
+
+* :mod:`wire` — versioned, dtype-tagged serialization for any layer-kind
+  batch-1 decode state pytree, optional bf16 storage for float32 carries,
+  ``state_digest``-compatible dedup.
+* :mod:`transport` — message types (admit / handoff / gossip / steal) over
+  an in-process deterministic :class:`LoopbackTransport` or a multi-process
+  :class:`SocketTransport`.
+* :mod:`controller` — :class:`DisaggController` driving prefill-role and
+  decode-role :class:`~repro.serving.engine.ServeEngine` specializations
+  through the unified tick body's phase methods; token-exact vs the
+  single-host engine.
+"""
+from repro.serving.disagg.wire import (pack_state, unpack_state,
+                                       quantize_tree, dequantize_tree)
+from repro.serving.disagg.transport import (Message, LoopbackTransport,
+                                            SocketTransport)
+from repro.serving.disagg.controller import (DisaggController, PrefillEngine,
+                                             DecodeEngine)
+
+__all__ = [
+    "pack_state", "unpack_state", "quantize_tree", "dequantize_tree",
+    "Message", "LoopbackTransport", "SocketTransport",
+    "DisaggController", "PrefillEngine", "DecodeEngine",
+]

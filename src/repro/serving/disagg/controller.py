@@ -1,0 +1,498 @@
+"""Disaggregated prefill/decode controller (DESIGN.md §Serving).
+
+``DisaggController`` splits the fleet into a prefill role (admission +
+chunked/masked prefill ONLY — the decode slot pool is never allocated) and
+a decode role (decode + spec-verify ONLY — prefill dispatches only for
+stolen work), both thin :class:`~repro.serving.engine.ServeEngine`
+specializations driving the SAME unified tick body phase-by-phase. At
+promote time the prefill engine intercepts the finished state via
+``_handoff_promote``, serializes it with :mod:`wire` (O(S*d) — flat in
+prompt length for STLT mixers), and ships it to the least-loaded decode
+host; the decode engine admits it via ``_ready_state`` exactly like a
+full-prompt prefix-cache hit.
+
+Token-exactness: chunked masked prefill is bit-exact vs monolithic (the
+PR-5 carry contract), the promote-time RNG stream is a pure function of
+``(rng_seed, request.id)``, and greedy/sampled decode streams depend only
+on how many steps a row has taken — never on which host or tick it ran.
+So the shipped-state path emits token-for-token what the single-host
+engine emits, at f32 wire storage, for any arrival schedule.
+
+Clocks: each role engine's ``_now()`` reads a simulated per-fleet clock
+advanced only by that fleet's OWN dispatch wall time. On one box this is
+the honest model of role-isolated hardware — a 16k-token admission burns
+prefill-fleet clock, and decode inter-token gaps never see it.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.serving.engine import ServeEngine, _Host
+from repro.serving.prefix_cache import PrefixCache
+from repro.serving.disagg.wire import pack_state, unpack_state
+from repro.serving.disagg.transport import Message, LoopbackTransport
+
+
+def _sync_run(run) -> None:
+    """Wait for a fleet's in-flight device work before reading the clock."""
+    for pool in (run.pool, run.prefill_pool):
+        if pool is not None:
+            jax.block_until_ready(pool)
+
+
+class _RoleEngine(ServeEngine):
+    """A ServeEngine whose wall clock is a simulated per-fleet clock."""
+
+    role = "role"
+
+    def __init__(self, *args, **kwargs):
+        super().__init__(*args, **kwargs)
+        self.clock = 0.0
+
+    def _now(self) -> float:
+        return self.clock
+
+
+class PrefillEngine(_RoleEngine):
+    """Prefill-role engine: admission + chunked/masked prefill; every
+    promote is intercepted and handed off, so no decode pool, no sampling,
+    no live rows — ever. One instance spans the whole prefill fleet (one
+    jit family, one prefill pool), with a per-host prefix cache so gossip
+    has something to replicate into."""
+
+    role = "prefill"
+
+    def __init__(self, params, cfg, *, n_hosts: int = 1, caches=None,
+                 wire_store: str = "f32", **kwargs):
+        super().__init__(params, cfg, **kwargs)
+        self.n_hosts = n_hosts
+        self.caches: list[Optional[PrefixCache]] = (
+            list(caches) if caches is not None else [None] * n_hosts)
+        if len(self.caches) != n_hosts:
+            raise ValueError(f"need one cache slot per host "
+                             f"({n_hosts} hosts, {len(self.caches)} caches)")
+        # warm_prefix and the single-host helpers go through prefix_cache —
+        # point them at host 0's cache; gossip replicates to the rest
+        self.prefix_cache = self.caches[0]
+        self.wire_store = wire_store
+        self.handoff_bytes: dict[int, int] = {}
+        # set per serve by the controller: fn(h, req, ent, blob, logits)
+        self._handoff_fn: Optional[Callable] = None
+
+    def _handoff_promote(self, run, h, local, ent, logits1, st1) -> bool:
+        req = ent["req"]
+        blob = pack_state(st1, store=self.wire_store,
+                          meta={"req_id": req.id, "prefill_host": h,
+                                "n_prompt": len(ent["prompt"])})
+        self.handoff_bytes[req.id] = len(blob)
+        self._handoff_fn(h, req, ent, blob, np.asarray(logits1))
+        return True
+
+    def _ops_lookup(self, prompt, h: int):
+        cache = self.caches[h]
+        if cache is None:
+            return 0, None, None
+        entry = cache.lookup(prompt)
+        if entry is None:
+            return 0, None, None
+        return entry.n_tokens, entry.state, entry.logits
+
+    def _ops_cache_insert(self, prompt, n, state, logits, h: int):
+        if self.caches[h] is not None and n > 0:
+            self.caches[h].insert(np.asarray(prompt)[:n], state, logits)
+
+    def _cache_tick(self, n: int):
+        if n > 0:
+            for cache in self.caches:
+                if cache is not None:
+                    cache.tick(n)
+
+
+class DecodeEngine(_RoleEngine):
+    """Decode-role engine: decode + spec-verify over shipped states. A
+    request whose state arrived over the wire admits through
+    ``_ready_state`` with zero local prefill work; stolen requests fall
+    through to the normal admission path and chunk-prefill locally."""
+
+    role = "decode"
+
+    def __init__(self, params, cfg, **kwargs):
+        super().__init__(params, cfg, **kwargs)
+        self._ready: dict[int, tuple] = {}  # req.id -> (state, logits)
+
+    def _ready_state(self, req):
+        return self._ready.pop(req.id, None)
+
+
+class DisaggController:
+    """Drives a prefill fleet and a decode fleet through the unified tick
+    body's phase methods, with every cross-role interaction a counted
+    transport message. See the module docstring for the protocol.
+
+    ``steal_threshold`` > 0 enables work stealing: when the prefill
+    fleet's unadmitted backlog (queued minus free prefill slots) reaches
+    the threshold and a decode host is fully idle, the youngest queued
+    request moves to the decode host (steal + steal_reply messages) and
+    admits there as a normal full local prefill — still token-exact, since
+    token streams are schedule-independent.
+
+    ``remote_prefill`` names socket-connected prefill workers (see
+    :mod:`repro.serving.disagg.worker`) used INSTEAD of the local prefill
+    fleet; admits/handoffs then cross process boundaries and stealing is
+    disabled (the controller cannot see a remote queue).
+    """
+
+    def __init__(self, params, cfg, *, n_prefill: int = 1, n_decode: int = 1,
+                 slots: int = 2, max_len: int = 4096,
+                 temperature: float = 0.0, eos_id: int = -1, top_k: int = 0,
+                 prefill_chunk: Optional[int] = 64,
+                 transport=None, steal_threshold: int = 0,
+                 wire_store: str = "f32",
+                 prefix_cache_factory: Optional[Callable] = None,
+                 decode_prefix_cache: Optional[PrefixCache] = None,
+                 remote_prefill: Optional[list] = None,
+                 **decode_kwargs):
+        if n_prefill < 1 or n_decode < 1 or slots < 1:
+            raise ValueError("n_prefill, n_decode and slots must be >= 1")
+        self.n_prefill = n_prefill
+        self.n_decode = n_decode
+        self.slots = slots
+        self.steal_threshold = steal_threshold
+        self.wire_store = wire_store
+        self.transport = transport if transport is not None else LoopbackTransport()
+        self.remote_prefill = list(remote_prefill or [])
+        if self.remote_prefill and steal_threshold:
+            raise ValueError("work stealing needs in-process prefill hosts "
+                             "(the controller cannot see a remote queue)")
+        caches = ([prefix_cache_factory() for _ in range(n_prefill)]
+                  if prefix_cache_factory is not None else None)
+        self.prefill = None
+        if not self.remote_prefill:
+            self.prefill = PrefillEngine(
+                params, cfg, n_hosts=n_prefill, caches=caches,
+                wire_store=wire_store, max_len=max_len,
+                temperature=temperature, eos_id=eos_id, top_k=top_k,
+                prefill_chunk=prefill_chunk)
+        # spec_k / spec_adaptive / serve_nodes / slo_* ride decode_kwargs —
+        # they are decode-fleet concerns
+        self.decode = DecodeEngine(
+            params, cfg, max_len=max_len, temperature=temperature,
+            eos_id=eos_id, top_k=top_k, prefill_chunk=prefill_chunk,
+            prefix_cache=decode_prefix_cache, **decode_kwargs)
+        self.transport.register("controller")
+        for h in range(n_prefill):
+            if not self.remote_prefill:
+                self.transport.register(f"prefill/{h}")
+        for j in range(n_decode):
+            self.transport.register(f"decode/{j}")
+        self.steal_count = 0
+        self.gossip_sent = 0
+        self.handoff_bytes: dict[int, int] = {}
+        self._pstats_remote: dict[int, dict] = {}
+        self._admit_inflight = [0] * n_prefill
+
+    # ------------------------------------------------------------ warm prefix
+    def warm_prefix(self, prompt, chunk: Optional[int] = None) -> int:
+        """Warm host 0's prefill cache (pinned boundary snapshots), then
+        gossip every boundary entry to the other prefill hosts as wire
+        blobs. Returns tokens actually prefilled (0 on a full hit)."""
+        if self.remote_prefill:
+            raise ValueError("warm_prefix with remote prefill workers is "
+                             "not supported yet")
+        pe = self.prefill
+        if pe.prefix_cache is None:
+            raise ValueError("warm_prefix requires prefix_cache_factory")
+        n_done = pe.warm_prefix(prompt, chunk)
+        prompt = np.asarray(prompt, np.int32)
+        chunk = chunk or pe.prefill_chunk or len(prompt)
+        bounds = sorted({*range(chunk, len(prompt) + 1, chunk), len(prompt)})
+        for b in bounds:
+            entry = pe.caches[0].lookup(prompt[:b])
+            if entry is None or entry.n_tokens != b:
+                continue
+            blob = pack_state(entry.state, store=self.wire_store,
+                              meta={"n_tokens": b})
+            for h in range(1, self.n_prefill):
+                self.transport.send(Message(
+                    "gossip", "controller", f"prefill/{h}",
+                    {"tokens": prompt[:b].copy(), "blob": blob,
+                     "logits": np.asarray(entry.logits)}))
+                self.gossip_sent += 1
+        self._drain_prefill_inboxes([])  # apply gossip before any serve
+        return n_done
+
+    def gossip_hit_rate(self) -> Optional[float]:
+        """Hit rate of the gossip-fed caches (prefill hosts 1..n-1), whose
+        ONLY entries are gossiped — the direct measure of replication
+        value. None when there is a single prefill host or no caches."""
+        if self.remote_prefill or self.prefill is None:
+            return None
+        tried = hits = 0
+        for cache in self.prefill.caches[1:]:
+            if cache is None:
+                continue
+            st = cache.stats()
+            tried += st["hits"] + st["misses"]
+            hits += st["hits"]
+        return (hits / tried) if tried else None
+
+    # ------------------------------------------------------------------ serve
+    def serve(self, requests, prompt_len: Optional[int] = None,
+              arrivals=None, rng_seed: int = 0, return_stats: bool = False):
+        de = self.decode
+        pe = self.prefill
+        queue = de._queue(requests, arrivals, prompt_len)
+        d_hosts = [_Host(self.slots) for _ in range(self.n_decode)]
+        d_run = de._serve_start(d_hosts, [], prompt_len, None, rng_seed,
+                                de.prefill_chunk, True)
+        d_run.fast_forward = False
+        p_hosts = []
+        p_run = None
+        if pe is not None:
+            pe.handoff_bytes = {}
+            p_hosts = [_Host(self.slots) for _ in range(self.n_prefill)]
+            p_run = pe._serve_start(p_hosts, [], prompt_len, None, rng_seed,
+                                    pe.prefill_chunk, True)
+            p_run.fast_forward = False
+            pe._handoff_fn = self._make_handoff_fn(d_hosts)
+        self.handoff_bytes = {}
+        self._pstats_remote = {}
+        # admits outstanding per remote worker (for least-loaded routing)
+        outstanding = {name: 0 for name in self.remote_prefill}
+        # admits sent but not yet drained into a local host queue — without
+        # this, every same-tick arrival would see identical (stale) loads
+        # and pile onto host 0
+        self._admit_inflight = [0] * self.n_prefill
+
+        def prefill_idle():
+            if pe is None:
+                return all(n == 0 for n in outstanding.values())
+            return (not any(h.queue for h in p_hosts)
+                    and not p_run.any_pending())
+
+        def all_idle():
+            return (prefill_idle() and not any(h.queue for h in d_hosts)
+                    and not d_run.any_pending() and not d_run.any_live()
+                    and not de._ready and self.transport.pending() == 0)
+
+        t = 0
+        while queue or not all_idle():
+            if not queue and all_idle():
+                break
+            if queue and queue[0][0] > t and all_idle():
+                dt = queue[0][0] - t
+                t = queue[0][0]
+                if pe is not None:
+                    pe._cache_tick(dt)
+                de._cache_tick(dt)
+
+            # 1. route arrived requests to the least-loaded prefill host
+            while queue and queue[0][0] <= t:
+                arrival, req = queue.pop(0)
+                if self.remote_prefill:
+                    name = min(self.remote_prefill,
+                               key=lambda n: outstanding[n])
+                    outstanding[name] += 1
+                    dst = name
+                else:
+                    h = min(range(self.n_prefill),
+                            key=lambda i: (len(p_hosts[i].queue)
+                                           + int(p_hosts[i].sched.pending.sum())
+                                           + self._admit_inflight[i], i))
+                    self._admit_inflight[h] += 1
+                    dst = f"prefill/{h}"
+                self.transport.send(Message(
+                    "admit", "controller", dst,
+                    {"req": req, "arrival": arrival}))
+
+            # 2. prefill fleet: drain inbox, one admission/prefill phase,
+            # on its own clock (handoffs fire inside _tick_admission)
+            if pe is not None:
+                self._drain_prefill_inboxes(p_hosts)
+                t0 = time.perf_counter()
+                p_run.tick = t
+                pe._tick_admission(p_run)
+                pe._cache_tick(1)
+                # jax dispatch is async: without a barrier the prefill
+                # compute would land on the device DURING the decode
+                # phase and bill the decode fleet's clock for it
+                _sync_run(p_run)
+                pe.clock += time.perf_counter() - t0
+
+            # 3. steal: deep unadmitted prefill backlog + a fully idle
+            # decode host -> move the youngest queued request across roles
+            if self.steal_threshold > 0 and pe is not None:
+                self._maybe_steal(p_hosts, d_hosts, d_run)
+
+            # 4. decode fleet: drain inbox (handoffs -> ready states), one
+            # admission + decode phase, on its own clock
+            self._drain_decode_inboxes(d_hosts, d_run, outstanding)
+            t0 = time.perf_counter()
+            d_run.tick = t
+            de._tick_admission(d_run)
+            de._tick_decode(d_run)
+            de._cache_tick(1)
+            _sync_run(d_run)  # same barrier: own compute on the own clock
+            de.clock += time.perf_counter() - t0
+            if (self.remote_prefill and not queue and not de._ready
+                    and not d_run.any_live() and not d_run.any_pending()
+                    and not any(h.queue for h in d_hosts)):
+                # everything outstanding is on a remote worker: poll the
+                # socket politely instead of burning ticks (tick-denominated
+                # stats would be nonsense otherwise)
+                time.sleep(0.001)
+            else:
+                t += 1
+
+        if pe is not None:
+            self.handoff_bytes.update(pe.handoff_bytes)
+        out = de._serve_finish(d_run, return_stats)
+        if not return_stats:
+            return out
+        results, dstats = out
+        return results, self._merge_stats(dstats, p_hosts)
+
+    # ------------------------------------------------------------ serve parts
+    def _make_handoff_fn(self, d_hosts):
+        def handoff(h, req, ent, blob, logits):
+            j = min(range(self.n_decode),
+                    key=lambda i: (len(d_hosts[i].queue)
+                                   + int(d_hosts[i].sched.live.sum())
+                                   + int(d_hosts[i].sched.pending.sum()), i))
+            self.transport.send(Message(
+                "handoff", f"prefill/{h}", f"decode/{j}",
+                {"req": req, "blob": blob, "logits": logits,
+                 "prefill_host": h}))
+        return handoff
+
+    def _drain_prefill_inboxes(self, p_hosts):
+        pe = self.prefill
+        for h in range(self.n_prefill):
+            for msg in self.transport.recv(f"prefill/{h}"):
+                if msg.kind == "admit":
+                    p_hosts[h].queue.append(
+                        (msg.payload["arrival"], msg.payload["req"]))
+                    self._admit_inflight[h] = max(
+                        0, self._admit_inflight[h] - 1)
+                elif msg.kind == "gossip":
+                    if pe.caches[h] is not None:
+                        state, digest, _meta = unpack_state(
+                            msg.payload["blob"])
+                        pe.caches[h].insert(
+                            msg.payload["tokens"], state,
+                            msg.payload["logits"], pinned=True,
+                            digest=digest)
+                elif msg.kind == "steal":
+                    # reply with the youngest queued request (tail steal:
+                    # FIFO order of everything already queued is preserved)
+                    if p_hosts[h].queue:
+                        arrival, req = p_hosts[h].queue.pop()
+                        self.transport.send(Message(
+                            "steal_reply", f"prefill/{h}", msg.src,
+                            {"req": req, "arrival": arrival}))
+
+    def _drain_decode_inboxes(self, d_hosts, d_run, outstanding):
+        # remote workers address the controller; forward to a decode host
+        for msg in self.transport.recv("controller"):
+            if msg.kind == "handoff":
+                src = msg.src
+                if src in outstanding:
+                    outstanding[src] -= 1
+                if "pstats" in msg.payload:
+                    self._pstats_remote[msg.payload["req"].id] = \
+                        msg.payload["pstats"]
+                j = min(range(self.n_decode),
+                        key=lambda i: (len(d_hosts[i].queue)
+                                       + int(d_hosts[i].sched.live.sum())
+                                       + int(d_hosts[i].sched.pending.sum()),
+                                       i))
+                self._accept_handoff(msg, d_hosts[j], d_run)
+        for j in range(self.n_decode):
+            for msg in self.transport.recv(f"decode/{j}"):
+                if msg.kind == "handoff":
+                    self._accept_handoff(msg, d_hosts[j], d_run)
+                elif msg.kind == "steal_reply":
+                    d_hosts[j].queue.append(
+                        (msg.payload["arrival"], msg.payload["req"]))
+
+    def _accept_handoff(self, msg, d_host, d_run):
+        de = self.decode
+        req = msg.payload["req"]
+        state, digest, _meta = unpack_state(msg.payload["blob"])
+        de._ready[req.id] = (state, msg.payload["logits"])
+        self.handoff_bytes[req.id] = len(msg.payload["blob"])
+        if de.prefix_cache is not None:
+            # shipped full-prompt states slot straight into the decode
+            # fleet's prefix cache by wire digest — dedup against any
+            # earlier ship of the same prefix is free
+            prompt = np.asarray(req.prompt, np.int32)
+            de.prefix_cache.insert(prompt, state, msg.payload["logits"],
+                                   digest=digest)
+        d_host.queue.append((d_run.tick, req))
+
+    def _maybe_steal(self, p_hosts, d_hosts, d_run):
+        free_prefill = sum(len(h.sched.free_slots()) for h in p_hosts)
+        backlog = sum(len(h.queue) for h in p_hosts) - max(0, free_prefill)
+        if backlog < self.steal_threshold:
+            return
+        for j, d_host in enumerate(d_hosts):
+            if (d_host.queue or d_host.sched.live.any()
+                    or d_host.sched.pending.any()):
+                continue
+            deepest = max(range(self.n_prefill),
+                          key=lambda i: len(p_hosts[i].queue))
+            if not p_hosts[deepest].queue:
+                return
+            self.transport.send(Message(
+                "steal", f"decode/{j}", f"prefill/{deepest}", {}))
+            self._drain_prefill_inboxes(p_hosts)  # serve the steal now
+            self.steal_count += 1
+            backlog -= 1
+            if backlog < self.steal_threshold:
+                return
+
+    def _merge_stats(self, dstats, p_hosts):
+        pstats = dict(self._pstats_remote)
+        for host in p_hosts:
+            pstats.update(host.sched.stats)
+        merged = {}
+        for rid, st in dstats.items():
+            st = dict(st)
+            st["decode_host"] = st.pop("host", None)
+            if rid in pstats:
+                ps = pstats[rid]
+                # prefill-side truth for admission/prefill accounting (the
+                # decode host saw the whole prompt as "cached")
+                st["arrival"] = ps["arrival"]
+                st["admit"] = ps["admit"]
+                st["prefilled_tokens"] = ps["prefilled_tokens"]
+                st["cached_tokens"] = ps["cached_tokens"]
+                st["prefill_host"] = ps.get("host")
+                st["handoff_bytes"] = self.handoff_bytes.get(rid)
+                st["stolen"] = False
+            else:
+                st["stolen"] = True  # prefilled on the decode host itself
+            merged[rid] = st
+        return merged
+
+    # ----------------------------------------------------------------- report
+    def report(self) -> dict:
+        hb = list(self.handoff_bytes.values())
+        return {
+            "n_prefill": self.n_prefill, "n_decode": self.n_decode,
+            "wire_store": self.wire_store,
+            "handoff_requests": len(hb),
+            "handoff_bytes_min": min(hb) if hb else 0,
+            "handoff_bytes_max": max(hb) if hb else 0,
+            "steal_count": self.steal_count,
+            "gossip_sent": self.gossip_sent,
+            "gossip_hit_rate": self.gossip_hit_rate(),
+            "transport": self.transport.stats(),
+            "prefill_clock_s": None if self.prefill is None
+            else self.prefill.clock,
+            "decode_clock_s": self.decode.clock,
+        }

@@ -1,0 +1,236 @@
+"""Transports for the disaggregated fleet (DESIGN.md §Serving).
+
+Every control-plane interaction is a :class:`Message` with one of a small
+set of kinds:
+
+* ``admit`` — controller -> prefill host: a routed arrival (the admission
+  RPC; the request rides the message, prefill work stays host-local).
+* ``handoff`` — prefill host -> decode host: the promote-time state ship —
+  one :mod:`wire` blob (O(S*d), flat in prompt length) + the first-token
+  logits + the prefill-side stats to merge.
+* ``gossip`` — controller -> prefill hosts: a pinned warm-prefix cache
+  entry (wire blob + boundary logits) replicated so every prefill host
+  resumes shared system prompts without recomputing them.
+* ``steal`` / ``steal_reply`` — decode host -> prefill host: an idle
+  decode host requests queued-but-unadmitted work when prefill backlog
+  crosses the steal threshold; the reply carries the stolen request, which
+  the decode host then admits as a normal full local admission.
+* ``hello`` / ``config`` / ``bye`` — multi-process handshake: a worker
+  announces itself, the controller replies with the model config + seed so
+  both sides build identical params, ``bye`` shuts the worker down.
+
+All transports serialize messages the same way (length-prefixed pickle),
+so byte counters are identical across loopback and socket runs — the
+flat-bytes acceptance numbers measured in-process hold verbatim for the
+multi-process deployment.
+"""
+from __future__ import annotations
+
+import pickle
+import select
+import socket
+import struct
+from collections import deque
+from dataclasses import dataclass, field
+
+KINDS = ("admit", "handoff", "gossip", "steal", "steal_reply",
+         "hello", "config", "bye")
+
+
+@dataclass
+class Message:
+    kind: str
+    src: str
+    dst: str
+    payload: dict = field(default_factory=dict)
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown message kind {self.kind!r}")
+
+
+def _frame(msg: Message) -> bytes:
+    return pickle.dumps(msg, protocol=4)
+
+
+class _Counters:
+    def __init__(self):
+        self.msgs: dict[str, int] = {k: 0 for k in KINDS}
+        self.bytes: dict[str, int] = {k: 0 for k in KINDS}
+
+    def count(self, kind: str, n: int):
+        self.msgs[kind] += 1
+        self.bytes[kind] += n
+
+    def stats(self) -> dict:
+        return {"msgs": dict(self.msgs), "bytes": dict(self.bytes),
+                "total_bytes": sum(self.bytes.values()),
+                "total_msgs": sum(self.msgs.values())}
+
+
+class LoopbackTransport:
+    """In-process deterministic transport: per-endpoint FIFO inboxes of
+    SERIALIZED frames. Messages are pickled on send and unpickled on recv
+    even though both ends share an address space — the wire protocol is
+    exercised for real (no object aliasing) and the per-kind byte counters
+    equal what the socket transport would put on the network."""
+
+    def __init__(self):
+        self._inbox: dict[str, deque] = {}
+        self.counters = _Counters()
+
+    def register(self, name: str):
+        self._inbox.setdefault(name, deque())
+
+    def send(self, msg: Message):
+        if msg.dst not in self._inbox:
+            raise KeyError(f"unknown endpoint {msg.dst!r} "
+                           f"(registered: {sorted(self._inbox)})")
+        raw = _frame(msg)
+        self.counters.count(msg.kind, len(raw))
+        self._inbox[msg.dst].append(raw)
+
+    def recv(self, name: str) -> list[Message]:
+        """Drain endpoint ``name``'s inbox (FIFO), possibly empty."""
+        box = self._inbox[name]
+        out = []
+        while box:
+            out.append(pickle.loads(box.popleft()))
+        return out
+
+    def pending(self) -> int:
+        return sum(len(b) for b in self._inbox.values())
+
+    def stats(self) -> dict:
+        return self.counters.stats()
+
+    def close(self):
+        self._inbox.clear()
+
+
+class SocketTransport:
+    """Multi-process transport over TCP: 4-byte length-prefixed pickle
+    frames, one long-lived connection per remote worker.
+
+    Controller side (``listen=addr``): accepts workers, who identify
+    themselves with a ``hello`` message; thereafter ``send`` routes by
+    ``msg.dst`` over the matching connection. Worker side
+    (``connect=addr``): a single connection to the controller; every send
+    goes up that pipe regardless of ``dst`` (the controller forwards).
+    ``recv`` never blocks — it drains whatever frames have arrived.
+    """
+
+    def __init__(self, name: str, listen: tuple | None = None,
+                 connect: tuple | None = None):
+        if (listen is None) == (connect is None):
+            raise ValueError("exactly one of listen=/connect= is required")
+        self.name = name
+        self.counters = _Counters()
+        self._peers: dict[str, socket.socket] = {}
+        self._bufs: dict[socket.socket, bytearray] = {}
+        self._queue: dict[str, deque] = {}
+        self._server = None
+        if listen is not None:
+            self._server = socket.create_server(listen)
+            self._server.setblocking(False)
+        else:
+            sock = socket.create_connection(connect)
+            sock.setblocking(False)
+            self._peers["controller"] = sock
+            self._bufs[sock] = bytearray()
+            self.send(Message("hello", src=name, dst="controller"))
+
+    def register(self, name: str):
+        self._queue.setdefault(name, deque())
+
+    # --- wire helpers ----------------------------------------------------
+    def _send_raw(self, sock: socket.socket, raw: bytes):
+        sock.sendall(struct.pack("<I", len(raw)) + raw)
+
+    def _pump(self, timeout: float = 0.0):
+        """Accept new connections and drain readable sockets into frames."""
+        if self._server is not None:
+            try:
+                while True:
+                    conn, _ = self._server.accept()
+                    conn.setblocking(False)
+                    self._bufs[conn] = bytearray()
+            except (BlockingIOError, OSError):
+                pass
+        socks = [s for s in self._bufs]
+        if not socks:
+            return
+        readable, _, _ = select.select(socks, [], [], timeout)
+        for sock in readable:
+            try:
+                data = sock.recv(1 << 20)
+            except (BlockingIOError, OSError):
+                continue
+            if not data:
+                self._drop(sock)
+                continue
+            buf = self._bufs[sock]
+            buf.extend(data)
+            while len(buf) >= 4:
+                (n,) = struct.unpack("<I", buf[:4])
+                if len(buf) < 4 + n:
+                    break
+                raw = bytes(buf[4:4 + n])
+                del buf[:4 + n]
+                msg: Message = pickle.loads(raw)
+                if msg.kind == "hello" and self._server is not None:
+                    self._peers[msg.src] = sock
+                self._queue.setdefault(msg.dst, deque()).append(msg)
+
+    def _drop(self, sock):
+        self._bufs.pop(sock, None)
+        for k, s in list(self._peers.items()):
+            if s is sock:
+                del self._peers[k]
+        try:
+            sock.close()
+        except OSError:
+            pass
+
+    # --- Transport API ---------------------------------------------------
+    def send(self, msg: Message):
+        raw = _frame(msg)
+        self.counters.count(msg.kind, len(raw))
+        if self._server is None:
+            sock = self._peers["controller"]
+        else:
+            # route by destination endpoint owner: "prefill/2" -> worker
+            # that said hello as "prefill/2" (or local queue if unknown)
+            sock = self._peers.get(msg.dst)
+            if sock is None:
+                self._queue.setdefault(msg.dst, deque()).append(msg)
+                return
+        sock.setblocking(True)
+        try:
+            self._send_raw(sock, raw)
+        finally:
+            sock.setblocking(False)
+
+    def recv(self, name: str, timeout: float = 0.0) -> list[Message]:
+        self._pump(timeout)
+        box = self._queue.setdefault(name, deque())
+        out = []
+        while box:
+            out.append(box.popleft())
+        return out
+
+    def pending(self) -> int:
+        self._pump()
+        return sum(len(b) for b in self._queue.values())
+
+    def stats(self) -> dict:
+        return self.counters.stats()
+
+    def close(self):
+        for sock in list(self._bufs):
+            self._drop(sock)
+        if self._server is not None:
+            try:
+                self._server.close()
+            except OSError:
+                pass

@@ -1,0 +1,190 @@
+"""Wire format for shipped decode states (DESIGN.md §Serving).
+
+A blob is a self-describing serialization of one batch-1 decode state
+pytree (any layer kind — STLT ``h`` carries + ``asum/acnt`` adaptive
+summaries, hann rings, attention KV, rg-LRU / xLSTM states,
+scan-over-layers stacks): a fixed magic + version header, a JSON leaf
+table (tree path, logical dtype, stored dtype, shape, payload offset), and
+the concatenated little-endian raw leaf payload. Because the state is
+O(S*d) independent of prompt length for STLT mixers, the blob size is the
+paper's flat-bytes property made measurable.
+
+Storage dtype: ``store="bf16"`` stores float32 leaves as bfloat16 (half
+the bytes); ``unpack_state`` always returns float32 — accumulation
+downstream stays f32, only the at-rest/in-flight representation narrows.
+bf16 -> f32 -> bf16 is exact, so a blob round-trips to the identical blob
+and the digest is stable.
+
+Digest: computed over the DEQUANTIZED logical leaves in flatten order with
+the same hash as :func:`repro.serving.prefix_cache.state_digest` (which
+hashes leaf contents, not tree structure), so a receiver can insert the
+unpacked state into a prefix cache by digest without rehashing, and pack ->
+unpack -> pack is digest-stable at both storage dtypes.
+"""
+from __future__ import annotations
+
+import json
+import struct
+
+import jax
+import numpy as np
+
+try:  # ml_dtypes ships with jax — the import is belt and braces only
+    import ml_dtypes
+    _BF16 = np.dtype(ml_dtypes.bfloat16)
+except ImportError:  # pragma: no cover
+    ml_dtypes = None
+    _BF16 = None
+
+from repro.serving.prefix_cache import state_digest
+
+MAGIC = b"STLTWIRE"
+VERSION = 1
+_STORES = ("f32", "bf16")
+
+
+def _np_dtype(name: str) -> np.dtype:
+    try:
+        return np.dtype(name)
+    except TypeError:
+        if ml_dtypes is not None:
+            return np.dtype(getattr(ml_dtypes, name))
+        raise
+
+
+def quantize_tree(tree):
+    """float32 leaves -> bfloat16 (idempotent; other dtypes untouched)."""
+    return jax.tree_util.tree_map(
+        lambda l: np.asarray(l).astype(_BF16)
+        if np.asarray(l).dtype == np.float32 else np.asarray(l), tree)
+
+
+def dequantize_tree(tree):
+    """bfloat16 leaves -> float32 (idempotent; other dtypes untouched)."""
+    return jax.tree_util.tree_map(
+        lambda l: np.asarray(l).astype(np.float32)
+        if np.asarray(l).dtype == _BF16 else np.asarray(l), tree)
+
+
+def _encode_path(path) -> list:
+    steps = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            steps.append(["k", p.key])
+        elif isinstance(p, jax.tree_util.SequenceKey):
+            steps.append(["i", p.idx])
+        elif isinstance(p, jax.tree_util.GetAttrKey):  # pragma: no cover
+            steps.append(["k", p.name])
+        else:  # pragma: no cover
+            raise TypeError(f"unsupported pytree path step {p!r}")
+    return steps
+
+
+def pack_state(state, *, store: str = "f32", meta: dict | None = None) -> bytes:
+    """Serialize a decode-state pytree (nested dicts/lists of arrays).
+
+    ``store="bf16"`` narrows float32 leaves to bfloat16 on the wire;
+    integer and non-f32 leaves are always stored verbatim. ``meta`` is an
+    arbitrary JSON-serializable dict carried in the header (request id,
+    source host, ...).
+    """
+    if store not in _STORES:
+        raise ValueError(f"store must be one of {_STORES} (got {store!r})")
+    leaves_p, _ = jax.tree_util.tree_flatten_with_path(state)
+    table = []
+    chunks = []
+    logical = []
+    offset = 0
+    for path, leaf in leaves_p:
+        arr = np.ascontiguousarray(np.asarray(leaf))
+        stored = arr
+        if store == "bf16" and arr.dtype == np.float32:
+            stored = arr.astype(_BF16)
+            # digest the logical (dequantized) content so the digest is
+            # identical before and after any number of round-trips
+            logical.append(stored.astype(np.float32))
+        else:
+            logical.append(arr)
+        raw = stored.tobytes()
+        table.append({"path": _encode_path(path),
+                      "shape": list(arr.shape),
+                      "dtype": str(arr.dtype),
+                      "store": str(stored.dtype),
+                      "offset": offset, "nbytes": len(raw)})
+        chunks.append(raw)
+        offset += len(raw)
+    digest = state_digest(logical)
+    header = json.dumps({"version": VERSION, "store": store,
+                         "digest": digest.hex(),
+                         "leaves": table}).encode()
+    header += b" " * (-len(header) % 64)
+    # meta travels in its own segment, padded to a 256-byte multiple (JSON
+    # ignores trailing spaces): blob size is then INDEPENDENT of meta
+    # contents — digit-count jitter in request ids or prompt lengths can
+    # never leak into the byte count, so the flat-bytes property is exact
+    meta_seg = json.dumps(meta or {}).encode()
+    meta_seg += b" " * (-len(meta_seg) % 256)
+    return b"".join([MAGIC,
+                     struct.pack("<HHII", VERSION, 0, len(header),
+                                 len(meta_seg)),
+                     header, meta_seg] + chunks)
+
+
+def _rebuild(entries):
+    """Nested dict/list tree from (path_steps, leaf) pairs."""
+    if not entries:
+        return {}
+    if not entries[0][0]:
+        if len(entries) != 1:  # pragma: no cover
+            raise ValueError("multiple leaves at the tree root")
+        return entries[0][1]
+    by_key: dict = {}
+    kinds = set()
+    for steps, leaf in entries:
+        kind, key = steps[0]
+        kinds.add(kind)
+        by_key.setdefault((kind, key), []).append((steps[1:], leaf))
+    if kinds == {"i"}:
+        idxs = sorted(k for _, k in by_key)
+        if idxs != list(range(len(idxs))):  # pragma: no cover
+            raise ValueError(f"non-contiguous list indices {idxs}")
+        return [_rebuild(by_key[("i", i)]) for i in idxs]
+    if kinds == {"k"}:
+        return {k: _rebuild(v) for (_, k), v in by_key.items()}
+    raise ValueError("mixed dict/list keys at one tree level")  # pragma: no cover
+
+
+def unpack_state(blob: bytes):
+    """Inverse of :func:`pack_state`.
+
+    Returns ``(state, digest, meta)`` — ``state`` is the logical-dtype
+    pytree (bf16-stored float32 leaves come back as float32), ``digest``
+    the ``state_digest``-compatible bytes from the header (suitable for
+    ``PrefixCache.insert(digest=...)``), ``meta`` the sender's dict.
+    """
+    if blob[:len(MAGIC)] != MAGIC:
+        raise ValueError("not a STLT wire blob (bad magic)")
+    fixed = len(MAGIC) + struct.calcsize("<HHII")
+    version, _flags, hlen, mlen = struct.unpack("<HHII",
+                                                blob[len(MAGIC):fixed])
+    if version != VERSION:
+        raise ValueError(f"unsupported wire version {version} "
+                         f"(this build reads {VERSION})")
+    header = json.loads(blob[fixed:fixed + hlen])
+    meta = json.loads(blob[fixed + hlen:fixed + hlen + mlen]) if mlen else {}
+    payload = blob[fixed + hlen + mlen:]
+    entries = []
+    for ent in header["leaves"]:
+        lo, n = ent["offset"], ent["nbytes"]
+        if lo + n > len(payload):
+            raise ValueError("truncated wire blob")
+        arr = np.frombuffer(payload, dtype=_np_dtype(ent["store"]),
+                            count=int(np.prod(ent["shape"], dtype=np.int64))
+                            if ent["shape"] else 1, offset=lo)
+        arr = arr.reshape(ent["shape"])
+        logical = _np_dtype(ent["dtype"])
+        if arr.dtype != logical:
+            arr = arr.astype(logical)
+        entries.append(([tuple(s) for s in ent["path"]], arr))
+    state = _rebuild(entries)
+    return state, bytes.fromhex(header["digest"]), meta

@@ -1,0 +1,101 @@
+"""Multi-process prefill worker (``python -m repro.serving.disagg.worker``).
+
+Connects to a listening :class:`DisaggController` (or any driver speaking
+the transport protocol), announces itself with ``hello``, receives a
+``config`` message carrying the model config + init seed — both sides
+build identical params from the same seed, so no weights cross the wire —
+then loops: ``admit`` messages queue requests, each tick runs one
+admission/prefill phase of the unified tick body, and every finished
+prefill ships back to the controller as a ``handoff`` wire blob (O(S*d),
+flat in prompt length). ``bye`` shuts the worker down.
+
+Work stealing does not cross process boundaries (the controller cannot
+see a remote queue) — remote workers only prefill.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.transformer import init_lm
+from repro.serving.engine import _Host
+from repro.serving.disagg.controller import PrefillEngine
+from repro.serving.disagg.transport import Message, SocketTransport
+
+
+def _cfg_from_wire(d: dict) -> ModelConfig:
+    # JSON/pickle round-trips turn tuple fields into lists
+    return ModelConfig(**{k: tuple(v) if isinstance(v, list) else v
+                          for k, v in d.items()})
+
+
+def run_worker(name: str, connect: tuple, poll_s: float = 0.01,
+               max_idle_s: float = 60.0):
+    tr = SocketTransport(name, connect=connect)
+    tr.register(name)
+    cfg = None
+    deadline = time.monotonic() + max_idle_s
+    while cfg is None:
+        for msg in tr.recv(name, timeout=poll_s):
+            if msg.kind == "config":
+                cfg = msg
+        if time.monotonic() > deadline:
+            raise TimeoutError("no config message from controller")
+    p = cfg.payload
+    model_cfg = _cfg_from_wire(p["cfg"])
+    params = init_lm(jax.random.key(p["seed"]), model_cfg)
+    engine = PrefillEngine(
+        params, model_cfg, n_hosts=1, wire_store=p.get("wire_store", "f32"),
+        max_len=p.get("max_len", 4096),
+        prefill_chunk=p.get("prefill_chunk", 64))
+    hosts = [_Host(p.get("slots", 2))]
+    run = engine._serve_start(hosts, [], p.get("prompt_len"), None,
+                              p.get("seed", 0), engine.prefill_chunk, True)
+    run.fast_forward = False
+
+    def handoff(h, req, ent, blob, logits):
+        pstats = dict(hosts[0].sched.stats[req.id])
+        pstats.pop("token_walls", None)
+        tr.send(Message("handoff", name, "controller",
+                        {"req": req, "blob": blob,
+                         "logits": np.asarray(logits), "pstats": pstats}))
+
+    engine._handoff_fn = handoff
+    deadline = time.monotonic() + max_idle_s
+    while True:
+        busy = bool(hosts[0].queue) or run.any_pending()
+        for msg in tr.recv(name, timeout=0.0 if busy else poll_s):
+            if msg.kind == "admit":
+                hosts[0].queue.append(
+                    (msg.payload.get("arrival", run.tick),
+                     msg.payload["req"]))
+            elif msg.kind == "bye":
+                tr.close()
+                return
+        if hosts[0].queue or run.any_pending():
+            run.tick += 1
+            engine._tick_admission(run)
+            engine._cache_tick(1)
+            deadline = time.monotonic() + max_idle_s
+        elif time.monotonic() > deadline:
+            tr.close()
+            raise TimeoutError("idle past max_idle_s with no bye")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description="disagg prefill worker")
+    ap.add_argument("--connect", required=True,
+                    help="controller address host:port")
+    ap.add_argument("--name", default="prefill/0")
+    ap.add_argument("--max-idle-s", type=float, default=60.0)
+    args = ap.parse_args(argv)
+    host, port = args.connect.rsplit(":", 1)
+    run_worker(args.name, (host, int(port)), max_idle_s=args.max_idle_s)
+
+
+if __name__ == "__main__":
+    main()

@@ -174,6 +174,53 @@ class _Host:
         self.pending: dict[int, dict] = {}  # local slot -> in-flight prefill
 
 
+class _ServeRun:
+    """Mutable state of one serve run, threaded through the tick phase
+    methods (``_serve_start`` -> ``_serve_tick``* -> ``_serve_finish``).
+    Factoring the loop body's locals into an object lets the disagg
+    controller drive a fleet's admission and decode phases tick-by-tick
+    from outside, interleaved with transport I/O, without forking the tick
+    body."""
+
+    def __init__(self, hosts, queue, chunk_size, coalesce, prompt_len,
+                 base_key, B):
+        self.hosts = hosts
+        self.K = hosts[0].sched.n_slots
+        self.B = B
+        self.queue = queue               # (arrival, Request), arrival-sorted
+        self.results: dict[int, list[int]] = {}
+        self.spec = None
+        self.spec_adapt = None
+        # decode pool is built lazily at first promote (prefill-role hosts
+        # never pay it); prefill pool lazily at first chunked admission
+        self.pool = None
+        self.prefill_pool = None
+        self.tok = np.zeros(B, np.int32)
+        self.temps = np.full(B, 0.0, np.float32)
+        self.keys = None
+        self.base_key = base_key
+        self.tick = 0
+        self.chunk_size = chunk_size
+        self.coalesce = coalesce
+        self.prompt_len = prompt_len
+        # standalone runs fast-forward idle gaps to the next arrival; the
+        # disagg controller owns the global clock and disables this
+        self.fast_forward = True
+
+    def any_live(self):
+        return any(h.sched.live.any() for h in self.hosts)
+
+    def any_pending(self):
+        return any(h.pending for h in self.hosts)
+
+    def any_queued(self):
+        return any(h.queue for h in self.hosts)
+
+    def active(self):
+        return (bool(self.queue) or self.any_queued() or self.any_pending()
+                or self.any_live())
+
+
 class ServeEngine:
     def __init__(self, params, cfg: ModelConfig, max_len: int = 4096,
                  temperature: float = 0.0, eos_id: int = -1, top_k: int = 0,
@@ -181,6 +228,8 @@ class ServeEngine:
                  prefix_cache: Optional[PrefixCache] = None,
                  spec_k: int = 0, spec_draft: str = "ngram",
                  spec_draft_nodes: int = 4,
+                 spec_adaptive: bool = False, spec_accept_floor: float = 0.4,
+                 spec_adapt_window: int = 8, spec_adapt_recovery: int = 4,
                  serve_nodes: Optional[int] = None,
                  slo_gap_ms: float = 0.0, slo_queue_depth: int = 0,
                  slo_degrade: tuple = (), slo_recovery_ticks: int = 8):
@@ -200,6 +249,16 @@ class ServeEngine:
         head) and scores them in ONE ``spec_verify`` dispatch, emitting
         every accepted token plus the model's bonus token. Token output is
         exactly the plain greedy stream; only the dispatch count changes.
+
+        ``spec_adaptive``: per-request adaptive draft windows — a slot whose
+        rolling accept rate (last ``spec_adapt_window`` drafted tokens, once
+        the window fills) drops below ``spec_accept_floor`` halves its
+        verified window (k -> max(1, k//2)) and steps back up (k -> 2k,
+        capped at ``spec_k``) after ``spec_adapt_recovery`` consecutive
+        healthy rounds — the same stepwise-degrade/stepwise-restore shape as
+        the SLO node ladder. The cap rides the existing per-row ``valid``
+        lane, so dispatch shapes and emitted tokens are unchanged; savings
+        show up as fewer wasted draft positions (``spec_stats``).
 
         ``serve_nodes``: default STLT node budget for every request (None ->
         full S); each :class:`Request` may override it. Caps apply to
@@ -233,6 +292,21 @@ class ServeEngine:
         self.spec_k = spec_k
         self.spec_draft = spec_draft
         self.spec_draft_nodes = spec_draft_nodes
+        if spec_adaptive and spec_k < 2:
+            raise ValueError(
+                "spec_adaptive needs spec_k >= 2 (a 1-token window has no "
+                f"room to shrink; got spec_k={spec_k})")
+        if not 0.0 < spec_accept_floor <= 1.0:
+            raise ValueError(
+                f"spec_accept_floor must be in (0, 1] (got {spec_accept_floor})")
+        if spec_adapt_window < 1 or spec_adapt_recovery < 1:
+            raise ValueError(
+                "spec_adapt_window and spec_adapt_recovery must be >= 1 "
+                f"(got {spec_adapt_window}, {spec_adapt_recovery})")
+        self.spec_adaptive = spec_adaptive
+        self.spec_accept_floor = spec_accept_floor
+        self.spec_adapt_window = spec_adapt_window
+        self.spec_adapt_recovery = spec_adapt_recovery
         # per-serve speculative accounting (verify dispatches, draft/accept
         # token counts); reset at the top of every _serve_ticks run
         self.spec_stats: dict = {}
@@ -615,311 +689,398 @@ class ServeEngine:
                                  arrivals, rng_seed, return_stats, chunk_size,
                                  coalesce)
 
-    def _serve_ticks(self, hosts, requests, prompt_len, arrivals, rng_seed,
-                     return_stats, chunk_size, coalesce=True):
-        """THE serve tick body (DESIGN.md §Serving) — one implementation
-        driven by both engines. ``hosts`` is a list of per-host local state
-        (queue + Scheduler + pending prefills) over contiguous row ranges of
-        one global slot pool (global slot g = h*K + local); all device work
-        goes through the ``_ops_*`` dispatch primitives, which is the ONLY
-        thing the sharded engine overrides. Per tick, in order: route
-        arrivals -> per-host admission -> at most one masked prefill
-        dispatch -> one decode step (or, with ``spec_k``, one draft-verify
-        round) -> release/reset finished rows."""
-        cfg = self.cfg
-        H = len(hosts)
-        K = hosts[0].sched.n_slots
-        B = H * K
-        queue = self._queue(requests, arrivals, prompt_len)
-        results: dict[int, list[int]] = {}
+    # ------------------------------------------------------- disagg tick hooks
+    # The unified tick body is additionally parameterized by three hooks so
+    # the disaggregated controller (serving/disagg) can run prefill-role and
+    # decode-role fleets through the SAME phase methods: a prefill host
+    # intercepts promote to ship the O(S*d) state instead of going live, a
+    # decode host admits shipped states without prefilling, and both stamp
+    # token walls / SLO gaps from a per-role clock.
 
-        spec = self._make_draft(B)
+    def _now(self) -> float:
+        """Wall-clock source for token_walls/SLO gap stamps. Role engines in
+        the disagg controller override this with a simulated per-host clock
+        that advances only by the host's OWN dispatch time — the single-box
+        model of role-isolated hardware."""
+        return time.perf_counter()
+
+    def _handoff_promote(self, run, h, local, ent, logits1, st1) -> bool:
+        """Promote-time interception point. Return True to claim the
+        finished prefill (state + first-token logits) INSTEAD of going live
+        — the slot is then released without decoding. The disagg prefill
+        engine serializes the state here and ships it to a decode host."""
+        return False
+
+    def _ready_state(self, req):
+        """(state, logits) for a request whose prefill already happened
+        elsewhere (a disagg decode host holding a shipped state), or None
+        for the normal admission path. A hit admits like a full-prompt
+        cache hit: zero local prefill work, promote within the tick."""
+        return None
+
+    # ------------------------------------------------------- serve run pieces
+    def _serve_start(self, hosts, requests, prompt_len, arrivals, rng_seed,
+                     chunk_size, coalesce=True) -> "_ServeRun":
+        """Validate the request set and build the mutable per-run state the
+        tick phases operate on. ``requests`` may be empty — the disagg
+        controller starts empty runs and feeds arrivals through the
+        transport instead."""
+        B = len(hosts) * hosts[0].sched.n_slots
+        queue = self._queue(requests, arrivals, prompt_len)
+        run = _ServeRun(hosts, queue, chunk_size, coalesce, prompt_len,
+                        jax.random.key(rng_seed), B)
+        run.spec = self._make_draft(B)
         self.spec_stats = {"verify_calls": 0, "drafted": 0, "accepted": 0,
                            "emitted": 0, "k": self.spec_k}
+        if run.spec is not None and self.spec_adaptive:
+            from repro.serving import speculative
+            run.spec_adapt = speculative.AdaptiveK(
+                self.spec_k, B, floor=self.spec_accept_floor,
+                window=self.spec_adapt_window,
+                recovery=self.spec_adapt_recovery)
         self._slo_level = -1
         self._slo_streak = 0
         self._slo_last_wall = None
         self.node_stats = {"degrade_steps": 0, "restore_steps": 0,
                            "ticks_degraded": 0, "gap_breaches": 0,
                            "queue_breaches": 0,
-                           "min_nodes": int(cfg.stlt_nodes),
+                           "min_nodes": int(self.cfg.stlt_nodes),
                            "ladder": list(self.slo_degrade)}
-        if spec is not None:
+        if run.spec is not None:
             if self.temperature and self.temperature > 0:
                 raise ValueError(
                     "speculative decoding is greedy-only: the accept rule "
                     f"compares argmax tokens (temperature={self.temperature})")
-            for r in requests:
+            for _, r in queue:
                 if r.temperature:
                     raise ValueError(
                         f"request {r.id}: speculative decoding is greedy-only "
                         f"(temperature={r.temperature})")
+        run.temps = np.full(B, self.temperature, np.float32)
+        run.keys = jax.random.split(run.base_key, B)
+        return run
 
-        pool = T.init_decode_state(cfg, B, self.max_len)
-        # coalesced chunked admission: pending prefills live in a SECOND
-        # slot-shaped pool so one batched masked prefill_chunk dispatch
-        # ([B, chunk] + per-row valid_len) advances every co-pending
-        # admission per tick; non-pending rows ride along with valid_len=0
-        # (bit-exact no-ops). Lazily built on the first chunked admission.
-        prefill_pool = None
-        tok = np.zeros(B, np.int32)
-        temps = np.full(B, self.temperature, np.float32)
-        base_key = jax.random.key(rng_seed)
-        keys = jax.random.split(base_key, B)
-        tick = 0
+    def _ensure_pool(self, run):
+        """The decode pool is built lazily on the first promote: a disagg
+        prefill-role engine never promotes locally, so a prefill host never
+        pays the decode pool's HBM (a full second KV pool for attention
+        archs)."""
+        if run.pool is None:
+            run.pool = T.init_decode_state(self.cfg, run.B, self.max_len)
+        return run.pool
 
-        def any_live():
-            return any(h_.sched.live.any() for h_ in hosts)
+    def _promote(self, run, h, local, ent, logits1, st1):
+        """Prefill complete on host h: sample the first token, go live —
+        unless a handoff hook claims the state for another fleet."""
+        sched = run.hosts[h].sched
+        req = ent["req"]
+        if self._handoff_promote(run, h, local, ent, logits1, st1):
+            # shipped elsewhere: free the slot without ever going live
+            sched.release(local, run.tick)
+            return
+        g = h * run.K + local
+        rkey = jax.random.fold_in(run.base_key, req.id)
+        # split BEFORE sampling/storing: k0 is consumed by the first
+        # token, the carried stream continues from the UNUSED half — no
+        # key is ever both consumed and carried (key reuse would
+        # correlate the first two draws of every sampled request)
+        carry, k0 = jax.random.split(rkey)
+        temp = self.temperature if req.temperature is None else req.temperature
+        t0 = int(sample_token(logits1, k0, temp, self.top_k)[0])
+        run.pool = self._ops_insert(self._ensure_pool(run), st1, g)
+        run.keys = run.keys.at[g].set(carry)
+        run.tok[g] = t0
+        run.temps[g] = temp
+        sched.activate(local, run.tick)
+        run.results[req.id] = [t0]
+        sched.stats[req.id]["token_walls"].append(self._now())
+        sched.emitted[local] = 1
+        if sched.emitted[local] >= sched.budgets[local] or t0 == self.eos_id:
+            sched.release(local, run.tick)   # prefill-only request
+            run.pool = self._ops_reset(run.pool, g)
+        elif run.spec is not None:
+            run.spec.on_promote(g, ent["prompt"], t0)
+            if run.spec_adapt is not None:
+                run.spec_adapt.reset(g)
 
-        def any_pending():
-            return any(h_.pending for h_ in hosts)
-
-        def any_queued():
-            return any(h_.queue for h_ in hosts)
-
-        def promote(h, local, ent, logits1, st1):
-            """Prefill complete on host h: sample the first token, go live."""
-            nonlocal pool, keys
-            g = h * K + local
-            sched = hosts[h].sched
-            req = ent["req"]
-            rkey = jax.random.fold_in(base_key, req.id)
-            # split BEFORE sampling/storing: k0 is consumed by the first
-            # token, the carried stream continues from the UNUSED half — no
-            # key is ever both consumed and carried (key reuse would
-            # correlate the first two draws of every sampled request)
-            carry, k0 = jax.random.split(rkey)
-            temp = self.temperature if req.temperature is None else req.temperature
-            t0 = int(sample_token(logits1, k0, temp, self.top_k)[0])
-            pool = self._ops_insert(pool, st1, g)
-            keys = keys.at[g].set(carry)
-            tok[g] = t0
-            temps[g] = temp
-            sched.activate(local, tick)
-            results[req.id] = [t0]
-            sched.stats[req.id]["token_walls"].append(time.perf_counter())
-            sched.emitted[local] = 1
-            if sched.emitted[local] >= sched.budgets[local] or t0 == self.eos_id:
-                sched.release(local, tick)   # prefill-only request
-                pool = self._ops_reset(pool, g)
-            elif spec is not None:
-                spec.on_promote(g, ent["prompt"], t0)
-
-        while queue or any_queued() or any_pending() or any_live():
-            tick_was = tick
-            if (not any_live() and not any_pending() and not any_queued()
-                    and queue and queue[0][0] > tick):
-                tick = queue[0][0]  # idle: fast-forward to the next arrival
-                # sweep the TTL clock across the jump BEFORE this tick's
-                # admission lookups: an entry idle past its TTL expires
-                # honestly, instead of being hit and then evicted by a
-                # stale-clock sweep at the end of the loop body
-                self._cache_tick(tick - tick_was)
-                tick_was = tick
-
-            self._route_arrivals(hosts, queue, tick)
-
-            # --- per-host admission into free local rows --------------------
-            for h, host in enumerate(hosts):
-                sched = host.sched
-                for local in sched.free_slots():
-                    if not host.queue:
-                        break
-                    arrival, req = host.queue.pop(0)
-                    g = h * K + local
-                    prompt = self._padded(req.prompt, prompt_len)
-                    offset, pstate, plogits = self._ops_lookup(prompt, h)
-                    remaining = len(prompt) - offset
-                    # per-request boundary snapshots are only worth caching
-                    # when they EXTEND a known shared prefix (a unique
-                    # prompt's boundaries have ~zero hit probability and
-                    # would churn the LRU); warm_prefix covers first-contact
-                    # system prompts
-                    ent = {"req": req, "prompt": prompt, "done": offset,
-                           "resumed": offset > 0}
-                    sched.hold(local, req, arrival, tick,
-                               prompt_tokens=len(prompt), cached_tokens=offset)
+    def _tick_admission(self, run):
+        """Admission phase of one tick: fill free local rows from host
+        queues, then advance every pending chunked prefill with at most one
+        masked dispatch. Completed prefills promote (or hand off) within
+        the same tick."""
+        cfg = self.cfg
+        hosts, K, B = run.hosts, run.K, run.B
+        chunk_size, coalesce = run.chunk_size, run.coalesce
+        # --- per-host admission into free local rows --------------------
+        for h, host in enumerate(hosts):
+            sched = host.sched
+            for local in sched.free_slots():
+                if not host.queue:
+                    break
+                arrival, req = host.queue.pop(0)
+                prompt = self._padded(req.prompt, run.prompt_len)
+                ready = self._ready_state(req)
+                if ready is not None:
+                    # prefilled elsewhere (disagg handoff): splice + promote
+                    # with zero local prefill work — the whole prompt counts
+                    # as cached on this host, exactly like a full-prompt hit
+                    st1, logits1 = ready
+                    ent = {"req": req, "prompt": prompt, "done": len(prompt),
+                           "resumed": False}
+                    sched.hold(local, req, arrival, run.tick,
+                               prompt_tokens=len(prompt),
+                               cached_tokens=len(prompt))
                     sched.stats[req.id]["host"] = h
-                    if remaining == 0:
-                        # full-prompt cache hit: the stored last-token logits
-                        # stand in for the skipped prefill
-                        promote(h, local, ent, plogits, pstate)
-                    elif chunk_size and coalesce:
-                        # incremental admission via the batched dispatch
-                        # below (which promotes a <= one-chunk remainder
-                        # within this same tick): seed the slot's
-                        # prefill-pool row
-                        if prefill_pool is None:
-                            prefill_pool = T.init_decode_state(cfg, B, self.max_len)
-                        if pstate is None:
-                            prefill_pool = self._ops_insert(
-                                prefill_pool, self._fresh_template(), g)
-                        else:
-                            prefill_pool = self._ops_insert(prefill_pool, pstate, g)
-                        host.pending[local] = ent
-                    elif chunk_size:
-                        # legacy one-request-per-tick admission (batch-1
-                        # states; single-host only — the sharded engine
-                        # always coalesces)
-                        ent["state"] = (pstate if pstate is not None
-                                        else self._fresh_template())
-                        host.pending[local] = ent
-                    else:  # monolithic admission (single-host only)
-                        if pstate is None:
-                            logits1, st1 = self._prefill(
-                                self.params, inputs=jnp.asarray(prompt[None]))
-                        else:
-                            logits1, st1 = self._prefill_chunk(
-                                self.params,
-                                inputs=jnp.asarray(prompt[None, offset:]),
-                                state=pstate)
-                        self._ops_cache_insert(prompt, len(prompt), st1,
-                                               logits1, h)
-                        promote(h, local, ent, logits1, st1)
-
-            # --- mixed step: ONE masked chunk dispatch advances every pending
-            # admission (coalesce=True). Two static shapes only: a lone
-            # pending slot advances at [1, chunk] (the warm_prefix shape —
-            # no point paying B-x the FLOPs for one row; single-host only),
-            # co-pending slots coalesce into the full [B, chunk] dispatch
-            # ([K, chunk] per shard).
-            n_pending = sum(len(h_.pending) for h_ in hosts)
-            if (n_pending == 1 and coalesce and B > 1
-                    and self._fast_single_prefill):
-                h, host = next((h_i, h_) for h_i, h_ in enumerate(hosts)
-                               if h_.pending)
-                local, = host.pending
-                ent = host.pending[local]
+                    self._promote(run, h, local, ent, logits1, st1)
+                    continue
                 g = h * K + local
-                n = min(chunk_size, len(ent["prompt"]) - ent["done"])
-                buf = np.zeros((1, chunk_size), np.int32)
-                buf[0, :n] = ent["prompt"][ent["done"]:ent["done"] + n]
-                st1 = self._ops_extract(prefill_pool, g)
-                logits1, st1 = self._prefill_chunk(
-                    self.params, inputs=jnp.asarray(buf), state=st1,
-                    valid_len=jnp.asarray([n], np.int32))
-                ent["done"] += n
-                finished = ent["done"] == len(ent["prompt"])
-                if ent["resumed"] or finished:
-                    self._ops_cache_insert(ent["prompt"], ent["done"], st1,
+                offset, pstate, plogits = self._ops_lookup(prompt, h)
+                remaining = len(prompt) - offset
+                # per-request boundary snapshots are only worth caching
+                # when they EXTEND a known shared prefix (a unique
+                # prompt's boundaries have ~zero hit probability and
+                # would churn the LRU); warm_prefix covers first-contact
+                # system prompts
+                ent = {"req": req, "prompt": prompt, "done": offset,
+                       "resumed": offset > 0}
+                sched.hold(local, req, arrival, run.tick,
+                           prompt_tokens=len(prompt), cached_tokens=offset)
+                sched.stats[req.id]["host"] = h
+                if remaining == 0:
+                    # full-prompt cache hit: the stored last-token logits
+                    # stand in for the skipped prefill
+                    self._promote(run, h, local, ent, plogits, pstate)
+                elif chunk_size and coalesce:
+                    # incremental admission via the batched dispatch
+                    # below (which promotes a <= one-chunk remainder
+                    # within this same tick): seed the slot's
+                    # prefill-pool row
+                    if run.prefill_pool is None:
+                        run.prefill_pool = T.init_decode_state(cfg, B,
+                                                               self.max_len)
+                    if pstate is None:
+                        run.prefill_pool = self._ops_insert(
+                            run.prefill_pool, self._fresh_template(), g)
+                    else:
+                        run.prefill_pool = self._ops_insert(run.prefill_pool,
+                                                            pstate, g)
+                    host.pending[local] = ent
+                elif chunk_size:
+                    # legacy one-request-per-tick admission (batch-1
+                    # states; single-host only — the sharded engine
+                    # always coalesces)
+                    ent["state"] = (pstate if pstate is not None
+                                    else self._fresh_template())
+                    host.pending[local] = ent
+                else:  # monolithic admission (single-host only)
+                    if pstate is None:
+                        logits1, st1 = self._prefill(
+                            self.params, inputs=jnp.asarray(prompt[None]))
+                    else:
+                        logits1, st1 = self._prefill_chunk(
+                            self.params,
+                            inputs=jnp.asarray(prompt[None, offset:]),
+                            state=pstate)
+                    self._ops_cache_insert(prompt, len(prompt), st1,
                                            logits1, h)
-                if finished:
-                    del host.pending[local]
-                    promote(h, local, ent, logits1, st1)
-                else:
-                    prefill_pool = self._ops_insert(prefill_pool, st1, g)
-            elif n_pending and coalesce:
-                chunk_tok = np.zeros((B, chunk_size), np.int32)
-                valid = np.zeros((B,), np.int32)
-                for h, host in enumerate(hosts):
-                    for local, ent in host.pending.items():
-                        g = h * K + local
-                        n = min(chunk_size, len(ent["prompt"]) - ent["done"])
-                        chunk_tok[g, :n] = ent["prompt"][ent["done"]:ent["done"] + n]
-                        valid[g] = n
-                logits_all, prefill_pool = self._ops_prefill_pool(
-                    self.params, jnp.asarray(chunk_tok), prefill_pool,
-                    jnp.asarray(valid))
-                for h, host in enumerate(hosts):
-                    for local in list(host.pending):
-                        ent = host.pending[local]
-                        g = h * K + local
-                        ent["done"] += int(valid[g])
-                        finished = ent["done"] == len(ent["prompt"])
-                        if ent["resumed"] or finished:
-                            # boundary snapshot -> the owning host's shard
-                            st1 = self._ops_extract(prefill_pool, g)
-                            self._ops_cache_insert(
-                                ent["prompt"], ent["done"], st1,
-                                logits_all[g:g + 1], h)
-                        if finished:
-                            del host.pending[local]
-                            promote(h, local, ent, logits_all[g:g + 1], st1)
-            # --- ...or one batch-1 chunk per pending slot (legacy path,
-            # single-host only) ---------------------------------------------
-            elif n_pending:
-                host = hosts[0]
+                    self._promote(run, h, local, ent, logits1, st1)
+
+        # --- mixed step: ONE masked chunk dispatch advances every pending
+        # admission (coalesce=True). Two static shapes only: a lone
+        # pending slot advances at [1, chunk] (the warm_prefix shape —
+        # no point paying B-x the FLOPs for one row; single-host only),
+        # co-pending slots coalesce into the full [B, chunk] dispatch
+        # ([K, chunk] per shard).
+        n_pending = sum(len(h_.pending) for h_ in hosts)
+        if (n_pending == 1 and coalesce and B > 1
+                and self._fast_single_prefill):
+            h, host = next((h_i, h_) for h_i, h_ in enumerate(hosts)
+                           if h_.pending)
+            local, = host.pending
+            ent = host.pending[local]
+            g = h * K + local
+            n = min(chunk_size, len(ent["prompt"]) - ent["done"])
+            buf = np.zeros((1, chunk_size), np.int32)
+            buf[0, :n] = ent["prompt"][ent["done"]:ent["done"] + n]
+            st1 = self._ops_extract(run.prefill_pool, g)
+            logits1, st1 = self._prefill_chunk(
+                self.params, inputs=jnp.asarray(buf), state=st1,
+                valid_len=jnp.asarray([n], np.int32))
+            ent["done"] += n
+            finished = ent["done"] == len(ent["prompt"])
+            if ent["resumed"] or finished:
+                self._ops_cache_insert(ent["prompt"], ent["done"], st1,
+                                       logits1, h)
+            if finished:
+                del host.pending[local]
+                self._promote(run, h, local, ent, logits1, st1)
+            else:
+                run.prefill_pool = self._ops_insert(run.prefill_pool, st1, g)
+        elif n_pending and coalesce:
+            chunk_tok = np.zeros((B, chunk_size), np.int32)
+            valid = np.zeros((B,), np.int32)
+            for h, host in enumerate(hosts):
+                for local, ent in host.pending.items():
+                    g = h * K + local
+                    n = min(chunk_size, len(ent["prompt"]) - ent["done"])
+                    chunk_tok[g, :n] = ent["prompt"][ent["done"]:ent["done"] + n]
+                    valid[g] = n
+            logits_all, run.prefill_pool = self._ops_prefill_pool(
+                self.params, jnp.asarray(chunk_tok), run.prefill_pool,
+                jnp.asarray(valid))
+            for h, host in enumerate(hosts):
                 for local in list(host.pending):
                     ent = host.pending[local]
-                    n = min(chunk_size, len(ent["prompt"]) - ent["done"])
-                    logits1, ent["state"] = self._prefill_chunk(
-                        self.params,
-                        inputs=jnp.asarray(ent["prompt"][None, ent["done"]:ent["done"] + n]),
-                        state=ent["state"])
-                    ent["done"] += n
-                    if ent["resumed"] or ent["done"] == len(ent["prompt"]):
-                        self._ops_cache_insert(ent["prompt"], ent["done"],
-                                               ent["state"], logits1, 0)
-                    if ent["done"] == len(ent["prompt"]):
+                    g = h * K + local
+                    ent["done"] += int(valid[g])
+                    finished = ent["done"] == len(ent["prompt"])
+                    if ent["resumed"] or finished:
+                        # boundary snapshot -> the owning host's shard
+                        st1 = self._ops_extract(run.prefill_pool, g)
+                        self._ops_cache_insert(
+                            ent["prompt"], ent["done"], st1,
+                            logits_all[g:g + 1], h)
+                    if finished:
                         del host.pending[local]
-                        promote(0, local, ent, logits1, ent["state"])
+                        self._promote(run, h, local, ent,
+                                      logits_all[g:g + 1], st1)
+        # --- ...or one batch-1 chunk per pending slot (legacy path,
+        # single-host only) ---------------------------------------------
+        elif n_pending:
+            host = hosts[0]
+            for local in list(host.pending):
+                ent = host.pending[local]
+                n = min(chunk_size, len(ent["prompt"]) - ent["done"])
+                logits1, ent["state"] = self._prefill_chunk(
+                    self.params,
+                    inputs=jnp.asarray(ent["prompt"][None, ent["done"]:ent["done"] + n]),
+                    state=ent["state"])
+                ent["done"] += n
+                if ent["resumed"] or ent["done"] == len(ent["prompt"]):
+                    self._ops_cache_insert(ent["prompt"], ent["done"],
+                                           ent["state"], logits1, 0)
+                if ent["done"] == len(ent["prompt"]):
+                    del host.pending[local]
+                    self._promote(run, 0, local, ent, logits1, ent["state"])
 
-            # release the prefill pool once every admission has drained (it
-            # doubles resident state — a full second KV pool for attention
-            # archs); the next chunked admission lazily rebuilds it
-            if prefill_pool is not None and not any_pending():
-                prefill_pool = None
+        # release the prefill pool once every admission has drained (it
+        # doubles resident state — a full second KV pool for attention
+        # archs); the next chunked admission lazily rebuilds it
+        if run.prefill_pool is not None and not run.any_pending():
+            run.prefill_pool = None
 
-            # --- ...plus one decode step (or draft-verify round) ------------
-            decoded = any_live()
-            if any_live() and spec is not None:
-                caps = jnp.asarray(self._row_caps(hosts, K))
-                pool, tick = self._spec_tick(hosts, spec, pool, tok, results,
-                                             tick, caps)
-            elif any_live():
-                caps = jnp.asarray(self._row_caps(hosts, K))
-                keys, subs = self._split(keys)
-                logits, pool = self._ops_decode(self.params, jnp.asarray(tok),
-                                                pool, caps)
-                nxt = np.array(self._sample(logits, subs, jnp.asarray(temps)))
-                tick += 1
-                now = time.perf_counter()
-                for h, host in enumerate(hosts):
-                    sched = host.sched
-                    row = nxt[h * K:(h + 1) * K]
-                    new_live, new_emitted = advance_slots(
-                        row, sched.live, sched.emitted, sched.budgets,
-                        self.eos_id)
-                    for local in np.flatnonzero(sched.live):
-                        rid = sched.req[local].id
-                        results[rid].append(int(row[local]))
-                        sched.stats[rid]["token_walls"].append(now)
-                    sched.emitted = new_emitted
-                    for local in np.flatnonzero(sched.live & ~new_live):
-                        sched.release(local, tick)
-                        pool = self._ops_reset(pool, h * K + local)
-                tok = nxt
-            elif any_pending():
-                tick += 1  # prefill-only tick (nothing decoding yet)
+    def _tick_decode(self, run) -> bool:
+        """Decode phase of one tick: one batched decode step (or one
+        draft-verify round) over the live rows, then release/reset finished
+        rows. Returns whether a decode dispatch ran."""
+        hosts, K = run.hosts, run.K
+        decoded = run.any_live()
+        if decoded and run.spec is not None:
+            caps = jnp.asarray(self._row_caps(hosts, K))
+            self._spec_tick(run, caps)
+        elif decoded:
+            caps = jnp.asarray(self._row_caps(hosts, K))
+            run.keys, subs = self._split(run.keys)
+            logits, run.pool = self._ops_decode(
+                self.params, jnp.asarray(run.tok), run.pool, caps)
+            nxt = np.array(self._sample(logits, subs, jnp.asarray(run.temps)))
+            run.tick += 1
+            now = self._now()
+            for h, host in enumerate(hosts):
+                sched = host.sched
+                row = nxt[h * K:(h + 1) * K]
+                new_live, new_emitted = advance_slots(
+                    row, sched.live, sched.emitted, sched.budgets,
+                    self.eos_id)
+                for local in np.flatnonzero(sched.live):
+                    rid = sched.req[local].id
+                    run.results[rid].append(int(row[local]))
+                    sched.stats[rid]["token_walls"].append(now)
+                sched.emitted = new_emitted
+                for local in np.flatnonzero(sched.live & ~new_live):
+                    sched.release(local, run.tick)
+                    run.pool = self._ops_reset(run.pool, h * K + local)
+            run.tok = nxt
+        elif run.any_pending():
+            run.tick += 1  # prefill-only tick (nothing decoding yet)
+        return decoded
 
-            if self.slo_degrade:
-                gap_ms = None
-                if decoded:
-                    now_slo = time.perf_counter()
-                    if self._slo_last_wall is not None:
-                        gap_ms = (now_slo - self._slo_last_wall) * 1e3
-                    self._slo_last_wall = now_slo
-                self._slo_update(hosts, gap_ms)
+    def _serve_tick(self, run):
+        """One full scheduler tick: idle fast-forward -> route arrivals ->
+        admission phase -> decode phase -> SLO ladder -> cache TTL clock."""
+        tick_was = run.tick
+        if (run.fast_forward and not run.any_live() and not run.any_pending()
+                and not run.any_queued() and run.queue
+                and run.queue[0][0] > run.tick):
+            run.tick = run.queue[0][0]  # idle: fast-forward to next arrival
+            # sweep the TTL clock across the jump BEFORE this tick's
+            # admission lookups: an entry idle past its TTL expires
+            # honestly, instead of being hit and then evicted by a
+            # stale-clock sweep at the end of the loop body
+            self._cache_tick(run.tick - tick_was)
+            tick_was = run.tick
 
-            self._cache_tick(tick - tick_was)
+        self._route_arrivals(run.hosts, run.queue, run.tick)
+        self._tick_admission(run)
+        decoded = self._tick_decode(run)
 
-        out = {rid: np.array(toks, np.int32) for rid, toks in results.items()}
+        if self.slo_degrade:
+            gap_ms = None
+            if decoded:
+                now_slo = self._now()
+                if self._slo_last_wall is not None:
+                    gap_ms = (now_slo - self._slo_last_wall) * 1e3
+                self._slo_last_wall = now_slo
+            self._slo_update(run.hosts, gap_ms)
+
+        self._cache_tick(run.tick - tick_was)
+
+    def _serve_finish(self, run, return_stats):
+        out = {rid: np.array(toks, np.int32)
+               for rid, toks in run.results.items()}
+        if run.spec_adapt is not None:
+            self.spec_stats.update(run.spec_adapt.stats())
         if not return_stats:
             return out
         stats: dict[int, dict] = {}
-        for host in hosts:
+        for host in run.hosts:
             stats.update(host.sched.stats)
         return out, stats
 
+    def _serve_ticks(self, hosts, requests, prompt_len, arrivals, rng_seed,
+                     return_stats, chunk_size, coalesce=True):
+        """THE serve tick body (DESIGN.md §Serving) — one implementation
+        driven by both engines (and, phase by phase, by the disagg
+        controller's role fleets). ``hosts`` is a list of per-host local
+        state (queue + Scheduler + pending prefills) over contiguous row
+        ranges of one global slot pool (global slot g = h*K + local); all
+        device work goes through the ``_ops_*`` dispatch primitives, which
+        is the ONLY thing the sharded engine overrides. Per tick, in order:
+        route arrivals -> per-host admission -> at most one masked prefill
+        dispatch -> one decode step (or, with ``spec_k``, one draft-verify
+        round) -> release/reset finished rows."""
+        run = self._serve_start(hosts, requests, prompt_len, arrivals,
+                                rng_seed, chunk_size, coalesce)
+        while run.active():
+            self._serve_tick(run)
+        return self._serve_finish(run, return_stats)
+
     # ------------------------------------------------------------ speculative
-    def _spec_tick(self, hosts, spec, pool, tok, results, tick, caps=None):
+    def _spec_tick(self, run, caps=None):
         """One draft-verify-accept round (DESIGN.md §Serving): draft k
         tokens per live row, score the whole window in ONE ``spec_verify``
         dispatch, emit every accepted token plus the model's bonus token,
         and roll per-row state to exactly the accepted length. Token output
-        is the plain greedy stream — only the dispatch count changes."""
-        K = hosts[0].sched.n_slots
-        B = len(hosts) * K
+        is the plain greedy stream — only the dispatch count changes.
+
+        With ``spec_adaptive`` the verified window per row is additionally
+        capped at 1 + the row's CURRENT adaptive k (the ladder shrinks on
+        low rolling accept rates and restores stepwise) — a data-only cap,
+        like the budget cap, so the dispatch shape and the emitted stream
+        never change."""
+        hosts, K, B = run.hosts, run.K, run.B
+        spec, tok, results = run.spec, run.tok, run.results
+        adapt = run.spec_adapt
         L = self.spec_k + 1
         live_mask = np.concatenate([h_.sched.live for h_ in hosts])
         inputs = np.zeros((B, L), np.int32)
@@ -932,14 +1093,17 @@ class ServeEngine:
         for h, host in enumerate(hosts):
             sched = host.sched
             for local in np.flatnonzero(sched.live):
+                g = h * K + local
                 remaining = int(sched.budgets[local] - sched.emitted[local])
-                valid[h * K + local] = min(L, remaining)
-        greedy, commit, pool = self._ops_verify(
-            self.params, jnp.asarray(inputs), jnp.asarray(valid), pool, caps)
+                win = L if adapt is None else min(L, 1 + adapt.k_for(g))
+                valid[g] = min(win, remaining)
+        greedy, commit, run.pool = self._ops_verify(
+            self.params, jnp.asarray(inputs), jnp.asarray(valid), run.pool,
+            caps)
         greedy = np.asarray(greedy)
         commit = np.asarray(commit)
-        tick += 1
-        now = time.perf_counter()
+        run.tick += 1
+        now = self._now()
         sstats = self.spec_stats
         sstats["verify_calls"] += 1
         for h, host in enumerate(hosts):
@@ -949,6 +1113,8 @@ class ServeEngine:
                 rid = sched.req[local].id
                 sstats["drafted"] += int(valid[g]) - 1
                 sstats["accepted"] += int(commit[g]) - 1
+                if adapt is not None and valid[g] > 1:
+                    adapt.observe(g, int(valid[g]) - 1, int(commit[g]) - 1)
                 emitted_now = []
                 for t in greedy[g, :commit[g]]:
                     emitted_now.append(int(t))
@@ -960,15 +1126,14 @@ class ServeEngine:
                 sstats["emitted"] += len(emitted_now)
                 if (sched.emitted[local] >= sched.budgets[local]
                         or emitted_now[-1] == self.eos_id):
-                    sched.release(local, tick)
-                    pool = self._ops_reset(pool, g)
+                    sched.release(local, run.tick)
+                    run.pool = self._ops_reset(run.pool, g)
                 else:
                     tok[g] = emitted_now[-1]
                     spec.on_emit(g, emitted_now)
         # model-draft bookkeeping: roll the draft pool forward by exactly
         # the committed tokens (no-op for the host-side n-gram draft)
         spec.commit(inputs, commit)
-        return pool, tick
 
     def _cache_tick(self, n: int):
         """Advance the prefix cache's TTL clock by ``n`` scheduler ticks."""
@@ -1026,7 +1191,7 @@ class ServeEngine:
             while sched.live.any():
                 new_live, new_emitted = advance_slots(
                     tok, sched.live, sched.emitted, sched.budgets, self.eos_id)
-                now = time.perf_counter()
+                now = self._now()
                 for i in np.flatnonzero(sched.live):
                     results[sched.req[i].id].append(int(tok[i]))
                     sched.stats[sched.req[i].id]["token_walls"].append(now)

@@ -93,7 +93,9 @@ class ShardedServeEngine(ServeEngine):
                  eos_id: int = -1, top_k: int = 0, prefill_chunk: int = 256,
                  prefix_cache: Optional[ReplicatedPrefixCache] = None,
                  spec_k: int = 0, spec_draft: str = "ngram",
-                 spec_draft_nodes: int = 4,
+                 spec_draft_nodes: int = 4, spec_adaptive: bool = False,
+                 spec_accept_floor: float = 0.4, spec_adapt_window: int = 8,
+                 spec_adapt_recovery: int = 4,
                  serve_nodes: Optional[int] = None, slo_gap_ms: float = 0.0,
                  slo_queue_depth: int = 0, slo_degrade=(),
                  slo_recovery_ticks: int = 8):
@@ -112,6 +114,10 @@ class ShardedServeEngine(ServeEngine):
                          prefix_cache=prefix_cache, spec_k=spec_k,
                          spec_draft=spec_draft,
                          spec_draft_nodes=spec_draft_nodes,
+                         spec_adaptive=spec_adaptive,
+                         spec_accept_floor=spec_accept_floor,
+                         spec_adapt_window=spec_adapt_window,
+                         spec_adapt_recovery=spec_adapt_recovery,
                          serve_nodes=serve_nodes, slo_gap_ms=slo_gap_ms,
                          slo_queue_depth=slo_queue_depth,
                          slo_degrade=slo_degrade,

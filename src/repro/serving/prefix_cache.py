@@ -134,7 +134,8 @@ class PrefixCache:
 
     def __init__(self, capacity: Optional[int] = None,
                  max_bytes: Optional[int] = None,
-                 ttl_ticks: Optional[int] = None, dedup: bool = True):
+                 ttl_ticks: Optional[int] = None, dedup: bool = True,
+                 store_dtype: str = "f32"):
         if capacity is None and max_bytes is None:
             capacity = 32  # legacy default: bounded entry count
         if capacity is not None and capacity < 1:
@@ -143,9 +144,20 @@ class PrefixCache:
             raise ValueError(f"max_bytes must be >= 1 (got {max_bytes})")
         if ttl_ticks is not None and ttl_ticks < 1:
             raise ValueError(f"ttl_ticks must be >= 1 (got {ttl_ticks})")
+        if store_dtype not in ("f32", "bf16"):
+            raise ValueError(
+                f"store_dtype must be 'f32' or 'bf16' (got {store_dtype!r})")
         self.capacity = capacity
         self.max_bytes = max_bytes
         self.ttl_ticks = ttl_ticks
+        # "bf16": float32 state leaves are stored narrowed (half the
+        # resident bytes; the serving wire format's quantize/dequantize
+        # helpers) and widened back to float32 on lookup — accumulation
+        # downstream stays f32, only the at-rest representation narrows.
+        # Logits are NEVER narrowed: full-prompt hits sample the first
+        # token from them, which must stay bit-exact. Entry digests refer
+        # to the caller's logical (pre-quantization) content.
+        self.store_dtype = store_dtype
         # dedup digests every inserted state (a host readback of the leaves):
         # the right default for O(S*d) STLT states; pass dedup=False to keep
         # inserts readback-free when entries are big attention-KV buffers
@@ -163,6 +175,7 @@ class PrefixCache:
         self.misses = 0
         self.dedup_hits = 0
         self.bytes_saved = 0
+        self.quant_bytes_saved = 0
         self.ttl_evictions = 0
 
     def __len__(self) -> int:
@@ -250,7 +263,19 @@ class PrefixCache:
                 logits = old.logits
             pinned = pinned or old.pinned
             self._drop(key)
+        logical_nbytes = 0
+        if self.store_dtype == "bf16":
+            from repro.serving.disagg import wire as _wire
+            if digest is None and self.dedup:
+                # digest the LOGICAL content before narrowing, so the same
+                # digest keys this entry whether it arrived as f32 or as an
+                # unpacked wire blob
+                digest = state_digest(state)
+            logical_nbytes = pytree_nbytes(state)
+            state = _wire.quantize_tree(state)
         digest, state, state_bytes = self._state_ref(state, digest)
+        if logical_nbytes and state_bytes:  # newly resident, not a dup ref
+            self.quant_bytes_saved += logical_nbytes - state_bytes
         logits_bytes = pytree_nbytes(logits)
         self._entries[key] = PrefixEntry(
             int(tokens.size), state, logits, pinned,
@@ -278,6 +303,12 @@ class PrefixCache:
                 self._entries.move_to_end(key)
                 entry.last_used = self._clock
                 self.hits += 1
+                if self.store_dtype == "bf16":
+                    from repro.serving.disagg import wire as _wire
+                    # hand out a WIDENED copy; the resident entry stays
+                    # narrow (splicing into a slot pool accumulates in f32)
+                    return dataclasses.replace(
+                        entry, state=_wire.dequantize_tree(entry.state))
                 return entry
         self.misses += 1
         return None
@@ -303,6 +334,8 @@ class PrefixCache:
                 "unique_states": len(self._states),
                 "dedup_hits": self.dedup_hits,
                 "bytes_saved": self.bytes_saved,
+                "store_dtype": self.store_dtype,
+                "quant_bytes_saved": self.quant_bytes_saved,
                 "ttl_evictions": self.ttl_evictions,
                 "clock": self._clock}
 
@@ -324,12 +357,15 @@ class ReplicatedPrefixCache:
 
     def __init__(self, n_shards: int, capacity: Optional[int] = None,
                  max_bytes: Optional[int] = None,
-                 ttl_ticks: Optional[int] = None, dedup: bool = True):
+                 ttl_ticks: Optional[int] = None, dedup: bool = True,
+                 store_dtype: str = "f32"):
         if n_shards < 1:
             raise ValueError(f"n_shards must be >= 1 (got {n_shards})")
-        self.shards = [PrefixCache(capacity, max_bytes, ttl_ticks, dedup)
+        self.shards = [PrefixCache(capacity, max_bytes, ttl_ticks, dedup,
+                                   store_dtype)
                        for _ in range(n_shards)]
         self.dedup = dedup
+        self.store_dtype = store_dtype
 
     @property
     def n_shards(self) -> int:
@@ -372,5 +408,7 @@ class ReplicatedPrefixCache:
                 "bytes": sum(s["bytes"] for s in per),
                 "hits": sum(s["hits"] for s in per),
                 "misses": sum(s["misses"] for s in per),
+                "store_dtype": self.store_dtype,
+                "quant_bytes_saved": sum(s["quant_bytes_saved"] for s in per),
                 "replicated_pinned": min(pinned) if pinned else 0,
                 "replication_ok": len(set(pinned)) <= 1}

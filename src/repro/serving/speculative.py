@@ -93,6 +93,84 @@ class NGramDraft:
         return np.asarray(draft[:k], np.int32)
 
 
+class AdaptiveK:
+    """Per-slot adaptive draft-window ladder (engine ``spec_adaptive``).
+
+    Tracks a rolling window of the last ``window`` drafted-token outcomes
+    per slot; once the window fills, an accept rate below ``floor`` halves
+    the slot's k (k -> max(1, k//2)) and clears the history so the shrunken
+    window is judged on fresh evidence. ``recovery`` consecutive healthy
+    rounds at a degraded level double k back toward ``k_max`` — the same
+    stepwise-down/stepwise-up shape as the serve-time SLO node ladder.
+
+    The current k only CAPS the verified window (the engine's per-row
+    ``valid`` lane); drafts still propose ``k_max`` tokens and dispatch
+    shapes never change, so the emitted token stream is untouched — the
+    ladder only stops paying verify FLOPs for draft positions a cold slot
+    keeps wasting."""
+
+    def __init__(self, k_max: int, n_slots: int, floor: float = 0.4,
+                 window: int = 8, recovery: int = 4):
+        if k_max < 2:
+            raise ValueError(f"k_max must be >= 2 (got {k_max})")
+        self.k_max = k_max
+        self.floor = floor
+        self.window = window
+        self.recovery = recovery
+        self._k = np.full(n_slots, k_max, np.int32)
+        self._drafted = np.zeros(n_slots, np.int64)
+        self._accepted = np.zeros(n_slots, np.int64)
+        self._healthy = np.zeros(n_slots, np.int32)
+        self._shrinks = 0
+        self._restores = 0
+        self._min_k = k_max
+
+    def reset(self, g: int):
+        """New request promoted into slot g: start at full k, no history."""
+        self._k[g] = self.k_max
+        self._drafted[g] = 0
+        self._accepted[g] = 0
+        self._healthy[g] = 0
+
+    def k_for(self, g: int) -> int:
+        return int(self._k[g])
+
+    def observe(self, g: int, drafted: int, accepted: int):
+        """Record one verify round's outcome for slot g (draft positions
+        actually verified vs accepted). Rounds with no drafted tokens
+        (budget-capped windows) carry no signal and are skipped."""
+        if drafted <= 0:
+            return
+        self._drafted[g] += drafted
+        self._accepted[g] += accepted
+        rate = self._accepted[g] / self._drafted[g]
+        if self._drafted[g] >= self.window and rate < self.floor:
+            if self._k[g] > 1:
+                self._k[g] = max(1, int(self._k[g]) // 2)
+                self._shrinks += 1
+                self._min_k = min(self._min_k, int(self._k[g]))
+            # judge the shrunken window on fresh evidence
+            self._drafted[g] = 0
+            self._accepted[g] = 0
+            self._healthy[g] = 0
+        elif self._drafted[g] >= self.window:
+            self._healthy[g] += 1
+            if self._healthy[g] >= self.recovery and self._k[g] < self.k_max:
+                self._k[g] = min(self.k_max, int(self._k[g]) * 2)
+                self._restores += 1
+                self._drafted[g] = 0
+                self._accepted[g] = 0
+                self._healthy[g] = 0
+
+    def stats(self) -> dict:
+        return {"adapt_shrinks": self._shrinks,
+                "adapt_restores": self._restores,
+                "adapt_min_k": int(self._min_k),
+                "adapt_floor": self.floor,
+                "adapt_window": self.window,
+                "adapt_recovery": self.recovery}
+
+
 def stlt_node_importance(stlt_params: dict, scfg) -> jax.Array:
     """Per-node importance |u| x decay mass, shape [..., H, S]: readout gain
     times the geometric output mass of the pole, sum_t |lambda|^t =
