@@ -82,11 +82,13 @@ from benchmarks.common import bench_cfg, emit
 from repro.models import transformer as T
 from repro.serving import (
     DisaggController,
+    FaultSchedule,
     PrefixCache,
     ReplicatedPrefixCache,
     ServeEngine,
     ShardedServeEngine,
 )
+from repro.serving.disagg import wire_codec
 from repro.serving.engine import Request
 from repro.utils import trace_probe
 
@@ -461,14 +463,89 @@ def run_disagg(params, cfg, chunk, fast: bool):
              / max(bytes_by_store["f32"][str(128)], 1))
     out["handoff_bytes_by_prompt_len"] = bytes_by_store
     out["bf16_over_f32_bytes"] = ratio
+    # blob compression stacks on bf16 storage (zstd when the module is
+    # present, zlib fallback otherwise — the codec is part of the row)
+    zctl = DisaggController(params, cfg, n_prefill=1, n_decode=1, slots=2,
+                            max_len=max_len, prefill_chunk=chunk,
+                            wire_store="bf16", wire_compress="zstd")
+    zctl.serve(probe, arrivals=[0, 0])
+    zbytes = {str(len(r.prompt)): zctl.handoff_bytes[r.id] for r in probe}
+    zratio = zbytes["128"] / max(bytes_by_store["bf16"]["128"], 1)
+    out["compressed_bytes_by_prompt_len"] = zbytes
+    out["compress_codec"] = wire_codec("zstd")
+    out["compressed_over_bf16_bytes"] = zratio
     emit("serving/disagg_bytes", 0.0,
          f"f32_128={bytes_by_store['f32']['128']};"
          f"f32_{long_len}={bytes_by_store['f32'][str(long_len)]};"
-         f"bf16_ratio={ratio:.2f}")
+         f"bf16_ratio={ratio:.2f};"
+         f"{out['compress_codec']}_ratio={zratio:.2f}")
     for store, by_len in bytes_by_store.items():
         if len(set(by_len.values())) != 1:
             print(f"# WARNING: {store} handoff bytes varied with prompt "
                   "length")
+    return out
+
+
+def run_disagg_failover(params, cfg, chunk, fast: bool):
+    """Availability under failure: the disagg-trace mixed load with a
+    prefill host KILLED mid-burst (seeded, deterministic). Three
+    configurations on identical traffic — colocated (no fleet to lose),
+    fault-free disagg, and disagg surviving the kill — reporting decode
+    p99 gaps, completion latency p99, recovery accounting, and exactness
+    of the failover streams against the fault-free run."""
+    long_len = 2048 if fast else 16384
+    max_len = long_len + 128
+    reqs, arrivals, short_ids = disagg_trace(
+        n_short=4 if fast else 8, n_long=4, long_len=long_len,
+        vocab=cfg.vocab)
+    out = {"long_len": long_len, "chunk": chunk, "kill_tick": 4,
+           "killed": "prefill/1"}
+
+    eng = ServeEngine(params, cfg, max_len=max_len, prefill_chunk=chunk)
+    eng.serve(reqs, slots=4, arrivals=arrivals)  # untimed: pay compiles
+    base_results, cstats = eng.serve(reqs, slots=4, arrivals=arrivals,
+                                     return_stats=True)
+    out["colocated"] = {**_decode_gap_stats(cstats, short_ids),
+                        "latency": _latency_stats(cstats)}
+
+    def disagg_run(faults):
+        ctl = DisaggController(params, cfg, n_prefill=2, n_decode=1,
+                               slots=2, max_len=max_len,
+                               prefill_chunk=chunk, faults=faults)
+        t0 = time.perf_counter()
+        results, dstats = ctl.serve(reqs, arrivals=arrivals,
+                                    return_stats=True)
+        wall = time.perf_counter() - t0
+        return ctl, results, {"wall_s": wall,
+                              **_decode_gap_stats(dstats, short_ids),
+                              "latency": _latency_stats(dstats)}
+
+    _, ff_results, ff_row = disagg_run(None)
+    out["disagg"] = ff_row
+    # the kill lands while the long-prompt burst is mid-prefill: the dead
+    # host's chunked work requeues onto the survivor
+    fctl, f_results, f_row = disagg_run(
+        FaultSchedule(0, kills={out["kill_tick"]: (out["killed"],)}))
+    fs = fctl.fault_stats()
+    exact = all(list(f_results[r.id]) == list(ff_results[r.id])
+                for r in reqs)
+    f_row.update(exact=exact,
+                 detected_failures=fs["detected_failures"],
+                 recovered_requests=fs["recovered_requests"],
+                 requeued_tokens=fs["requeued_tokens"],
+                 retries=fs["retries"])
+    out["disagg_failover"] = f_row
+    out["failover_over_faultfree_p99"] = (
+        f_row["latency"]["p99"] / max(ff_row["latency"]["p99"], 1e-9))
+    emit("serving/disagg_failover", f_row["wall_s"] * 1e6,
+         f"exact={exact};detected={fs['detected_failures']};"
+         f"recovered={fs['recovered_requests']};"
+         f"p99_vs_faultfree={out['failover_over_faultfree_p99']:.2f};"
+         f"gap_p99_ms={f_row['gap_p99_ms']:.1f}")
+    if not exact:
+        print("# WARNING: failover streams diverged from fault-free disagg")
+    if fs["detected_failures"] < 1:
+        print("# WARNING: the scheduled kill was never detected")
     return out
 
 
@@ -722,11 +799,14 @@ def main_disagg(fast: bool = False):
     cfg = bench_cfg(mixer="stlt")
     params = T.init_lm(jax.random.key(0), cfg)
     dg = run_disagg(params, cfg, chunk=_admission_chunk(fast), fast=fast)
+    fo = run_disagg_failover(params, cfg, chunk=_admission_chunk(fast),
+                             fast=fast)
     path = _bench_path()
     out = {"profile": "fast" if fast else "full", "rows": {}}
     if path.exists():
         out = json.loads(path.read_text())
     out.setdefault("rows", {})["disagg"] = dg
+    out["rows"]["disagg_failover"] = fo
     path.write_text(json.dumps(out, indent=2) + "\n")
     print(f"# wrote {path}")
     return dg

@@ -145,6 +145,14 @@ def main(argv=None):
     ap.add_argument("--wire-store", default="f32", choices=["f32", "bf16"],
                     help="handoff state dtype on the wire (bf16 ~halves "
                          "bytes; logits always stay f32)")
+    ap.add_argument("--wire-compress", default="", choices=["", "zstd"],
+                    help="compress handoff blobs (zstd, falling back to "
+                         "zlib when the zstandard module is absent)")
+    ap.add_argument("--chaos-seed", type=int, default=None,
+                    help="inject a seeded message-fault schedule "
+                         "(drop/dup/delay/corrupt) into the disagg "
+                         "transport — the failure drill; streams stay "
+                         "token-exact")
     ap.add_argument("--listen", default="127.0.0.1:18631",
                     help="controller bind address (--role controller)")
     ap.add_argument("--connect", default="127.0.0.1:18631",
@@ -218,7 +226,7 @@ def main(argv=None):
     ctl = None
     remote = None
     if disagg:
-        from repro.serving import DisaggController
+        from repro.serving import DisaggController, FaultSchedule
         from repro.serving.disagg.transport import Message, SocketTransport
         transport = None
         if args.role == "controller":
@@ -242,7 +250,8 @@ def main(argv=None):
                        "max_len": args.max_len,
                        "prefill_chunk": args.prefill_chunk or 64,
                        "slots": args.slots, "prompt_len": None,
-                       "wire_store": args.wire_store}
+                       "wire_store": args.wire_store,
+                       "wire_compress": args.wire_compress or None}
             for n in names:
                 transport.send(Message("config", "controller", n, payload))
             remote = names
@@ -254,6 +263,10 @@ def main(argv=None):
             prefill_chunk=args.prefill_chunk or 64, transport=transport,
             steal_threshold=args.steal_threshold,
             wire_store=args.wire_store,
+            wire_compress=args.wire_compress or None,
+            faults=(None if args.chaos_seed is None else
+                    FaultSchedule(args.chaos_seed, drop=0.05, dup=0.05,
+                                  delay=0.05, corrupt=0.05)),
             prefix_cache_factory=((lambda: PrefixCache(**cache_kw))
                                   if use_cache and remote is None else None),
             remote_prefill=remote, **spec_kw, **node_kw)
@@ -262,7 +275,10 @@ def main(argv=None):
             cache = ctl.prefill.caches[0]
         print(f"[serve] disagg: {args.prefill_hosts} prefill x "
               f"{args.decode_hosts} decode hosts ({args.slots} slots each), "
-              f"wire={args.wire_store}")
+              f"wire={args.wire_store}"
+              + (f"+{args.wire_compress}" if args.wire_compress else "")
+              + (f", chaos seed={args.chaos_seed}"
+                 if args.chaos_seed is not None else ""))
     elif args.mesh_data:
         if args.mode == "wave":
             raise SystemExit("--mesh-data shards the continuous engine only")
@@ -335,12 +351,25 @@ def main(argv=None):
         print(f"[serve] disagg role={args.role}: "
               f"{rep['handoff_requests']} handoffs, bytes/request "
               f"[{rep['handoff_bytes_min']}, {rep['handoff_bytes_max']}] "
-              f"(flat in prompt length), steals={rep['steal_count']}, "
+              + ("(compressed) " if args.wire_compress
+                 else "(flat in prompt length) ")
+              + f"steals={rep['steal_count']}, "
               f"gossip sent={rep['gossip_sent']} "
               f"hit-rate={rep['gossip_hit_rate']}")
         print(f"[serve] fleet clocks: prefill={rep['prefill_clock_s']} "
               f"decode={rep['decode_clock_s']}; "
               f"transport msgs={rep['transport']['msgs']}")
+        fstats = rep["fault_stats"]
+        if (fstats["detected_failures"] or fstats["retries"]
+                or any(fstats["injected"].values())):
+            print(f"[serve] faults: injected={fstats['injected']} "
+                  f"detected={fstats['detected_failures']} "
+                  f"recovered={fstats['recovered_requests']} "
+                  f"requeued-tokens={fstats['requeued_tokens']} "
+                  f"corrupt-rejected={fstats['corrupt_blobs_rejected']} "
+                  f"dups-ignored={fstats['dup_msgs_ignored']} "
+                  f"retries={fstats['retries']} "
+                  f"degraded={fstats['degraded_colocated']}")
         if remote:
             from repro.serving.disagg.transport import Message
             for n in remote:

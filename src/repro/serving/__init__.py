@@ -4,9 +4,9 @@ from repro.serving.prefix_cache import PrefixCache, ReplicatedPrefixCache
 from repro.serving.sampler import sample_token
 from repro.serving.disagg import (DisaggController, PrefillEngine,
                                   DecodeEngine, LoopbackTransport,
-                                  SocketTransport)
+                                  SocketTransport, FaultSchedule, Outbox)
 
 __all__ = ["PrefixCache", "ReplicatedPrefixCache", "Request", "ServeEngine",
            "ShardedServeEngine", "make_serve_mesh", "sample_token",
            "DisaggController", "PrefillEngine", "DecodeEngine",
-           "LoopbackTransport", "SocketTransport"]
+           "LoopbackTransport", "SocketTransport", "FaultSchedule", "Outbox"]

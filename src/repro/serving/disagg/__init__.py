@@ -15,16 +15,24 @@ where a transformer ships an O(N*d) KV cache. Three modules:
   decode-role :class:`~repro.serving.engine.ServeEngine` specializations
   through the unified tick body's phase methods; token-exact vs the
   single-host engine.
+* :mod:`failover` — :class:`FaultSchedule` (seeded deterministic chaos
+  injection: drop / dup / delay / corrupt / kill / partition) and
+  :class:`Outbox` (at-least-once retry bookkeeping); with the
+  controller's heartbeat detection and idempotent splice, every admitted
+  request survives injected faults with token-exact output.
 """
 from repro.serving.disagg.wire import (pack_state, unpack_state,
-                                       quantize_tree, dequantize_tree)
+                                       quantize_tree, dequantize_tree,
+                                       wire_codec)
 from repro.serving.disagg.transport import (Message, LoopbackTransport,
                                             SocketTransport)
+from repro.serving.disagg.failover import FaultSchedule, Outbox, corrupt_blob
 from repro.serving.disagg.controller import (DisaggController, PrefillEngine,
                                              DecodeEngine)
 
 __all__ = [
     "pack_state", "unpack_state", "quantize_tree", "dequantize_tree",
-    "Message", "LoopbackTransport", "SocketTransport",
+    "wire_codec", "Message", "LoopbackTransport", "SocketTransport",
+    "FaultSchedule", "Outbox", "corrupt_blob",
     "DisaggController", "PrefillEngine", "DecodeEngine",
 ]

@@ -18,6 +18,22 @@ on how many steps a row has taken — never on which host or tick it ran.
 So the shipped-state path emits token-for-token what the single-host
 engine emits, at f32 wire storage, for any arrival schedule.
 
+Failure model (DESIGN.md §Serving failure model): the controller layers
+at-least-once delivery + receiver-side idempotence on top of the
+transports and detects dead peers by heartbeat deadline, retry
+exhaustion, or an explicit transport ``peer_down`` event — whichever
+fires first. Detection triggers a fixed recovery sequence: fence the
+peer (a suspected-dead host is killed at the transport, so a false
+suspicion becomes true rather than split-brain), reroute its unacked
+outbox entries, and requeue its in-flight requests — re-spliced from the
+controller-retained handoff blob when one exists, re-prefilled from
+scratch otherwise. Because token streams are schedule-independent (the
+PR-6 RNG contract), every recovered request re-derives the identical
+tokens; the dedupe keys (``(src, msg_id)`` per message, ``req.id`` per
+splice) guarantee at-least-once delivery never double-splices. Losing
+the ENTIRE decode fleet degrades gracefully to colocated mode: the
+prefill engine stops handing off and decodes locally.
+
 Clocks: each role engine's ``_now()`` reads a simulated per-fleet clock
 advanced only by that fleet's OWN dispatch wall time. On one box this is
 the honest model of role-isolated hardware — a 16k-token admission burns
@@ -33,6 +49,7 @@ import numpy as np
 
 from repro.serving.engine import ServeEngine, _Host
 from repro.serving.prefix_cache import PrefixCache
+from repro.serving.disagg.failover import FaultSchedule, Outbox
 from repro.serving.disagg.wire import pack_state, unpack_state
 from repro.serving.disagg.transport import Message, LoopbackTransport
 
@@ -45,29 +62,40 @@ def _sync_run(run) -> None:
 
 
 class _RoleEngine(ServeEngine):
-    """A ServeEngine whose wall clock is a simulated per-fleet clock."""
+    """A ServeEngine whose wall clock is a simulated per-fleet clock, and
+    which can splice a state prefilled elsewhere (``_ready``): the decode
+    role admits shipped handoffs this way, and the PREFILL role uses the
+    same hook in degraded colocated mode to resume requests recovered
+    from a dead decode fleet without re-prefilling them."""
 
     role = "role"
 
     def __init__(self, *args, **kwargs):
         super().__init__(*args, **kwargs)
         self.clock = 0.0
+        self._ready: dict[int, tuple] = {}  # req.id -> (state, logits)
 
     def _now(self) -> float:
         return self.clock
+
+    def _ready_state(self, req):
+        return self._ready.pop(req.id, None)
 
 
 class PrefillEngine(_RoleEngine):
     """Prefill-role engine: admission + chunked/masked prefill; every
     promote is intercepted and handed off, so no decode pool, no sampling,
-    no live rows — ever. One instance spans the whole prefill fleet (one
-    jit family, one prefill pool), with a per-host prefix cache so gossip
-    has something to replicate into."""
+    no live rows — unless ``_handoff_fn`` is None (degraded colocated
+    mode after total decode-fleet loss), in which case promotes go live
+    locally. One instance spans the whole prefill fleet (one jit family,
+    one prefill pool), with a per-host prefix cache so gossip has
+    something to replicate into."""
 
     role = "prefill"
 
     def __init__(self, params, cfg, *, n_hosts: int = 1, caches=None,
-                 wire_store: str = "f32", **kwargs):
+                 wire_store: str = "f32", wire_compress: Optional[str] = None,
+                 **kwargs):
         super().__init__(params, cfg, **kwargs)
         self.n_hosts = n_hosts
         self.caches: list[Optional[PrefixCache]] = (
@@ -79,13 +107,18 @@ class PrefillEngine(_RoleEngine):
         # point them at host 0's cache; gossip replicates to the rest
         self.prefix_cache = self.caches[0]
         self.wire_store = wire_store
+        self.wire_compress = wire_compress
         self.handoff_bytes: dict[int, int] = {}
-        # set per serve by the controller: fn(h, req, ent, blob, logits)
+        # set per serve by the controller: fn(h, req, ent, blob, logits);
+        # None -> degraded colocated mode, promotes stay local
         self._handoff_fn: Optional[Callable] = None
 
     def _handoff_promote(self, run, h, local, ent, logits1, st1) -> bool:
+        if self._handoff_fn is None:
+            return False
         req = ent["req"]
         blob = pack_state(st1, store=self.wire_store,
+                          compress=self.wire_compress,
                           meta={"req_id": req.id, "prefill_host": h,
                                 "n_prompt": len(ent["prompt"])})
         self.handoff_bytes[req.id] = len(blob)
@@ -120,12 +153,13 @@ class DecodeEngine(_RoleEngine):
 
     role = "decode"
 
-    def __init__(self, params, cfg, **kwargs):
-        super().__init__(params, cfg, **kwargs)
-        self._ready: dict[int, tuple] = {}  # req.id -> (state, logits)
 
-    def _ready_state(self, req):
-        return self._ready.pop(req.id, None)
+def _new_fault_stat_counters() -> dict:
+    return {"detected_failures": 0, "recovered_requests": 0,
+            "requeued_tokens": 0, "corrupt_blobs_rejected": 0,
+            "double_splices_prevented": 0, "dup_msgs_ignored": 0,
+            "heartbeats_sent": 0, "rerouted_msgs": 0,
+            "degraded_colocated": False}
 
 
 class DisaggController:
@@ -144,6 +178,19 @@ class DisaggController:
     :mod:`repro.serving.disagg.worker`) used INSTEAD of the local prefill
     fleet; admits/handoffs then cross process boundaries and stealing is
     disabled (the controller cannot see a remote queue).
+
+    Fault tolerance: ``faults`` installs a seeded
+    :class:`~repro.serving.disagg.failover.FaultSchedule` into the
+    transport (the chaos harness). Reliable kinds (admit / handoff /
+    steal_reply) ride an :class:`Outbox` with per-message acks and
+    exponential-backoff retry; heartbeats every ``heartbeat_every`` ticks
+    detect silent peers after ``heartbeat_deadline`` unanswered ticks
+    (``heartbeat_deadline_s`` wall-clock seconds for remote workers —
+    keep it above the worker's worst single-tick stall: a first-prefill
+    jit compile can mute a healthy worker for tens of seconds).
+    Detection fences the peer and requeues its work; all admitted
+    requests complete with token streams identical to the fault-free run
+    — a false positive costs redone work, never tokens.
     """
 
     def __init__(self, params, cfg, *, n_prefill: int = 1, n_decode: int = 1,
@@ -151,10 +198,16 @@ class DisaggController:
                  temperature: float = 0.0, eos_id: int = -1, top_k: int = 0,
                  prefill_chunk: Optional[int] = 64,
                  transport=None, steal_threshold: int = 0,
-                 wire_store: str = "f32",
+                 wire_store: str = "f32", wire_compress: Optional[str] = None,
                  prefix_cache_factory: Optional[Callable] = None,
                  decode_prefix_cache: Optional[PrefixCache] = None,
                  remote_prefill: Optional[list] = None,
+                 faults: Optional[FaultSchedule] = None,
+                 heartbeat_every: int = 1, heartbeat_deadline: int = 8,
+                 heartbeat_deadline_s: float = 30.0,
+                 heartbeat_wall_every_s: float = 0.2,
+                 retry_ticks: float = 2.0, retry_max_attempts: int = 8,
+                 max_ticks: int = 100_000,
                  **decode_kwargs):
         if n_prefill < 1 or n_decode < 1 or slots < 1:
             raise ValueError("n_prefill, n_decode and slots must be >= 1")
@@ -163,7 +216,18 @@ class DisaggController:
         self.slots = slots
         self.steal_threshold = steal_threshold
         self.wire_store = wire_store
+        self.wire_compress = wire_compress
         self.transport = transport if transport is not None else LoopbackTransport()
+        self.faults = faults
+        if faults is not None:
+            self.transport.install_faults(faults)
+        self.heartbeat_every = max(1, int(heartbeat_every))
+        self.heartbeat_deadline = int(heartbeat_deadline)
+        self.heartbeat_deadline_s = float(heartbeat_deadline_s)
+        self.heartbeat_wall_every_s = float(heartbeat_wall_every_s)
+        self.retry_ticks = float(retry_ticks)
+        self.retry_max_attempts = int(retry_max_attempts)
+        self.max_ticks = int(max_ticks)
         self.remote_prefill = list(remote_prefill or [])
         if self.remote_prefill and steal_threshold:
             raise ValueError("work stealing needs in-process prefill hosts "
@@ -172,11 +236,14 @@ class DisaggController:
                   if prefix_cache_factory is not None else None)
         self.prefill = None
         if not self.remote_prefill:
+            # decode_kwargs (spec_*, slo_*, serve-node knobs) also reach
+            # the prefill engine: in degraded colocated mode it IS the
+            # decode fleet and must behave identically
             self.prefill = PrefillEngine(
                 params, cfg, n_hosts=n_prefill, caches=caches,
-                wire_store=wire_store, max_len=max_len,
-                temperature=temperature, eos_id=eos_id, top_k=top_k,
-                prefill_chunk=prefill_chunk)
+                wire_store=wire_store, wire_compress=wire_compress,
+                max_len=max_len, temperature=temperature, eos_id=eos_id,
+                top_k=top_k, prefill_chunk=prefill_chunk, **decode_kwargs)
         # spec_k / spec_adaptive / serve_nodes / slo_* ride decode_kwargs —
         # they are decode-fleet concerns
         self.decode = DecodeEngine(
@@ -194,6 +261,26 @@ class DisaggController:
         self.handoff_bytes: dict[int, int] = {}
         self._pstats_remote: dict[int, dict] = {}
         self._admit_inflight = [0] * n_prefill
+        # --- failure-layer state (reset per serve) -----------------------
+        self.fault_stats_counters = _new_fault_stat_counters()
+        self.fault_log: list[dict] = []
+        self._outbox = Outbox(self.retry_ticks, self.retry_max_attempts)
+        self._msg_seq = 0
+        self._seen: set[tuple] = set()       # (src, msg_id) receiver dedupe
+        self._spliced: set[int] = set()      # req.id splice dedupe
+        self._handoff_keep: dict[int, tuple] = {}   # rid -> (blob, logits)
+        self._limbo: dict[str, list] = {}    # dead ep -> evacuated work
+        self._down: set[str] = set()         # endpoints declared down
+        self._killed_seen: set[str] = set()  # sim-kills already evacuated
+        self._last_hb: dict[str, int] = {}   # ep -> tick of last hb ack
+        self._hb_wall: dict[str, float] = {}
+        self._hb_wall_sent = 0.0
+        self._hb_last_tick = -(1 << 30)
+        self._hb_active = False
+        self._degraded = False
+        self._remote_inflight: dict[str, dict] = {}
+        self._serve_ctx: Optional[dict] = None
+        self._t = 0
 
     # ------------------------------------------------------------ warm prefix
     def warm_prefix(self, prompt, chunk: Optional[int] = None) -> int:
@@ -215,6 +302,7 @@ class DisaggController:
             if entry is None or entry.n_tokens != b:
                 continue
             blob = pack_state(entry.state, store=self.wire_store,
+                              compress=self.wire_compress,
                               meta={"n_tokens": b})
             for h in range(1, self.n_prefill):
                 self.transport.send(Message(
@@ -222,7 +310,7 @@ class DisaggController:
                     {"tokens": prompt[:b].copy(), "blob": blob,
                      "logits": np.asarray(entry.logits)}))
                 self.gossip_sent += 1
-        self._drain_prefill_inboxes([])  # apply gossip before any serve
+        self._drain_prefill_inboxes([], 0)  # apply gossip before any serve
         return n_done
 
     def gossip_hit_rate(self) -> Optional[float]:
@@ -239,6 +327,101 @@ class DisaggController:
             tried += st["hits"] + st["misses"]
             hits += st["hits"]
         return (hits / tried) if tried else None
+
+    # ------------------------------------------------------ reliable delivery
+    def _send_reliable(self, msg: Message, wall: bool = False):
+        """Stamp a msg_id, park the message in the retry outbox, send.
+        Acks/nacks route back to the controller (the outbox owner) —
+        NEVER to ``msg.src``, which may be a fleet endpoint that dies
+        while its message is still in flight."""
+        mid = self._msg_seq
+        self._msg_seq += 1
+        msg.payload["msg_id"] = mid
+        msg.payload["ack_to"] = "controller"
+        now = time.monotonic() if wall else self._t
+        self._outbox.add(mid, msg, now, wall=wall)
+        self.transport.send(msg)
+
+    def _reliable_fresh(self, msg: Message, receiver: str) -> bool:
+        """Receiver half of at-least-once: ALWAYS ack (even duplicates —
+        the sender's first ack may have been lost), process only fresh
+        ``(src, msg_id)`` pairs."""
+        mid = msg.payload.get("msg_id")
+        if mid is None:
+            return True
+        self.transport.send(Message(
+            "ack", receiver, msg.payload.get("ack_to", msg.src),
+            {"msg_id": mid}))
+        key = (msg.src, mid)
+        if key in self._seen:
+            self.fault_stats_counters["dup_msgs_ignored"] += 1
+            return False
+        self._seen.add(key)
+        return True
+
+    def _handle_ack(self, msg: Message):
+        p = msg.payload
+        if "msg_id" in p:
+            self._outbox.ack(p["msg_id"])
+        if "hb" in p:
+            if msg.src in self._remote_inflight:
+                self._hb_wall[msg.src] = time.monotonic()
+            else:
+                self._last_hb[msg.src] = self._t
+
+    # --------------------------------------------------------------- routing
+    def _alive_prefill(self) -> list:
+        return [h for h in range(self.n_prefill)
+                if f"prefill/{h}" not in self._down]
+
+    def _alive_decode(self) -> list:
+        return [j for j in range(self.n_decode)
+                if f"decode/{j}" not in self._down]
+
+    def _pick_decode(self, d_hosts) -> int:
+        alive = self._alive_decode()
+        return min(alive,
+                   key=lambda i: (len(d_hosts[i].queue)
+                                  + int(d_hosts[i].sched.live.sum())
+                                  + int(d_hosts[i].sched.pending.sum()), i))
+
+    def _route_admit(self, arrival, req):
+        """Send a request to the least-loaded surviving host — remote
+        workers first, then local prefill, then (both fleets gone or a
+        degraded-colocated splice pending) straight to a decode host,
+        which prefills locally like stolen work."""
+        ctx = self._serve_ctx
+        if self.remote_prefill:
+            alive = [n for n in self.remote_prefill if n not in self._down]
+            if alive:
+                name = min(alive, key=lambda n: ctx["outstanding"][n])
+                ctx["outstanding"][name] += 1
+                self._remote_inflight[name][req.id] = (arrival, req)
+                self._send_reliable(Message(
+                    "admit", "controller", name,
+                    {"req": req, "arrival": arrival}), wall=True)
+                return
+        elif self.prefill is not None:
+            alive = self._alive_prefill()
+            if alive:
+                p_hosts = ctx["p_hosts"]
+                h = min(alive,
+                        key=lambda i: (len(p_hosts[i].queue)
+                                       + int(p_hosts[i].sched.pending.sum())
+                                       + self._admit_inflight[i], i))
+                self._admit_inflight[h] += 1
+                self._send_reliable(Message(
+                    "admit", "controller", f"prefill/{h}",
+                    {"req": req, "arrival": arrival}))
+                return
+        alive_d = self._alive_decode()
+        if not alive_d:
+            raise RuntimeError(
+                f"no surviving hosts to serve request {req.id}")
+        j = self._pick_decode(ctx["d_hosts"])
+        self._send_reliable(Message(
+            "admit", "controller", f"decode/{j}",
+            {"req": req, "arrival": arrival}))
 
     # ------------------------------------------------------------------ serve
     def serve(self, requests, prompt_len: Optional[int] = None,
@@ -259,63 +442,86 @@ class DisaggController:
                                     pe.prefill_chunk, True)
             p_run.fast_forward = False
             pe._handoff_fn = self._make_handoff_fn(d_hosts)
+            pe._ready = {}
         self.handoff_bytes = {}
         self._pstats_remote = {}
-        # admits outstanding per remote worker (for least-loaded routing)
+        de._ready = {}
         outstanding = {name: 0 for name in self.remote_prefill}
-        # admits sent but not yet drained into a local host queue — without
-        # this, every same-tick arrival would see identical (stale) loads
-        # and pile onto host 0
+        self._remote_inflight = {name: {} for name in self.remote_prefill}
         self._admit_inflight = [0] * self.n_prefill
-
-        def prefill_idle():
-            if pe is None:
-                return all(n == 0 for n in outstanding.values())
-            return (not any(h.queue for h in p_hosts)
-                    and not p_run.any_pending())
-
-        def all_idle():
-            return (prefill_idle() and not any(h.queue for h in d_hosts)
-                    and not d_run.any_pending() and not d_run.any_live()
-                    and not de._ready and self.transport.pending() == 0)
+        self.fault_stats_counters = _new_fault_stat_counters()
+        self.fault_log = []
+        self._outbox = Outbox(self.retry_ticks, self.retry_max_attempts)
+        self._msg_seq = 0
+        self._seen = set()
+        self._spliced = set()
+        self._handoff_keep = {}
+        self._limbo = {}
+        self._down = set()
+        self._killed_seen = set()
+        self._last_hb = {}
+        self._hb_wall = {}
+        self._hb_wall_sent = 0.0
+        self._hb_last_tick = -(1 << 30)
+        self._hb_active = False
+        self._degraded = False
+        self._serve_ctx = dict(queue=queue, p_hosts=p_hosts, p_run=p_run,
+                               d_hosts=d_hosts, d_run=d_run,
+                               outstanding=outstanding)
 
         t = 0
-        while queue or not all_idle():
-            if not queue and all_idle():
+        while queue or not self._all_idle():
+            if not queue and self._all_idle():
                 break
-            if queue and queue[0][0] > t and all_idle():
+            if t > self.max_ticks:
+                raise RuntimeError(
+                    f"serve did not converge within {self.max_ticks} ticks "
+                    f"(outbox={len(self._outbox)}, limbo={len(self._limbo)}, "
+                    f"down={sorted(self._down)})")
+            self._t = t
+            # chaos clock: scheduled kills land, delayed frames come due
+            if hasattr(self.transport, "advance"):
+                self.transport.advance(t)
+            # a sim-killed host's work STOPS now (the process died)...
+            self._observe_kills()
+            # ...but the controller only learns of it via detection:
+            # transport events (socket EOF/OSError), heartbeat deadline,
+            # or retry exhaustion — never by peeking at the kill schedule
+            for ev in self.transport.events():
+                for name in ev.get("peers", []):
+                    if name != "<unidentified>":
+                        self._declare_down(
+                            name, f"peer_down: {ev.get('reason')}")
+            if queue and queue[0][0] > t and self._all_idle():
                 dt = queue[0][0] - t
                 t = queue[0][0]
+                self._t = t
                 if pe is not None:
                     pe._cache_tick(dt)
                 de._cache_tick(dt)
+                # nobody was probed across the jump: restart the liveness
+                # window rather than false-expiring every idle host
+                for ep in list(self._last_hb):
+                    self._last_hb[ep] = t
 
-            # 1. route arrived requests to the least-loaded prefill host
+            self._heartbeat_tick(t)
+
+            # 1. route arrived requests to the least-loaded surviving host
             while queue and queue[0][0] <= t:
                 arrival, req = queue.pop(0)
-                if self.remote_prefill:
-                    name = min(self.remote_prefill,
-                               key=lambda n: outstanding[n])
-                    outstanding[name] += 1
-                    dst = name
-                else:
-                    h = min(range(self.n_prefill),
-                            key=lambda i: (len(p_hosts[i].queue)
-                                           + int(p_hosts[i].sched.pending.sum())
-                                           + self._admit_inflight[i], i))
-                    self._admit_inflight[h] += 1
-                    dst = f"prefill/{h}"
-                self.transport.send(Message(
-                    "admit", "controller", dst,
-                    {"req": req, "arrival": arrival}))
+                self._route_admit(arrival, req)
 
             # 2. prefill fleet: drain inbox, one admission/prefill phase,
-            # on its own clock (handoffs fire inside _tick_admission)
+            # on its own clock (handoffs fire inside _tick_admission); in
+            # degraded colocated mode the same engine also decodes
             if pe is not None:
-                self._drain_prefill_inboxes(p_hosts)
+                self._drain_prefill_inboxes(p_hosts, t)
                 t0 = time.perf_counter()
                 p_run.tick = t
                 pe._tick_admission(p_run)
+                if self._degraded:
+                    decoded = pe._tick_decode(p_run)
+                    self._slo_tick(pe, p_hosts, decoded)
                 pe._cache_tick(1)
                 # jax dispatch is async: without a barrier the prefill
                 # compute would land on the device DURING the decode
@@ -325,22 +531,37 @@ class DisaggController:
 
             # 3. steal: deep unadmitted prefill backlog + a fully idle
             # decode host -> move the youngest queued request across roles
-            if self.steal_threshold > 0 and pe is not None:
-                self._maybe_steal(p_hosts, d_hosts, d_run)
+            if (self.steal_threshold > 0 and pe is not None
+                    and not self._degraded):
+                self._maybe_steal(p_hosts, d_hosts, d_run, t)
 
             # 4. decode fleet: drain inbox (handoffs -> ready states), one
             # admission + decode phase, on its own clock
-            self._drain_decode_inboxes(d_hosts, d_run, outstanding)
+            self._drain_decode_inboxes(d_hosts, d_run, outstanding, t)
             t0 = time.perf_counter()
             d_run.tick = t
             de._tick_admission(d_run)
-            de._tick_decode(d_run)
+            decoded = de._tick_decode(d_run)
+            self._slo_tick(de, d_hosts, decoded)
             de._cache_tick(1)
             _sync_run(d_run)  # same barrier: own compute on the own clock
             de.clock += time.perf_counter() - t0
+
+            # 5. reliable-delivery retries, both time bases; exhaustion is
+            # the fallback liveness signal
+            self._outbox.tick(
+                t, False, self.transport.send,
+                lambda dst: self._declare_down(dst, "retry exhaustion"))
+            if self.remote_prefill:
+                self._outbox.tick(
+                    time.monotonic(), True, self.transport.send,
+                    lambda dst: self._declare_down(dst, "retry exhaustion"))
+            self._gc_handoff_keep()
+
             if (self.remote_prefill and not queue and not de._ready
                     and not d_run.any_live() and not d_run.any_pending()
-                    and not any(h.queue for h in d_hosts)):
+                    and not any(h.queue for h in d_hosts)
+                    and not self._limbo):
                 # everything outstanding is on a remote worker: poll the
                 # socket politely instead of burning ticks (tick-denominated
                 # stats would be nonsense otherwise)
@@ -351,80 +572,402 @@ class DisaggController:
         if pe is not None:
             self.handoff_bytes.update(pe.handoff_bytes)
         out = de._serve_finish(d_run, return_stats)
+        pres = {}
+        if pe is not None and p_run.results:
+            pout = pe._serve_finish(p_run, return_stats)
+            pres = pout[0] if return_stats else pout
         if not return_stats:
-            return out
+            out.update(pres)   # degraded-mode completions override any
+            return out         # partial stream from a dead decode host
         results, dstats = out
-        return results, self._merge_stats(dstats, p_hosts)
+        results.update(pres)
+        return results, self._merge_stats(dstats, p_hosts, pres)
+
+    @staticmethod
+    def _slo_tick(engine, hosts, decoded: bool):
+        """Run the SLO degrade ladder for one fleet (mirrors the
+        single-host ``_serve_tick`` block): under failover the surviving
+        fleet absorbs the dead fleet's load, and the ladder sheds node
+        budget instead of blowing latency SLOs."""
+        if not engine.slo_degrade:
+            return
+        gap_ms = None
+        if decoded:
+            now_slo = engine._now()
+            if engine._slo_last_wall is not None:
+                gap_ms = (now_slo - engine._slo_last_wall) * 1e3
+            engine._slo_last_wall = now_slo
+        engine._slo_update(hosts, gap_ms)
+
+    # ------------------------------------------------------- failure handling
+    def _work_outstanding(self) -> bool:
+        """In-flight work only — future arrivals and pure heartbeat/ack
+        traffic do NOT count, or the liveness machinery would keep itself
+        alive forever probing an idle fleet."""
+        ctx = self._serve_ctx
+        d_run, p_run = ctx["d_run"], ctx["p_run"]
+        if d_run.any_queued() or d_run.any_pending() or d_run.any_live():
+            return True
+        if p_run is not None and (p_run.any_queued() or p_run.any_pending()
+                                  or p_run.any_live()):
+            return True
+        if self.decode._ready or (self.prefill is not None
+                                  and self.prefill._ready):
+            return True
+        if self._limbo or len(self._outbox):
+            return True
+        return any(n > 0 for n in ctx["outstanding"].values())
+
+    def _all_idle(self) -> bool:
+        return (not self._work_outstanding()
+                and self.transport.pending() == 0)
+
+    def _observe_kills(self):
+        """Sim-killed endpoints stop working IMMEDIATELY (their local
+        state is gone with the process) — evacuate it to limbo. Recovery
+        waits for official detection; routing keeps treating the host as
+        alive until then."""
+        dead = getattr(self.transport, "dead", None)
+        if not dead:
+            return
+        ctx = self._serve_ctx
+        for ep in sorted(dead):
+            if ep in self._killed_seen:
+                continue
+            self._killed_seen.add(ep)
+            lost = []
+            if ep.startswith("prefill/") and self.prefill is not None:
+                h = int(ep.split("/")[1])
+                lost = self.prefill._evacuate_host(ctx["p_run"], h)
+                if self.prefill.caches[h] is not None:
+                    # host memory died with the process; gossiped replicas
+                    # on the surviving hosts are the warm-recovery path
+                    self.prefill.caches[h].clear()
+            elif ep.startswith("decode/"):
+                j = int(ep.split("/")[1])
+                lost = self.decode._evacuate_host(ctx["d_run"], j)
+                for _kind, _arrival, req, _prog in lost:
+                    # the shipped state lived in that process; recovery
+                    # re-unpacks the controller-retained wire blob
+                    self.decode._ready.pop(req.id, None)
+            if lost:
+                self._limbo[ep] = lost
+
+    def _heartbeat_tick(self, t: int):
+        """Probe every not-yet-down endpoint while work is in flight;
+        declare peers whose acks go stale past the deadline."""
+        fs = self.fault_stats_counters
+        if not self._work_outstanding():
+            self._hb_active = False
+            return
+        eps = []
+        if self.prefill is not None:
+            eps += [f"prefill/{h}" for h in self._alive_prefill()]
+        eps += [f"decode/{j}" for j in self._alive_decode()]
+        if not self._hb_active:
+            # idle -> busy transition: restart every liveness window
+            self._hb_active = True
+            for ep in eps:
+                self._last_hb[ep] = t
+        if t - self._hb_last_tick >= self.heartbeat_every:
+            self._hb_last_tick = t
+            for ep in eps:
+                self.transport.send(Message(
+                    "heartbeat", "controller", ep, {"t": t}))
+                fs["heartbeats_sent"] += 1
+        for ep in list(eps):
+            if t - self._last_hb.get(ep, t) > self.heartbeat_deadline:
+                self._declare_down(ep, "heartbeat deadline")
+        if self.remote_prefill:
+            now = time.monotonic()
+            alive = [n for n in self.remote_prefill if n not in self._down]
+            if now - self._hb_wall_sent >= self.heartbeat_wall_every_s:
+                self._hb_wall_sent = now
+                for name in alive:
+                    self.transport.send(Message(
+                        "heartbeat", "controller", name, {"t": t}))
+                    fs["heartbeats_sent"] += 1
+            for name in alive:
+                last = self._hb_wall.setdefault(name, now)
+                if now - last > self.heartbeat_deadline_s:
+                    self._declare_down(name, "heartbeat deadline")
+
+    def _declare_down(self, ep: str, reason: str):
+        """Official failure detection: fence, reroute unacked messages,
+        requeue in-flight work. Idempotent per endpoint. Safe on false
+        positives — fencing kills the suspected peer at the transport, so
+        the declaration MAKES itself true (no split-brain), and requeued
+        work re-derives identical tokens either way."""
+        if self._serve_ctx is None or ep in self._down:
+            return
+        known = (ep in self._remote_inflight
+                 or any(ep == f"prefill/{h}" for h in range(self.n_prefill))
+                 or any(ep == f"decode/{j}" for j in range(self.n_decode)))
+        if not known:
+            return
+        fs = self.fault_stats_counters
+        self._down.add(ep)
+        fs["detected_failures"] += 1
+        self.fault_log.append({"endpoint": ep, "reason": reason,
+                               "tick": self._t})
+        if (hasattr(self.transport, "kill")
+                and ep not in getattr(self.transport, "dead", ())):
+            self.transport.kill(ep)
+        self._observe_kills()  # false positive: evacuate NOW (post-fence)
+        if ep.startswith("prefill/") and ep not in self._remote_inflight:
+            self._admit_inflight[int(ep.split("/")[1])] = 0
+        # losing the LAST decode host flips colocated mode BEFORE any
+        # recovery below, so requeued work routes to the prefill engine
+        if (ep.startswith("decode/") and not self._alive_decode()
+                and self.prefill is not None):
+            self._degraded = True
+            fs["degraded_colocated"] = True
+            self.prefill._handoff_fn = None
+        if ep.startswith("decode/") and not self._alive_decode() \
+                and self.prefill is None:
+            raise RuntimeError("decode fleet lost with remote-only "
+                               "prefill: no surviving engine")
+        for ent in self._outbox.drop_for(ep):
+            self._reroute(ent.msg)
+        for kind, arrival, req, prog in self._limbo.pop(ep, []):
+            fs["recovered_requests"] += 1
+            if ep.startswith("decode/"):
+                emitted = (len(self._serve_ctx["d_run"].results.get(
+                    req.id, [])) if kind == "live" else 0)
+                fs["requeued_tokens"] += emitted + prog
+                self._requeue_decode(arrival, req)
+            else:
+                fs["requeued_tokens"] += prog
+                self._route_admit(arrival, req)
+        inflight = self._remote_inflight.get(ep)
+        if inflight:
+            self._remote_inflight[ep] = {}
+            self._serve_ctx["outstanding"][ep] = 0
+            for rid, (arrival, req) in inflight.items():
+                if rid in self._spliced:
+                    continue  # its handoff landed before the worker died
+                fs["recovered_requests"] += 1
+                self._route_admit(arrival, req)
+
+    def _requeue_decode(self, arrival, req):
+        """Recover a request lost with a decode host: re-splice from the
+        retained handoff blob when one exists (warm — zero prefill work),
+        else full re-prefill. Identical tokens either way."""
+        rid = req.id
+        de = self.decode
+        ctx = self._serve_ctx
+        alive_d = self._alive_decode()
+        kept = self._handoff_keep.get(rid)
+        if alive_d and (rid in de._ready or kept is not None):
+            if rid not in de._ready:
+                state, _digest, _meta = unpack_state(kept[0])
+                de._ready[rid] = (state, kept[1])
+            j = self._pick_decode(ctx["d_hosts"])
+            ctx["d_hosts"][j].queue.append((arrival, req))
+            return
+        if not alive_d and self.prefill is not None and kept is not None:
+            # degraded colocated: splice on the prefill engine — the blob
+            # spares even the re-prefill
+            state, _digest, _meta = unpack_state(kept[0])
+            self.prefill._ready[rid] = (state, kept[1])
+            self._route_admit(arrival, req)
+            return
+        # no retained state (stolen / direct-admit): full re-prefill; the
+        # rid must splice again when the fresh handoff arrives
+        self._spliced.discard(rid)
+        self._handoff_keep.pop(rid, None)
+        self._route_admit(arrival, req)
+
+    def _reroute(self, msg: Message):
+        """An unacked message's peer died: re-issue the work elsewhere."""
+        fs = self.fault_stats_counters
+        fs["rerouted_msgs"] += 1
+        p = msg.payload
+        if msg.kind in ("admit", "steal_reply"):
+            self._route_admit(p["arrival"], p["req"])
+        elif msg.kind == "handoff":
+            req = p["req"]
+            if req.id in self._spliced:
+                return  # it DID land; only the ack was lost
+            alive_d = self._alive_decode()
+            if alive_d:
+                self._send_reliable(Message(
+                    "handoff", "controller",
+                    f"decode/{self._pick_decode(self._serve_ctx['d_hosts'])}",
+                    {"req": req, "blob": p["blob"], "logits": p["logits"],
+                     "prefill_host": p.get("prefill_host")}))
+            elif self.prefill is not None:
+                state, _digest, _meta = unpack_state(p["blob"])
+                self.prefill._ready[req.id] = (state, p["logits"])
+                self._route_admit(self._t, req)
+            else:
+                raise RuntimeError("handoff unroutable: no surviving hosts")
+
+    def _gc_handoff_keep(self):
+        """Drop retained handoff blobs once their request has finished
+        everywhere (at-least-once retention ends at completion)."""
+        if not self._handoff_keep:
+            return
+        ctx = self._serve_ctx
+        busy = set(self.decode._ready)
+        if self.prefill is not None:
+            busy |= set(self.prefill._ready)
+        runs = [ctx["d_run"]] + ([ctx["p_run"]]
+                                 if ctx["p_run"] is not None else [])
+        for run in runs:
+            for host in run.hosts:
+                busy |= {req.id for _a, req in host.queue}
+                busy |= {req.id for req in host.sched.req if req is not None}
+        # limbo'd work has partial results but is NOT done — its retained
+        # blob is exactly what recovery will re-splice from
+        for entries in self._limbo.values():
+            busy |= {req.id for _k, _a, req, _p in entries}
+        for inflight in self._remote_inflight.values():
+            busy |= set(inflight)
+        done = ctx["d_run"].results
+        pdone = ctx["p_run"].results if ctx["p_run"] is not None else {}
+        for rid in list(self._handoff_keep):
+            if rid not in busy and (rid in done or rid in pdone):
+                del self._handoff_keep[rid]
 
     # ------------------------------------------------------------ serve parts
     def _make_handoff_fn(self, d_hosts):
         def handoff(h, req, ent, blob, logits):
-            j = min(range(self.n_decode),
-                    key=lambda i: (len(d_hosts[i].queue)
-                                   + int(d_hosts[i].sched.live.sum())
-                                   + int(d_hosts[i].sched.pending.sum()), i))
-            self.transport.send(Message(
+            j = self._pick_decode(d_hosts)
+            self._send_reliable(Message(
                 "handoff", f"prefill/{h}", f"decode/{j}",
                 {"req": req, "blob": blob, "logits": logits,
                  "prefill_host": h}))
         return handoff
 
-    def _drain_prefill_inboxes(self, p_hosts):
+    def _drain_prefill_inboxes(self, p_hosts, t):
         pe = self.prefill
+        fs = self.fault_stats_counters
         for h in range(self.n_prefill):
-            for msg in self.transport.recv(f"prefill/{h}"):
+            ep = f"prefill/{h}"
+            for msg in self.transport.recv(ep):
                 if msg.kind == "admit":
+                    if not self._reliable_fresh(msg, ep):
+                        continue
                     p_hosts[h].queue.append(
                         (msg.payload["arrival"], msg.payload["req"]))
                     self._admit_inflight[h] = max(
                         0, self._admit_inflight[h] - 1)
                 elif msg.kind == "gossip":
-                    if pe.caches[h] is not None:
+                    if pe.caches[h] is None:
+                        continue
+                    try:  # gossip is best-effort: a corrupt replica is
+                        # dropped, never spliced and never retried
                         state, digest, _meta = unpack_state(
                             msg.payload["blob"])
-                        pe.caches[h].insert(
-                            msg.payload["tokens"], state,
-                            msg.payload["logits"], pinned=True,
-                            digest=digest)
+                    except ValueError:
+                        fs["corrupt_blobs_rejected"] += 1
+                        continue
+                    pe.caches[h].insert(
+                        msg.payload["tokens"], state,
+                        msg.payload["logits"], pinned=True,
+                        digest=digest)
                 elif msg.kind == "steal":
                     # reply with the youngest queued request (tail steal:
                     # FIFO order of everything already queued is preserved)
                     if p_hosts[h].queue:
                         arrival, req = p_hosts[h].queue.pop()
-                        self.transport.send(Message(
-                            "steal_reply", f"prefill/{h}", msg.src,
+                        self._send_reliable(Message(
+                            "steal_reply", ep, msg.src,
                             {"req": req, "arrival": arrival}))
+                elif msg.kind == "heartbeat":
+                    self.transport.send(Message(
+                        "ack", ep, "controller", {"hb": msg.payload["t"]}))
+                elif msg.kind == "ack":
+                    self._handle_ack(msg)
+                elif msg.kind == "nack":
+                    self._outbox.nack(msg.payload["msg_id"])
 
-    def _drain_decode_inboxes(self, d_hosts, d_run, outstanding):
+    def _drain_decode_inboxes(self, d_hosts, d_run, outstanding, t):
         # remote workers address the controller; forward to a decode host
         for msg in self.transport.recv("controller"):
             if msg.kind == "handoff":
                 src = msg.src
-                if src in outstanding:
-                    outstanding[src] -= 1
-                if "pstats" in msg.payload:
-                    self._pstats_remote[msg.payload["req"].id] = \
-                        msg.payload["pstats"]
-                j = min(range(self.n_decode),
-                        key=lambda i: (len(d_hosts[i].queue)
-                                       + int(d_hosts[i].sched.live.sum())
-                                       + int(d_hosts[i].sched.pending.sum()),
-                                       i))
-                self._accept_handoff(msg, d_hosts[j], d_run)
+                rid = msg.payload["req"].id
+                status = self._accept_handoff(
+                    msg, d_hosts[self._pick_decode(d_hosts)]
+                    if self._alive_decode() else None,
+                    d_run, receiver="controller")
+                if status == "corrupt":
+                    continue  # worker will re-send on the nack
+                if src in self._remote_inflight:
+                    if self._remote_inflight[src].pop(rid, None) is not None:
+                        outstanding[src] -= 1
+                if status == "spliced" and "pstats" in msg.payload:
+                    self._pstats_remote[rid] = msg.payload["pstats"]
+            elif msg.kind == "ack":
+                self._handle_ack(msg)
+            elif msg.kind == "nack":
+                self._outbox.nack(msg.payload["msg_id"])
         for j in range(self.n_decode):
-            for msg in self.transport.recv(f"decode/{j}"):
+            ep = f"decode/{j}"
+            for msg in self.transport.recv(ep):
                 if msg.kind == "handoff":
-                    self._accept_handoff(msg, d_hosts[j], d_run)
-                elif msg.kind == "steal_reply":
-                    d_hosts[j].queue.append(
-                        (msg.payload["arrival"], msg.payload["req"]))
+                    self._accept_handoff(msg, d_hosts[j], d_run, receiver=ep)
+                elif msg.kind in ("steal_reply", "admit"):
+                    if self._reliable_fresh(msg, ep):
+                        d_hosts[j].queue.append(
+                            (msg.payload["arrival"], msg.payload["req"]))
+                elif msg.kind == "heartbeat":
+                    self.transport.send(Message(
+                        "ack", ep, "controller", {"hb": msg.payload["t"]}))
+                elif msg.kind == "ack":
+                    self._handle_ack(msg)
+                elif msg.kind == "nack":
+                    self._outbox.nack(msg.payload["msg_id"])
 
-    def _accept_handoff(self, msg, d_host, d_run):
+    def _accept_handoff(self, msg, d_host, d_run, receiver: str) -> str:
+        """Idempotent splice of a shipped state. Returns "spliced",
+        "dup", or "corrupt". Corrupt blobs are NACKed (reject-and-requeue
+        — the sender re-sends, with a fresh fault decision); duplicates
+        are re-acked but never re-spliced."""
         de = self.decode
+        fs = self.fault_stats_counters
         req = msg.payload["req"]
-        state, digest, _meta = unpack_state(msg.payload["blob"])
-        de._ready[req.id] = (state, msg.payload["logits"])
-        self.handoff_bytes[req.id] = len(msg.payload["blob"])
+        rid = req.id
+        mid = msg.payload.get("msg_id")
+        ack_to = msg.payload.get("ack_to", msg.src)
+        if mid is not None and (msg.src, mid) in self._seen:
+            fs["dup_msgs_ignored"] += 1
+            self.transport.send(Message(
+                "ack", receiver, ack_to, {"msg_id": mid}))
+            return "dup"
+        if d_host is None:
+            # no surviving decode host to splice into: reject so the
+            # sender's retry (or the recovery path) re-issues the work
+            if mid is not None:
+                self.transport.send(Message(
+                    "nack", receiver, ack_to, {"msg_id": mid}))
+            return "corrupt"
+        try:
+            state, digest, _meta = unpack_state(msg.payload["blob"])
+        except ValueError:
+            fs["corrupt_blobs_rejected"] += 1
+            if mid is not None:
+                self.transport.send(Message(
+                    "nack", receiver, ack_to, {"msg_id": mid}))
+            return "corrupt"
+        if mid is not None:
+            self._seen.add((msg.src, mid))
+            self.transport.send(Message(
+                "ack", receiver, ack_to, {"msg_id": mid}))
+        if rid in self._spliced:
+            # a re-sent handoff whose first copy landed (lost ack), or a
+            # reroute raced by the original: NEVER splice twice
+            fs["double_splices_prevented"] += 1
+            return "dup"
+        self._spliced.add(rid)
+        # retain the blob until the request completes: the recovery
+        # source if the decode host holding the live row dies
+        self._handoff_keep[rid] = (msg.payload["blob"],
+                                   msg.payload["logits"])
+        de._ready[rid] = (state, msg.payload["logits"])
+        self.handoff_bytes[rid] = len(msg.payload["blob"])
         if de.prefix_cache is not None:
             # shipped full-prompt states slot straight into the decode
             # fleet's prefix cache by wire digest — dedup against any
@@ -433,29 +976,33 @@ class DisaggController:
             de.prefix_cache.insert(prompt, state, msg.payload["logits"],
                                    digest=digest)
         d_host.queue.append((d_run.tick, req))
+        return "spliced"
 
-    def _maybe_steal(self, p_hosts, d_hosts, d_run):
-        free_prefill = sum(len(h.sched.free_slots()) for h in p_hosts)
-        backlog = sum(len(h.queue) for h in p_hosts) - max(0, free_prefill)
+    def _maybe_steal(self, p_hosts, d_hosts, d_run, t):
+        alive_p = self._alive_prefill()
+        free_prefill = sum(len(p_hosts[h].sched.free_slots())
+                           for h in alive_p)
+        backlog = sum(len(p_hosts[h].queue)
+                      for h in alive_p) - max(0, free_prefill)
         if backlog < self.steal_threshold:
             return
-        for j, d_host in enumerate(d_hosts):
+        for j in self._alive_decode():
+            d_host = d_hosts[j]
             if (d_host.queue or d_host.sched.live.any()
                     or d_host.sched.pending.any()):
                 continue
-            deepest = max(range(self.n_prefill),
-                          key=lambda i: len(p_hosts[i].queue))
+            deepest = max(alive_p, key=lambda i: len(p_hosts[i].queue))
             if not p_hosts[deepest].queue:
                 return
             self.transport.send(Message(
                 "steal", f"decode/{j}", f"prefill/{deepest}", {}))
-            self._drain_prefill_inboxes(p_hosts)  # serve the steal now
+            self._drain_prefill_inboxes(p_hosts, t)  # serve the steal now
             self.steal_count += 1
             backlog -= 1
             if backlog < self.steal_threshold:
                 return
 
-    def _merge_stats(self, dstats, p_hosts):
+    def _merge_stats(self, dstats, p_hosts, pres):
         pstats = dict(self._pstats_remote)
         for host in p_hosts:
             pstats.update(host.sched.stats)
@@ -477,14 +1024,40 @@ class DisaggController:
             else:
                 st["stolen"] = True  # prefilled on the decode host itself
             merged[rid] = st
+        # degraded colocated completions: the request finished ON the
+        # prefill engine (decode fleet lost mid-serve)
+        for rid, ps in pstats.items():
+            if rid in merged or rid not in pres:
+                continue
+            st = dict(ps)
+            st["decode_host"] = None
+            st["prefill_host"] = st.pop("host", None)
+            st["handoff_bytes"] = None
+            st["stolen"] = False
+            st["degraded"] = True
+            merged[rid] = st
         return merged
 
     # ----------------------------------------------------------------- report
+    def fault_stats(self) -> dict:
+        """Failure-layer accounting: every injected fault shows up in
+        ``injected`` (transport truth) and every consequence —
+        detections, retries, requeues, rejected blobs — in the
+        controller-side counters."""
+        fs = dict(self.fault_stats_counters)
+        fs["failures"] = list(self.fault_log)
+        fs["retries"] = self._outbox.retries
+        fs["max_backoff"] = self._outbox.max_backoff
+        fs["outbox_unacked"] = len(self._outbox)
+        fs["injected"] = dict(self.transport.stats().get("faults", {}))
+        return fs
+
     def report(self) -> dict:
         hb = list(self.handoff_bytes.values())
         return {
             "n_prefill": self.n_prefill, "n_decode": self.n_decode,
             "wire_store": self.wire_store,
+            "wire_compress": self.wire_compress,
             "handoff_requests": len(hb),
             "handoff_bytes_min": min(hb) if hb else 0,
             "handoff_bytes_max": max(hb) if hb else 0,
@@ -492,6 +1065,7 @@ class DisaggController:
             "gossip_sent": self.gossip_sent,
             "gossip_hit_rate": self.gossip_hit_rate(),
             "transport": self.transport.stats(),
+            "fault_stats": self.fault_stats(),
             "prefill_clock_s": None if self.prefill is None
             else self.prefill.clock,
             "decode_clock_s": self.decode.clock,

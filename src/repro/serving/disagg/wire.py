@@ -19,15 +19,35 @@ Digest: computed over the DEQUANTIZED logical leaves in flatten order with
 the same hash as :func:`repro.serving.prefix_cache.state_digest` (which
 hashes leaf contents, not tree structure), so a receiver can insert the
 unpacked state into a prefix cache by digest without rehashing, and pack ->
-unpack -> pack is digest-stable at both storage dtypes.
+unpack -> pack is digest-stable at both storage dtypes. ``unpack_state``
+VERIFIES the digest against the unpacked payload by default — a
+corrupted blob that still parses (bit flips in transit) is rejected with
+``ValueError`` instead of silently splicing garbage into a decode pool,
+and the same digest doubles as the idempotence key for handoff
+re-delivery (dedupe on digest, never double-splice).
+
+Compression: ``compress="zstd"`` deflates the concatenated leaf payload
+(header/meta stay plain so a receiver can reject bad magic/version
+before touching the body). zstd is preferred when the ``zstandard``
+module is importable and gracefully falls back to stdlib ``zlib``
+otherwise — the header records which codec actually ran, so blobs are
+portable across environments with and without zstd. A compression flag
+bit in the fixed header keeps uncompressed blobs byte-identical to the
+pre-compression format.
 """
 from __future__ import annotations
 
 import json
 import struct
+import zlib
 
 import jax
 import numpy as np
+
+try:  # optional: the container may not ship zstd — zlib is the fallback
+    import zstandard as _zstd
+except ImportError:  # pragma: no cover - environment-dependent
+    _zstd = None
 
 try:  # ml_dtypes ships with jax — the import is belt and braces only
     import ml_dtypes
@@ -41,6 +61,43 @@ from repro.serving.prefix_cache import state_digest
 MAGIC = b"STLTWIRE"
 VERSION = 1
 _STORES = ("f32", "bf16")
+_COMPRESS = (None, "zstd")
+_FLAG_COMPRESSED = 1
+
+
+def wire_codec(compress: str | None) -> str | None:
+    """The codec that will actually run for a ``compress=`` request:
+    ``"zstd"`` when the zstandard module is available, else the stdlib
+    ``"zlib"`` fallback (graceful degradation, recorded in the header)."""
+    if compress is None:
+        return None
+    if compress not in _COMPRESS:
+        raise ValueError(f"compress must be one of {_COMPRESS} "
+                         f"(got {compress!r})")
+    return "zstd" if _zstd is not None else "zlib"
+
+
+def _compress_bytes(codec: str, raw: bytes) -> bytes:
+    if codec == "zstd":
+        return _zstd.ZstdCompressor(level=3).compress(raw)
+    return zlib.compress(raw, 6)
+
+
+def _decompress_bytes(codec: str, raw: bytes, n: int) -> bytes:
+    try:
+        if codec == "zstd":
+            if _zstd is None:
+                raise ValueError(
+                    "blob is zstd-compressed but no zstandard module is "
+                    "available in this environment")
+            return _zstd.ZstdDecompressor().decompress(raw, max_output_size=n)
+        if codec == "zlib":
+            return zlib.decompress(raw)
+        raise ValueError(f"unknown wire codec {codec!r}")
+    except (zlib.error, Exception) as e:
+        if isinstance(e, ValueError):
+            raise
+        raise ValueError(f"corrupt compressed wire payload: {e}") from e
 
 
 def _np_dtype(name: str) -> np.dtype:
@@ -80,16 +137,22 @@ def _encode_path(path) -> list:
     return steps
 
 
-def pack_state(state, *, store: str = "f32", meta: dict | None = None) -> bytes:
+def pack_state(state, *, store: str = "f32", meta: dict | None = None,
+               compress: str | None = None) -> bytes:
     """Serialize a decode-state pytree (nested dicts/lists of arrays).
 
     ``store="bf16"`` narrows float32 leaves to bfloat16 on the wire;
     integer and non-f32 leaves are always stored verbatim. ``meta`` is an
     arbitrary JSON-serializable dict carried in the header (request id,
-    source host, ...).
+    source host, ...). ``compress="zstd"`` deflates the leaf payload
+    (zlib fallback when zstd is unavailable; the header's ``codec``
+    records the truth) — compressed blob size is no longer flat in
+    prompt length bit-for-bit (entropy varies), but the digest still is:
+    it hashes the logical leaves, not the wire bytes.
     """
     if store not in _STORES:
         raise ValueError(f"store must be one of {_STORES} (got {store!r})")
+    codec = wire_codec(compress)
     leaves_p, _ = jax.tree_util.tree_flatten_with_path(state)
     table = []
     chunks = []
@@ -114,9 +177,19 @@ def pack_state(state, *, store: str = "f32", meta: dict | None = None) -> bytes:
         chunks.append(raw)
         offset += len(raw)
     digest = state_digest(logical)
-    header = json.dumps({"version": VERSION, "store": store,
-                         "digest": digest.hex(),
-                         "leaves": table}).encode()
+    flags = 0
+    payload = b"".join(chunks)
+    hdr = {"version": VERSION, "store": store, "digest": digest.hex(),
+           "leaves": table}
+    if codec is not None:
+        # compress the ONE concatenated payload (cross-leaf redundancy
+        # helps); header/meta stay plain so magic/version/digest checks
+        # run before any decompression
+        flags |= _FLAG_COMPRESSED
+        hdr["codec"] = codec
+        hdr["raw_nbytes"] = len(payload)
+        payload = _compress_bytes(codec, payload)
+    header = json.dumps(hdr).encode()
     header += b" " * (-len(header) % 64)
     # meta travels in its own segment, padded to a 256-byte multiple (JSON
     # ignores trailing spaces): blob size is then INDEPENDENT of meta
@@ -125,9 +198,9 @@ def pack_state(state, *, store: str = "f32", meta: dict | None = None) -> bytes:
     meta_seg = json.dumps(meta or {}).encode()
     meta_seg += b" " * (-len(meta_seg) % 256)
     return b"".join([MAGIC,
-                     struct.pack("<HHII", VERSION, 0, len(header),
+                     struct.pack("<HHII", VERSION, flags, len(header),
                                  len(meta_seg)),
-                     header, meta_seg] + chunks)
+                     header, meta_seg, payload])
 
 
 def _rebuild(entries):
@@ -154,25 +227,46 @@ def _rebuild(entries):
     raise ValueError("mixed dict/list keys at one tree level")  # pragma: no cover
 
 
-def unpack_state(blob: bytes):
+def unpack_state(blob: bytes, verify: bool = True):
     """Inverse of :func:`pack_state`.
 
     Returns ``(state, digest, meta)`` — ``state`` is the logical-dtype
     pytree (bf16-stored float32 leaves come back as float32), ``digest``
     the ``state_digest``-compatible bytes from the header (suitable for
     ``PrefixCache.insert(digest=...)``), ``meta`` the sender's dict.
+
+    ``verify=True`` (default) recomputes the digest over the unpacked
+    logical leaves and raises ``ValueError`` on mismatch — in-flight bit
+    flips can parse cleanly yet carry a garbage state; a receiver must
+    reject-and-requeue (NACK) rather than splice it. Every failure mode
+    here (magic, version, truncation, decompression, digest) raises
+    ``ValueError`` so callers have ONE exception type to map to a NACK.
     """
     if blob[:len(MAGIC)] != MAGIC:
         raise ValueError("not a STLT wire blob (bad magic)")
     fixed = len(MAGIC) + struct.calcsize("<HHII")
-    version, _flags, hlen, mlen = struct.unpack("<HHII",
-                                                blob[len(MAGIC):fixed])
+    if len(blob) < fixed:
+        raise ValueError("truncated wire blob")
+    version, flags, hlen, mlen = struct.unpack("<HHII",
+                                               blob[len(MAGIC):fixed])
     if version != VERSION:
         raise ValueError(f"unsupported wire version {version} "
                          f"(this build reads {VERSION})")
-    header = json.loads(blob[fixed:fixed + hlen])
-    meta = json.loads(blob[fixed + hlen:fixed + hlen + mlen]) if mlen else {}
+    if len(blob) < fixed + hlen + mlen:
+        raise ValueError("truncated wire blob")
+    try:
+        header = json.loads(blob[fixed:fixed + hlen])
+        meta = (json.loads(blob[fixed + hlen:fixed + hlen + mlen])
+                if mlen else {})
+    except json.JSONDecodeError as e:
+        raise ValueError(f"corrupt wire header/meta: {e}") from e
     payload = blob[fixed + hlen + mlen:]
+    if flags & _FLAG_COMPRESSED:
+        payload = _decompress_bytes(header.get("codec", "zlib"), payload,
+                                    int(header["raw_nbytes"]))
+        if len(payload) != int(header["raw_nbytes"]):
+            raise ValueError("truncated wire blob (decompressed size "
+                             "mismatch)")
     entries = []
     for ent in header["leaves"]:
         lo, n = ent["offset"], ent["nbytes"]
@@ -187,4 +281,7 @@ def unpack_state(blob: bytes):
             arr = arr.astype(logical)
         entries.append(([tuple(s) for s in ent["path"]], arr))
     state = _rebuild(entries)
-    return state, bytes.fromhex(header["digest"]), meta
+    digest = bytes.fromhex(header["digest"])
+    if verify and state_digest([leaf for _, leaf in entries]) != digest:
+        raise ValueError("wire digest mismatch (corrupt payload)")
+    return state, digest, meta

@@ -9,6 +9,17 @@ admission/prefill phase of the unified tick body, and every finished
 prefill ships back to the controller as a ``handoff`` wire blob (O(S*d),
 flat in prompt length). ``bye`` shuts the worker down.
 
+Fault tolerance (DESIGN.md §Serving failure model): admits are
+deduplicated by ``(src, msg_id)`` and ALWAYS acked (the controller
+retries unacked admits — at-least-once delivery, exactly-once
+admission); handoffs ride the worker's own wall-clock retry
+:class:`~repro.serving.disagg.failover.Outbox` until the controller
+acks, and a ``nack`` (corrupt blob on arrival) triggers an immediate
+re-send. Heartbeats are answered with an ``ack`` carrying the probe
+stamp. Losing the controller connection (EOF / socket error, surfaced
+by ``SocketTransport.events``) exits the worker cleanly — its in-flight
+work is the controller's to requeue, not ours to finish into a void.
+
 Work stealing does not cross process boundaries (the controller cannot
 see a remote queue) — remote workers only prefill.
 """
@@ -24,6 +35,7 @@ from repro.configs.base import ModelConfig
 from repro.models.transformer import init_lm
 from repro.serving.engine import _Host
 from repro.serving.disagg.controller import PrefillEngine
+from repro.serving.disagg.failover import Outbox
 from repro.serving.disagg.transport import Message, SocketTransport
 
 
@@ -50,6 +62,7 @@ def run_worker(name: str, connect: tuple, poll_s: float = 0.01,
     params = init_lm(jax.random.key(p["seed"]), model_cfg)
     engine = PrefillEngine(
         params, model_cfg, n_hosts=1, wire_store=p.get("wire_store", "f32"),
+        wire_compress=p.get("wire_compress"),
         max_len=p.get("max_len", 4096),
         prefill_chunk=p.get("prefill_chunk", 64))
     hosts = [_Host(p.get("slots", 2))]
@@ -57,12 +70,22 @@ def run_worker(name: str, connect: tuple, poll_s: float = 0.01,
                               p.get("seed", 0), engine.prefill_chunk, True)
     run.fast_forward = False
 
+    outbox = Outbox(retry_ticks=p.get("retry_s", 0.5),
+                    max_attempts=p.get("retry_max_attempts", 8))
+    seen: set[tuple] = set()
+    seq = {"n": 0}
+
     def handoff(h, req, ent, blob, logits):
         pstats = dict(hosts[0].sched.stats[req.id])
         pstats.pop("token_walls", None)
-        tr.send(Message("handoff", name, "controller",
-                        {"req": req, "blob": blob,
-                         "logits": np.asarray(logits), "pstats": pstats}))
+        mid = seq["n"]
+        seq["n"] += 1
+        msg = Message("handoff", name, "controller",
+                      {"req": req, "blob": blob,
+                       "logits": np.asarray(logits), "pstats": pstats,
+                       "msg_id": mid, "ack_to": name})
+        outbox.add(mid, msg, time.monotonic(), wall=True)
+        tr.send(msg)
 
     engine._handoff_fn = handoff
     deadline = time.monotonic() + max_idle_s
@@ -70,17 +93,45 @@ def run_worker(name: str, connect: tuple, poll_s: float = 0.01,
         busy = bool(hosts[0].queue) or run.any_pending()
         for msg in tr.recv(name, timeout=0.0 if busy else poll_s):
             if msg.kind == "admit":
+                mid = msg.payload.get("msg_id")
+                if mid is not None:
+                    tr.send(Message(
+                        "ack", name, msg.payload.get("ack_to", msg.src),
+                        {"msg_id": mid}))
+                    if (msg.src, mid) in seen:
+                        continue  # controller retry of a landed admit
+                    seen.add((msg.src, mid))
                 hosts[0].queue.append(
                     (msg.payload.get("arrival", run.tick),
                      msg.payload["req"]))
+            elif msg.kind == "heartbeat":
+                tr.send(Message("ack", name, "controller",
+                                {"hb": msg.payload.get("t")}))
+            elif msg.kind == "ack":
+                if "msg_id" in msg.payload:
+                    outbox.ack(msg.payload["msg_id"])
+            elif msg.kind == "nack":
+                outbox.nack(msg.payload["msg_id"])
             elif msg.kind == "bye":
                 tr.close()
                 return
+        # controller loss is surfaced, never silent: exit cleanly — the
+        # controller (or its successor) owns requeueing our in-flight work
+        for ev in tr.events():
+            if "controller" in ev.get("peers", ()):
+                tr.close()
+                return
+        # on exhaustion, stop retrying into a void (the idle timeout then
+        # takes the worker down if the controller never comes back)
+        outbox.tick(time.monotonic(), True, tr.send,
+                    lambda dst: outbox.drop_for(dst))
         if hosts[0].queue or run.any_pending():
             run.tick += 1
             engine._tick_admission(run)
             engine._cache_tick(1)
             deadline = time.monotonic() + max_idle_s
+        elif len(outbox):
+            deadline = time.monotonic() + max_idle_s  # unacked handoffs
         elif time.monotonic() > deadline:
             tr.close()
             raise TimeoutError("idle past max_idle_s with no bye")

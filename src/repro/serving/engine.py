@@ -718,6 +718,45 @@ class ServeEngine:
         cache hit: zero local prefill work, promote within the tick."""
         return None
 
+    def _evacuate_host(self, run, h):
+        """Host ``h`` is lost (disagg failure model): forget every local
+        row and return what was in flight so the caller can requeue it —
+        ``(kind, arrival, req, progress)`` per request, kind one of
+        "queued" / "pending" (progress = prefilled tokens lost) / "live"
+        (the caller owns ``run.results`` and the emitted-token
+        accounting). Rows are cleared WITHOUT release() — the requests
+        did not finish, their stats slots are re-held on whatever host
+        recovers them — and pool rows are reset so a reused slot never
+        sees the dead host's state. Token-exactness of the requeued work
+        is the PR-6 carry/consume contract: streams depend only on
+        ``(rng_seed, request.id)`` and step count, never on the host."""
+        host = run.hosts[h]
+        sched = host.sched
+        lost = []
+        for arrival, req in host.queue:
+            lost.append(("queued", arrival, req, 0))
+        host.queue = []
+        for local, ent in list(host.pending.items()):
+            req = ent["req"]
+            st = sched.stats.get(req.id, {})
+            lost.append(("pending", st.get("arrival", run.tick), req,
+                         max(0, ent["done"] - st.get("cached_tokens", 0))))
+        host.pending = {}
+        for local in range(sched.n_slots):
+            req = sched.req[local]
+            if req is not None:
+                if sched.live[local]:
+                    st = sched.stats.get(req.id, {})
+                    lost.append(("live", st.get("arrival", run.tick), req, 0))
+                sched.stats.pop(req.id, None)
+            sched.req[local] = None
+            sched.live[local] = False
+            sched.pending[local] = False
+            sched.emitted[local] = 0
+            if run.pool is not None:
+                run.pool = self._ops_reset(run.pool, h * run.K + local)
+        return lost
+
     # ------------------------------------------------------- serve run pieces
     def _serve_start(self, hosts, requests, prompt_len, arrivals, rng_seed,
                      chunk_size, coalesce=True) -> "_ServeRun":

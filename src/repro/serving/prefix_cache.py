@@ -327,6 +327,19 @@ class PrefixCache:
         self.ttl_evictions += len(expired)
         return len(expired)
 
+    def clear(self) -> int:
+        """Drop EVERY entry (pinned included) and all resident state
+        bytes; cumulative counters survive. This is the host-loss model
+        for the disagg failure path: a dead host's cache memory is gone,
+        so its fleet slot must restart cold (gossiped replicas on other
+        hosts are what makes recovery warm). Returns entries dropped."""
+        n = len(self._entries)
+        self._entries.clear()
+        self._lengths.clear()
+        self._states.clear()
+        self._bytes = 0
+        return n
+
     def stats(self) -> dict:
         return {"entries": len(self._entries), "bytes": self._bytes,
                 "hits": self.hits, "misses": self.misses,

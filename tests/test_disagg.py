@@ -388,3 +388,77 @@ def test_socket_transport_two_process_smoke(tmp_path):
         if proc.poll() is None:
             proc.kill()
         tr.close()
+
+
+@pytest.mark.slow
+def test_socket_failover_sigkill_mid_trace():
+    """Real-process failure drill: two prefill worker subprocesses, one
+    SIGKILLed the moment it holds in-flight admits. The controller
+    detects the death (socket peer-down / wall heartbeat deadline),
+    requeues the victim's work onto the survivor, and the full trace
+    completes token-identical to an all-local fault-free run."""
+    import dataclasses
+    import os
+    import signal
+    import threading
+
+    cfg, params = _setup()
+    reqs, arrivals = _trace(cfg, n=8)
+    base = DisaggController(params, cfg, n_prefill=2, n_decode=2, slots=2,
+                            max_len=MAX_LEN, prefill_chunk=16).serve(
+        reqs, arrivals=arrivals, rng_seed=7)
+
+    tr = SocketTransport("controller", listen=("127.0.0.1", 0))
+    port = tr._server.getsockname()[1]
+    names = ["prefill/0", "prefill/1"]
+    procs = [subprocess.Popen(
+        [sys.executable, "-m", "repro.serving.disagg.worker",
+         "--connect", f"127.0.0.1:{port}", "--name", n,
+         "--max-idle-s", "120"],
+        stdout=subprocess.PIPE, stderr=subprocess.PIPE) for n in names]
+    try:
+        deadline = time.monotonic() + 90
+        hello = set()
+        while hello != set(names) and time.monotonic() < deadline:
+            hello |= {m.src for m in tr.recv("controller", timeout=0.2)
+                      if m.kind == "hello"}
+        assert hello == set(names), f"workers never connected: {hello}"
+        payload = {"cfg": dataclasses.asdict(cfg), "seed": 0,
+                   "max_len": MAX_LEN, "prefill_chunk": 16, "slots": 2,
+                   "prompt_len": None, "wire_store": "f32"}
+        for n in names:
+            tr.send(Message("config", "controller", n, payload))
+
+        ctl = DisaggController(params, cfg, n_prefill=1, n_decode=2,
+                               slots=2, max_len=MAX_LEN, prefill_chunk=16,
+                               transport=tr, remote_prefill=names,
+                               heartbeat_deadline_s=3.0)
+
+        def kill_when_loaded():
+            stop = time.monotonic() + 120
+            while time.monotonic() < stop:
+                if ctl._remote_inflight.get(names[1]):
+                    os.kill(procs[1].pid, signal.SIGKILL)
+                    return
+                time.sleep(0.02)
+
+        killer = threading.Thread(target=kill_when_loaded, daemon=True)
+        killer.start()
+        out = ctl.serve(reqs, arrivals=arrivals, rng_seed=7)
+        killer.join(timeout=5)
+        assert procs[1].poll() is not None, "victim was never killed"
+        _assert_same(base, out, reqs, "sigkill failover")
+        f = ctl.fault_stats()
+        assert f["detected_failures"] >= 1
+        assert any(e["endpoint"] == names[1] for e in f["failures"])
+        assert f["recovered_requests"] >= 1   # victim's admits re-routed
+        assert f["outbox_unacked"] == 0
+        tr.send(Message("bye", "controller", names[0], {}))
+        procs[0].wait(timeout=30)
+        assert procs[0].returncode == 0, \
+            procs[0].stderr.read().decode()[-2000:]
+    finally:
+        for p in procs:
+            if p.poll() is None:
+                p.kill()
+        tr.close()

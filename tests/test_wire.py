@@ -21,8 +21,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import transformer as T
+from repro.serving.disagg.failover import corrupt_blob
 from repro.serving.disagg.wire import (pack_state, unpack_state,
-                                       quantize_tree, dequantize_tree)
+                                       quantize_tree, dequantize_tree,
+                                       wire_codec)
 from repro.serving.prefix_cache import state_digest
 from conftest import small_cfg
 
@@ -166,6 +168,78 @@ def test_bad_blobs_rejected():
         unpack_state(blob[:len(blob) - 100])
     with pytest.raises(ValueError, match="store"):
         pack_state(state, store="f16")
+
+
+@pytest.mark.parametrize("kind", ["stlt", "stlt_adaptive", "attn"])
+@pytest.mark.parametrize("store", ["f32", "bf16"])
+def test_compress_roundtrip(kind, store):
+    """``compress="zstd"`` (or its zlib fallback) round-trips every leaf
+    exactly as the uncompressed blob would, and the header records which
+    codec actually ran."""
+    _, state = _prefilled_state(kind)
+    plain = pack_state(state, store=store)
+    packed = pack_state(state, store=store, compress="zstd")
+    out_p, dig_p, _ = unpack_state(plain)
+    out_c, dig_c, _ = unpack_state(packed)
+    assert dig_c == dig_p  # digest hashes logical leaves, not wire bytes
+    want = _leaves_with_paths(out_p)
+    got = _leaves_with_paths(out_c)
+    assert set(want) == set(got)
+    for path, arr in want.items():
+        np.testing.assert_array_equal(got[path], arr, err_msg=path)
+    import json
+    import struct
+    fixed = 8 + struct.calcsize("<HHII")
+    _, flags, hlen, _ = struct.unpack("<HHII", packed[8:fixed])
+    hdr = json.loads(packed[fixed:fixed + hlen])
+    assert flags & 1 and hdr["codec"] == wire_codec("zstd")
+    _, flags0, hlen0, _ = struct.unpack("<HHII", plain[8:fixed])
+    assert flags0 == 0
+    assert "codec" not in json.loads(plain[fixed:fixed + hlen0])
+
+
+def test_compress_ratio():
+    """Compression must actually pay on a redundant payload: an attention
+    KV pool prefilled 12/64 tokens is mostly zeros — the compressed blob
+    lands well under half the plain size. (STLT states are small and
+    dense; the win there is smaller but the blob is tiny anyway.)"""
+    _, state = _prefilled_state("attn")
+    plain = pack_state(state, store="bf16")
+    packed = pack_state(state, store="bf16", compress="zstd")
+    ratio = len(packed) / len(plain)
+    assert ratio < 0.5, f"compression ratio {ratio:.2f} on sparse KV"
+
+
+def test_compress_corruption_and_unknown_codec():
+    _, state = _prefilled_state("stlt")
+    blob = pack_state(state, compress="zstd")
+    # body bit-flip inside the compressed payload: decompression or the
+    # digest check must reject it, never return garbage
+    with pytest.raises(ValueError):
+        unpack_state(corrupt_blob(blob, "bitflip"))
+    with pytest.raises(ValueError, match="compress"):
+        pack_state(state, compress="lz77")
+
+
+@pytest.mark.parametrize("variant", ["magic", "version", "truncate",
+                                     "bitflip"])
+@pytest.mark.parametrize("compress", [None, "zstd"])
+def test_corrupt_blob_variants_rejected(variant, compress):
+    """Every chaos-harness corruption variant maps to ``ValueError`` (the
+    one exception type the controller converts to a NACK). ``bitflip``
+    parses cleanly and is caught ONLY by the digest verify — the case a
+    non-verifying unpack would silently splice."""
+    _, state = _prefilled_state("stlt")
+    blob = pack_state(state, compress=compress)
+    bad = corrupt_blob(blob, variant)
+    assert bad != blob
+    with pytest.raises(ValueError):
+        unpack_state(bad)
+    # the digest check is what catches a payload flip on an UNCOMPRESSED
+    # blob; verify=False on such a blob must NOT raise (documents why
+    # verify is the default)
+    if variant == "bitflip" and compress is None:
+        unpack_state(bad, verify=False)
 
 
 def test_layout_matches_state():
